@@ -1,0 +1,95 @@
+"""Fig. 9 sensitivity ablation — the calibration study behind EXPERIMENTS
+§Fig9's "magnitudes are sensitive to unpublished workload parameters".
+
+Two sweeps over the paper's unpublished knobs:
+
+* heavy × inference batch (CNN batching typical of INFaaS front-ends);
+* light × RNN sequence scale (request chunk length).
+
+Each cell reports makespan / turnaround / energy savings of verbatim
+Algorithm 1 vs the sequential baseline, bracketing the paper's reported
+56 %/44 % time and 35 %/62 % energy numbers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dnng import DNNG
+from repro.sim import workloads as W
+from repro.sim.runner import run_experiment
+
+
+def _scale_batch(g: DNNG, factor: int) -> DNNG:
+    new = [dataclasses.replace(l, N=l.N * factor) for l in g.layers]
+    return dataclasses.replace(g, layers=tuple(new))
+
+
+def _scale_light(steps_factor: float):
+    """Rebuild the light workload with scaled sequence lengths."""
+    import repro.core.dnng as dn
+
+    def lstm(name, input_size, hidden, steps, batch=1):
+        return dn.LayerShape.lstm_cell(
+            name, input_size=input_size, hidden=hidden,
+            steps=max(int(steps * steps_factor), 1), batch=batch)
+
+    def fc(name, i, o, batch=1):
+        return dn.LayerShape.fc(name, i, o,
+                                batch=max(int(batch * steps_factor), 1))
+
+    melody = dn.chain("MelodyLSTM", [
+        lstm("lstm1", 513, 512, 100), lstm("lstm2", 512, 512, 100),
+        lstm("lstm3", 512, 512, 100), fc("out", 512, 722, batch=100)])
+    gt_layers = [lstm("enc_bi_fwd", 1024, 1024, 20),
+                 lstm("enc_bi_bwd", 1024, 1024, 20)]
+    gt_layers += [lstm(f"enc{i+2}", 1024, 1024, 20) for i in range(6)]
+    gt_layers += [fc("attention", 1024, 1024, batch=20)]
+    gt_layers += [lstm(f"dec{i}", 1024 if i else 2048, 1024, 20)
+                  for i in range(8)]
+    gt = dn.chain("GoogleTranslate", gt_layers)
+    dv = dn.chain("DeepVoice", [
+        lstm("g2p_enc", 256, 256, 40), lstm("g2p_dec", 256, 256, 40),
+        lstm("duration", 256, 256, 40), lstm("f0_rnn", 256, 256, 80),
+        lstm("vocoder_rnn", 512, 512, 1600),
+        fc("vocoder_proj", 512, 513, batch=1600)])
+    hw = dn.chain("HandwritingLSTM", [
+        lstm("lstm1", 32, 128, 200), lstm("lstm2", 128, 128, 200),
+        lstm("lstm3", 128, 128, 200), fc("ctc_out", 128, 100, batch=200)])
+    return W._stagger([melody, gt, dv, hw], 2e-6)
+
+
+def run() -> dict:
+    out = {}
+    orig_heavy, orig_light = W.heavy_workload, W.light_workload
+    try:
+        print("== heavy × inference batch ==")
+        print(f"{'batch':>6}{'makespan%':>11}{'turnaround%':>13}"
+              f"{'energy%':>9}")
+        for batch in (1, 2, 4, 8):
+            W.WORKLOADS["heavy"] = \
+                lambda b=batch: [_scale_batch(g, b) for g in orig_heavy()]
+            r = run_experiment("heavy")
+            out[f"heavy_b{batch}"] = r
+            print(f"{batch:>6}{r.time_saving*100:>11.1f}"
+                  f"{r.turnaround_saving*100:>13.1f}"
+                  f"{r.energy_saving*100:>9.1f}")
+
+        print("\n== light × sequence scale ==")
+        print(f"{'scale':>6}{'makespan%':>11}{'turnaround%':>13}"
+              f"{'energy%':>9}")
+        for scale in (0.25, 0.5, 1.0, 4.0):
+            W.WORKLOADS["light"] = lambda s=scale: _scale_light(s)
+            r = run_experiment("light")
+            out[f"light_s{scale}"] = r
+            print(f"{scale:>6}{r.time_saving*100:>11.1f}"
+                  f"{r.turnaround_saving*100:>13.1f}"
+                  f"{r.energy_saving*100:>9.1f}")
+    finally:
+        W.WORKLOADS["heavy"] = orig_heavy
+        W.WORKLOADS["light"] = orig_light
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,26 @@
+"""Fig. 9(e,f) — energy, baseline PE vs Mul_En PE + dynamic partitioning."""
+
+from __future__ import annotations
+
+from repro.sim.runner import run_experiment
+
+
+def run() -> dict:
+    out = {}
+    for wl, paper in (("heavy", 0.35), ("light", 0.62)):
+        res = run_experiment(wl)
+        out[wl] = res
+        print(f"== Fig 9({'e' if wl == 'heavy' else 'f'}) {wl} ==")
+        print(f"{'component':<12}{'baseline mJ':>14}{'partitioned mJ':>16}")
+        b = res.baseline_energy.as_dict()
+        p = res.partitioned_energy.as_dict()
+        for k in b:
+            print(f"{k:<12}{b[k]*1e3:14.3f}{p[k]*1e3:16.3f}")
+        print(f"energy saving: {res.energy_saving*100:6.1f}% "
+              f"(paper reports {paper*100:.0f}%)")
+        print()
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,27 @@
+"""Fig. 9(c,d) — partition-size assignment traces of the dynamic run."""
+
+from __future__ import annotations
+
+from repro.sim.runner import run_experiment
+
+
+def run() -> dict:
+    out = {}
+    for wl in ("heavy", "light"):
+        res = run_experiment(wl)
+        out[wl] = res
+        print(f"== Fig 9({'c' if wl == 'heavy' else 'd'}) {wl}: "
+              f"partition widths per layer ==")
+        print(f"partition-size histogram: {res.partition_histogram()}")
+        # per-tenant width trajectory (the coloured bars of the figure)
+        for name in sorted(res.partitioned.completion):
+            evs = res.partitioned.tenant_trace(name)
+            widths = [e.partition.cols for e in
+                      sorted(evs, key=lambda e: e.start)]
+            print(f"  {name:<18} {widths}")
+        print()
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,29 @@
+"""Fig. 9(a,b) — per-DNN computation time, baseline vs dynamic partitioning."""
+
+from __future__ import annotations
+
+from repro.sim.runner import run_experiment
+
+
+def run(policies=("paper",)) -> dict:
+    out = {}
+    for wl, paper_time in (("heavy", 0.56), ("light", 0.44)):
+        for pol in policies:
+            res = run_experiment(wl, policy=pol)
+            tag = wl if pol == "paper" else f"{wl}[{pol}]"
+            out[tag] = res
+            print(f"== Fig 9({'a' if wl == 'heavy' else 'b'}) {tag} ==")
+            print(f"{'DNN':<18}{'baseline ms':>14}{'partitioned ms':>16}")
+            for name in sorted(res.baseline.completion):
+                b = res.baseline.completion[name] * 1e3
+                p = res.partitioned.completion[name] * 1e3
+                print(f"{name:<18}{b:14.3f}{p:16.3f}")
+            print(f"makespan saving:   {res.time_saving*100:6.1f}% "
+                  f"(paper reports {paper_time*100:.0f}%)")
+            print(f"turnaround saving: {res.turnaround_saving*100:6.1f}%")
+            print()
+    return out
+
+
+if __name__ == "__main__":
+    run(policies=("paper", "width_aware"))

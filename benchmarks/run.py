@@ -1,0 +1,75 @@
+"""Run the full benchmark suite (one entry per paper table/figure).
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Order: the Fig. 9 reproduction (time / partitions / energy), the kernel
+bench, the serving bench, then the roofline table (which needs
+``benchmarks/results/dryrun.json`` from ``repro.launch.dryrun`` — skipped
+with a notice when absent, since the dry-run takes ~30 min of compiles).
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def main() -> int:
+    t0 = time.time()
+    from benchmarks import (
+        fig9_energy,
+        fig9_partitions,
+        fig9_time,
+        kernel_bench,
+        serving_bench,
+    )
+
+    print("#" * 72)
+    print("# Fig 9(a,b) — computation time")
+    print("#" * 72)
+    fig9_time.run(policies=("paper", "width_aware"))
+
+    print("#" * 72)
+    print("# Fig 9(c,d) — partition assignment")
+    print("#" * 72)
+    fig9_partitions.run()
+
+    print("#" * 72)
+    print("# Fig 9(e,f) — energy")
+    print("#" * 72)
+    fig9_energy.run()
+
+    print("#" * 72)
+    print("# Fig 9 sensitivity ablation (unpublished workload knobs)")
+    print("#" * 72)
+    from benchmarks import fig9_ablation
+    fig9_ablation.run()
+
+    print("#" * 72)
+    print("# kernel bench — partitioned-WS fused GEMM")
+    print("#" * 72)
+    kernel_bench.run()
+
+    print("#" * 72)
+    print("# serving bench — multi-tenant engine")
+    print("#" * 72)
+    serving_bench.run()
+
+    print("#" * 72)
+    print("# roofline (from dry-run artifacts)")
+    print("#" * 72)
+    dry = os.path.join(os.path.dirname(__file__), "results", "dryrun.json")
+    if os.path.exists(dry):
+        from benchmarks import roofline
+        roofline.run()
+    else:
+        print(f"SKIPPED: {dry} not found — run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun` first")
+
+    print(f"\nbenchmark suite done in {time.time() - t0:.0f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

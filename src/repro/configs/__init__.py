@@ -1,0 +1,81 @@
+"""Registry of the 10 assigned architectures (``--arch <id>``)."""
+
+from __future__ import annotations
+
+from repro.configs import (
+    dbrx_132b,
+    deepseek_coder_33b,
+    internvl2_26b,
+    llama32_3b,
+    mamba2_780m,
+    mistral_nemo_12b,
+    nemotron4_15b,
+    phi35_moe,
+    recurrentgemma_2b,
+    whisper_small,
+)
+from repro.configs.base import (
+    ArchSpec,
+    ShapeCell,
+    STANDARD_SHAPES,
+    input_specs,
+    params_spec,
+)
+
+_ALL = (
+    whisper_small.SPEC,
+    internvl2_26b.SPEC,
+    dbrx_132b.SPEC,
+    phi35_moe.SPEC,
+    deepseek_coder_33b.SPEC,
+    llama32_3b.SPEC,
+    nemotron4_15b.SPEC,
+    mistral_nemo_12b.SPEC,
+    mamba2_780m.SPEC,
+    recurrentgemma_2b.SPEC,
+)
+
+ARCHS: dict[str, ArchSpec] = {s.arch_id: s for s in _ALL}
+
+# Measured per-arch tuned profiles (EXPERIMENTS.md §Perf, fleet table).
+# The choose_mesh_shape divisibility heuristic is the PRIOR; these are the
+# POSTERIOR after lowering both and comparing roofline terms — archs whose
+# Q-heads already divide 16 keep the (16,16) default (replicating grouped
+# KV is cheap; widening the FSDP axis is not), only archs with the
+# score-all-reduce pathology (q-heads ∤ 16) change mesh.  Q-chunked causal
+# attention helps everywhere it applies.
+TUNED_PROFILES: dict[str, dict] = {
+    "deepseek-coder-33b": {"mesh": (32, 8)},
+    "llama3.2-3b": {"mesh": (32, 8)},
+    "whisper-small": {"mesh": (32, 8)},
+    # q-heads divide 16 → keep default mesh; Q-chunking only:
+    "dbrx-132b": {"mesh": (16, 16)},
+    "phi3.5-moe-42b-a6.6b": {"mesh": (16, 16)},
+    "internvl2-26b": {"mesh": (16, 16)},
+    "mistral-nemo-12b": {"mesh": (16, 16)},
+    "nemotron-4-15b": {"mesh": (16, 16)},
+    "mamba2-780m": {"mesh": (16, 16)},
+    "recurrentgemma-2b": {"mesh": (16, 16)},
+}
+for _p in TUNED_PROFILES.values():
+    _p.setdefault("q_chunks", 4)
+    _p.setdefault("attn_chunk", 1024)
+    _p.setdefault("microbatches", 32)
+
+
+def get(arch_id: str) -> ArchSpec:
+    try:
+        return ARCHS[arch_id]
+    except KeyError:
+        raise KeyError(f"unknown arch {arch_id!r}; "
+                       f"known: {sorted(ARCHS)}") from None
+
+
+def list_archs() -> list[str]:
+    return list(ARCHS)
+
+
+__all__ = [
+    "ARCHS", "ArchSpec", "ShapeCell", "STANDARD_SHAPES",
+    "get", "list_archs", "input_specs", "params_spec",
+]

@@ -1,0 +1,156 @@
+"""Partitioned weight-stationary dataflow model (paper §3.4, Fig. 5 lines 28–42).
+
+The three phases of the paper's loop-nest — ① *load* (weights → PE load
+registers), ② *feed* (IFMap streamed left-to-right), ③ *drain* (OFMap columns
+→ drain buffer) — are modelled analytically per (GEMM × partition) pair.
+
+GEMM convention (see ``repro.core.dnng``):
+
+    stationary:  K × N     (K on PE rows, N on PE columns — N is partitioned)
+    streamed:    T × K     (T im2col rows fed through the array)
+    output:      T × N
+
+A partition of ``R`` rows × ``C`` columns executes the GEMM in
+``ceil(K/R) · ceil(N/C)`` *folds*; each fold costs the classic Scale-Sim
+weight-stationary cycle count ``2R + C + T - 2``:
+
+    R      cycles  — ① load R weight rows (down the same vertical wires)
+    T      cycles  — ② feed T streamed rows
+    R+C-2  cycles  — ② / ③ pipeline fill + drain skew
+
+Modelling assumption inherited from the paper (documented in DESIGN.md §2):
+partitions behave as independent sub-accelerators — the paper partitions all
+three SRAM buffers alongside the PE columns, so per-partition feed bandwidth
+is private; `Mul_En` only provides logical isolation for pass-through data.
+A tenant whose partition starts at column ``c0`` pays ``c0`` extra fill
+cycles once per fold (data crosses foreign partitions tri-stated).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.dnng import LayerShape
+from repro.core.partition import Partition
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+@dataclasses.dataclass(frozen=True)
+class GEMM:
+    """A (T × K) · (K × N) matmul in the WS orientation."""
+
+    T: int  # streamed rows (N·P·Q of the layer)
+    K: int  # reduction (C·R·S)
+    N: int  # output channels (M) — the partitioned dimension
+
+    @staticmethod
+    def of_layer(layer: LayerShape) -> "GEMM":
+        return GEMM(T=layer.gemm_m, K=layer.gemm_k, N=layer.gemm_n)
+
+    @property
+    def macs(self) -> int:
+        return self.T * self.K * self.N
+
+
+@dataclasses.dataclass(frozen=True)
+class DataflowCost:
+    """Cycle & access-count breakdown of one GEMM on one partition."""
+
+    cycles: int
+    folds_k: int
+    folds_n: int
+    macs: int
+    # SRAM access counts (elements, not bytes)
+    load_buf_reads: int    # ① weights read from load buffer
+    feed_buf_reads: int    # ② ifmap rows read from feed buffer (re-read per N-fold)
+    drain_buf_writes: int  # ③ psums/ofmap written to drain buffer (per K-fold)
+    # DRAM traffic (elements)
+    dram_reads: int
+    dram_writes: int
+    # PE-cycle occupancy of the partition (for leakage/idle accounting)
+    pe_cycles: int         # cycles × partition PEs
+    active_pe_cycles: int  # cycles in which a PE performs a useful MAC
+    # Mul_En energy accounting (paper Fig. 7): with the proposed PE the
+    # multiplier fires only while the partition's own feed data streams
+    # through (T rows cross every PE per fold); during the ① load phase the
+    # multiplier is tri-stated and only the load-register latch toggles.
+    feed_pe_cycles: int    # fk·fn·T·R·C — multiplier-enabled PE-cycles
+    load_pe_cycles: int    # fk·fn·R·R·C — load-phase latch-only PE-cycles
+
+
+def ws_cost(gemm: GEMM, part: Partition) -> DataflowCost:
+    """Analytic partitioned-WS cost of ``gemm`` on ``part`` (Fig. 5 loop-nest)."""
+    R, C = part.rows, part.cols
+    fk = _ceil_div(gemm.K, R)
+    fn = _ceil_div(gemm.N, C)
+    # per-fold cycles: load R + feed T + pipeline skew (R + C - 2),
+    # plus the pass-through offset for partitions not starting at column 0.
+    per_fold = 2 * R + C + gemm.T - 2 + part.col_start
+    cycles = fk * fn * per_fold
+    macs = gemm.macs
+    # ① each weight is loaded exactly once over all folds
+    load_reads = gemm.K * gemm.N
+    # ② the T×K ifmap is re-streamed for every N-fold
+    feed_reads = gemm.T * gemm.K * fn
+    # ③ each K-fold drains a T×N partial-sum tile (accumulated in drain buffer)
+    drain_writes = gemm.T * gemm.N * fk
+    dram_reads = gemm.K * gemm.N + gemm.T * gemm.K   # weights + ifmap once
+    dram_writes = gemm.T * gemm.N                    # ofmap once
+    return DataflowCost(
+        cycles=cycles,
+        folds_k=fk,
+        folds_n=fn,
+        macs=macs,
+        load_buf_reads=load_reads,
+        feed_buf_reads=feed_reads,
+        drain_buf_writes=drain_writes,
+        dram_reads=dram_reads,
+        dram_writes=dram_writes,
+        pe_cycles=cycles * part.n_pes,
+        active_pe_cycles=macs,  # one MAC ≡ one active PE-cycle
+        feed_pe_cycles=fk * fn * gemm.T * part.n_pes,
+        load_pe_cycles=fk * fn * R * part.n_pes,
+    )
+
+
+def utilization(gemm: GEMM, part: Partition) -> float:
+    """Fraction of PE-cycles doing useful MACs (the paper's headline metric)."""
+    c = ws_cost(gemm, part)
+    return c.active_pe_cycles / c.pe_cycles if c.pe_cycles else 0.0
+
+
+# ---------------------------------------------------------------------------
+# Loop-nest description (Fig. 6(c)) — machine-checkable form of the paper's
+# Parallel_for / Temporal_for schedule.  Used by tests to assert that the
+# Pallas kernel's grid enumerates exactly these tiles, and by DESIGN.md docs.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LoopNest:
+    """One partition's 3-phase schedule as (kind, axis, extent) triples."""
+
+    partition: Partition
+    load: tuple[tuple[str, str, int], ...]
+    feed: tuple[tuple[str, str, int], ...]
+    drain: tuple[tuple[str, str, int], ...]
+
+
+def partitioned_ws_loopnest(gemm: GEMM, part: Partition) -> LoopNest:
+    """Fig. 5 lines 28–42 for a single partition."""
+    R, C = part.rows, part.cols
+    return LoopNest(
+        partition=part,
+        # step ① — two Parallel_for: weights spatially mapped to rows & cols
+        load=(("parallel", "row", min(R, gemm.K)),
+              ("parallel", "col", min(C, gemm.N))),
+        # step ② — feed: spatial rows, temporal columns (stream T values)
+        feed=(("parallel", "row", min(R, gemm.K)),
+              ("temporal", "col", gemm.T)),
+        # step ③ — drain: spatial cols, temporal rows
+        drain=(("parallel", "col", min(C, gemm.N)),
+               ("temporal", "row", gemm.T)),
+    )

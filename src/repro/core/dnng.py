@@ -1,0 +1,202 @@
+"""Deep Neural Network Graph (DNNG) — the paper's workload abstraction (§2.1).
+
+A DNNG is a weighted DAG ``G(V, E)`` whose vertices are layers and whose edges
+encode execution precedence.  Each layer carries the 9 convolution shape
+parameters ``{M, N, C, R, S, H, W, P, Q}`` (paper Eq. 1):
+
+    FW    ∈ R^{M×C×R×S}   — filter weights   (M filters, C channels, R×S kernel)
+    IFMap ∈ R^{N×C×H×W}   — input feature map (N batch, H×W spatial)
+    OFMap ∈ R^{N×M×P×Q}   — output feature map (P×Q output spatial)
+
+``Opr(l) = M·N·C·R·S·H·W`` (paper Eq. 2) estimates the MAC count and is the
+priority key of the Task_Assignment step of Algorithm 1.
+
+Every layer lowers to a GEMM for the weight-stationary systolic array:
+
+    stationary (weights):  K × M   with K = C·R·S   (K on PE rows, M on PE cols)
+    streamed  (im2col):    T × K   with T = N·P·Q   (T input rows streamed)
+
+Fully connected / recurrent layers are expressed with R=S=1, H=W=P=Q=1 and the
+batch/time steps folded into N.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerShape:
+    """The 9 shape parameters of one DNN layer (paper Eq. 1)."""
+
+    M: int  # number of filters (output channels)
+    N: int  # batch size
+    C: int  # input channels
+    R: int  # filter height
+    S: int  # filter width
+    H: int  # input height
+    W: int  # input width
+    P: int  # output height
+    Q: int  # output width
+    name: str = ""
+
+    def __post_init__(self) -> None:
+        for f in ("M", "N", "C", "R", "S", "H", "W", "P", "Q"):
+            v = getattr(self, f)
+            if not isinstance(v, int) or v < 1:
+                raise ValueError(f"LayerShape.{f} must be a positive int, got {v!r}")
+
+    # -- paper Eq. 2 ------------------------------------------------------
+    @property
+    def opr(self) -> int:
+        """MAC-operation count ``Opr(l) = M·N·C·R·S·H·W``.
+
+        Note: the paper uses H·W (input spatial) rather than P·Q; we keep the
+        paper's formula for priority ordering and expose :meth:`macs` as the
+        exact count used by the cycle/energy models.
+        """
+        return self.M * self.N * self.C * self.R * self.S * self.H * self.W
+
+    @property
+    def macs(self) -> int:
+        """Exact MAC count of the lowered GEMM: M·N·C·R·S·P·Q."""
+        return self.M * self.N * self.C * self.R * self.S * self.P * self.Q
+
+    # -- GEMM lowering (weight stationary) --------------------------------
+    @property
+    def gemm_k(self) -> int:
+        """Reduction dim = C·R·S (maps to PE rows; weights are stationary)."""
+        return self.C * self.R * self.S
+
+    @property
+    def gemm_n(self) -> int:
+        """Output-channel dim = M (maps to PE columns — the partitioned dim)."""
+        return self.M
+
+    @property
+    def gemm_m(self) -> int:
+        """Streamed dim = N·P·Q (rows of im2col input fed through the array)."""
+        return self.N * self.P * self.Q
+
+    @property
+    def weight_bytes(self) -> int:
+        return 2 * self.gemm_k * self.gemm_n  # bf16/int16 as in Scale-Sim configs
+
+    @property
+    def ifmap_elems(self) -> int:
+        return self.N * self.C * self.H * self.W
+
+    @property
+    def ofmap_elems(self) -> int:
+        return self.N * self.M * self.P * self.Q
+
+    @staticmethod
+    def conv(name: str, M: int, C: int, R: int, S: int, H: int, W: int,
+             stride: int = 1, pad: int | None = None, N: int = 1) -> "LayerShape":
+        """Build a conv layer; output spatial derived from stride/padding."""
+        if pad is None:
+            pad = R // 2
+        P = (H + 2 * pad - R) // stride + 1
+        Q = (W + 2 * pad - S) // stride + 1
+        return LayerShape(M=M, N=N, C=C, R=R, S=S, H=H, W=W, P=max(P, 1),
+                          Q=max(Q, 1), name=name)
+
+    @staticmethod
+    def fc(name: str, in_features: int, out_features: int, batch: int = 1) -> "LayerShape":
+        """Fully connected layer: GEMM (batch × in) · (in × out)."""
+        return LayerShape(M=out_features, N=batch, C=in_features, R=1, S=1,
+                          H=1, W=1, P=1, Q=1, name=name)
+
+    @staticmethod
+    def lstm_cell(name: str, input_size: int, hidden: int, steps: int,
+                  batch: int = 1) -> "LayerShape":
+        """LSTM cell unrolled over ``steps``: 4 gate GEMMs of (in+hid)→hid.
+
+        Expressed as one GEMM with K = input_size + hidden, M = 4·hidden and
+        the time steps folded into the streamed dimension.
+        """
+        return LayerShape(M=4 * hidden, N=batch * steps, C=input_size + hidden,
+                          R=1, S=1, H=1, W=1, P=1, Q=1, name=name)
+
+
+@dataclasses.dataclass(frozen=True)
+class DNNG:
+    """A DNN graph: a named chain/DAG of layers with an arrival time (§2.1).
+
+    ``edges`` holds (src, dst) layer-index pairs.  The common case (and all the
+    paper's workloads) is a linear chain, which is the default when ``edges``
+    is None.  ``arrival_time`` is A_t in cycles (or seconds — units follow the
+    simulator's clock).
+    """
+
+    name: str
+    layers: tuple[LayerShape, ...]
+    arrival_time: float = 0.0
+    edges: tuple[tuple[int, int], ...] | None = None
+
+    def __post_init__(self) -> None:
+        if not self.layers:
+            raise ValueError(f"DNNG {self.name!r} has no layers")
+        n = len(self.layers)
+        if self.edges is not None:
+            for s, d in self.edges:
+                if not (0 <= s < n and 0 <= d < n):
+                    raise ValueError(f"edge ({s},{d}) out of range for {n} layers")
+                if s >= d:
+                    raise ValueError(f"edge ({s},{d}) violates topological order")
+
+    @property
+    def edge_list(self) -> tuple[tuple[int, int], ...]:
+        if self.edges is not None:
+            return self.edges
+        return tuple((i, i + 1) for i in range(len(self.layers) - 1))
+
+    def predecessors(self, idx: int) -> list[int]:
+        return [s for s, d in self.edge_list if d == idx]
+
+    def successors(self, idx: int) -> list[int]:
+        return [d for s, d in self.edge_list if s == idx]
+
+    def roots(self) -> list[int]:
+        """Layers with no predecessors (ready at arrival)."""
+        dsts = {d for _, d in self.edge_list}
+        return [i for i in range(len(self.layers)) if i not in dsts]
+
+    @property
+    def total_macs(self) -> int:
+        return sum(l.macs for l in self.layers)
+
+    @property
+    def total_opr(self) -> int:
+        return sum(l.opr for l in self.layers)
+
+    def __iter__(self) -> Iterator[LayerShape]:
+        return iter(self.layers)
+
+    def __len__(self) -> int:
+        return len(self.layers)
+
+
+def chain(name: str, layers: Sequence[LayerShape], arrival_time: float = 0.0) -> DNNG:
+    """Convenience constructor for the (ubiquitous) linear-chain DNNG."""
+    return DNNG(name=name, layers=tuple(layers), arrival_time=arrival_time)
+
+
+def validate_dag(g: DNNG) -> bool:
+    """Property-test hook: the edge list must be acyclic & topologically sorted."""
+    seen: set[int] = set()
+    for s, d in g.edge_list:
+        if d in seen and s not in seen:
+            return False
+        seen.add(s)
+        seen.add(d)
+    return all(s < d for s, d in g.edge_list)
+
+
+def estimated_execution_time(g: DNNG, macs_per_cycle: float) -> float:
+    """E_t estimate used by Algorithm 1 line 8 (coarse: MACs / throughput)."""
+    if macs_per_cycle <= 0:
+        raise ValueError("macs_per_cycle must be positive")
+    return g.total_macs / macs_per_cycle

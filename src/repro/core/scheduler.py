@@ -1,0 +1,382 @@
+"""Event-driven multi-tenant scheduler — Algorithm 1's runtime dynamics (§3.3).
+
+Drives :mod:`repro.core.partition` over time:
+
+* the **first** layer of the **first** DNNG runs on the whole array
+  (Fig. 5 lines 5–6);
+* when several DNNGs are waiting, the array is split by
+  :func:`partition_calculation` and ready layers are bound heaviest-first by
+  :func:`task_assignment` (lines 8–12);
+* a tenant executes its layers sequentially (DAG order); when a layer
+  finishes, its partition is released, adjacent free slices **merge**, and
+  assignment re-runs — so surviving tenants inherit wider partitions exactly
+  as in Fig. 9(c,d) (128×16 → 128×32 → 128×64 → 128×128).
+
+Layer lifecycle (matching Scale-Sim's non-overlapped DRAM model, which the
+paper's toolchain uses):
+
+    assign → [bus] stage-in (weights+IFMap DRAM→SRAM) → compute → [bus]
+    stage-out (OFMap SRAM→DRAM) → release partition
+
+The DRAM bus is a shared FCFS resource; *this* is one of the two slack pools
+multi-tenancy exploits (tenant A computes while tenant B stages — the
+sequential baseline idles the whole array during every stage phase).  The
+other pool is column slack: layers with ``N < array cols`` idle columns in
+the baseline which concurrent tenants reclaim.
+
+The scheduler is execution-backend agnostic: it takes a ``time_fn(layer,
+partition) -> seconds`` compute oracle and an optional :class:`StageModel`.
+`repro.sim` supplies the Scale-Sim-style analytic models;
+`repro.distributed.tenancy` reuses the same scheduler with a mesh-slice
+latency estimator at cluster scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Callable, Sequence
+
+from repro.core.dnng import DNNG, LayerShape
+from repro.core.partition import (
+    ArrayShape,
+    Partition,
+    PartitionSet,
+    partition_calculation,
+    task_assignment,
+)
+
+TimeFn = Callable[[LayerShape, Partition], float]
+
+
+@dataclasses.dataclass(frozen=True)
+class StageModel:
+    """DRAM staging times for a layer (shared-bus FCFS service times)."""
+
+    dram_bw_bytes: float = 64e9
+    bytes_per_elem: int = 2
+
+    def stage_in_s(self, layer: LayerShape) -> float:
+        elems = layer.gemm_k * layer.gemm_n + layer.gemm_m * layer.gemm_k
+        return elems * self.bytes_per_elem / self.dram_bw_bytes
+
+    def stage_out_s(self, layer: LayerShape) -> float:
+        return (layer.gemm_m * layer.gemm_n * self.bytes_per_elem
+                / self.dram_bw_bytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceEvent:
+    """One executed layer: who, what, where, when (Fig. 9(c,d) raw data).
+
+    ``start``/``end`` bound the full lifecycle on the partition;
+    ``compute_start``/``compute_end`` bound the PE-array-active phase.
+    """
+
+    tenant: str
+    layer_index: int
+    layer_name: str
+    partition: Partition
+    start: float
+    end: float
+    compute_start: float
+    compute_end: float
+
+    @property
+    def duration(self) -> float:
+        return self.end - self.start
+
+    @property
+    def compute_duration(self) -> float:
+        return self.compute_end - self.compute_start
+
+
+@dataclasses.dataclass(frozen=True)
+class ScheduleResult:
+    trace: tuple[TraceEvent, ...]
+    completion: dict[str, float]   # per-DNNG completion time (Fig. 9(a,b))
+    makespan: float
+    array: ArrayShape
+
+    def tenant_trace(self, tenant: str) -> list[TraceEvent]:
+        return [e for e in self.trace if e.tenant == tenant]
+
+    @property
+    def pe_seconds_busy(self) -> float:
+        return sum(e.compute_duration * e.partition.n_pes for e in self.trace)
+
+    @property
+    def utilization(self) -> float:
+        """Compute-busy PE-seconds / total PE-seconds over the makespan."""
+        total = self.makespan * self.array.rows * self.array.cols
+        return self.pe_seconds_busy / total if total else 0.0
+
+
+class _Bus:
+    """Shared DRAM channel: FCFS, single server."""
+
+    def __init__(self) -> None:
+        self.free_at = 0.0
+        self.busy_s = 0.0
+
+    def acquire(self, now: float, dur: float) -> tuple[float, float]:
+        start = max(now, self.free_at)
+        self.free_at = start + dur
+        self.busy_s += dur
+        return start, start + dur
+
+
+class _Tenant:
+    __slots__ = ("dnng", "next_layer", "running", "done_layers")
+
+    def __init__(self, dnng: DNNG):
+        self.dnng = dnng
+        self.next_layer = 0
+        self.running = False
+        self.done_layers: set[int] = set()
+
+    @property
+    def finished(self) -> bool:
+        return self.next_layer >= len(self.dnng.layers)
+
+    def ready_layer(self) -> tuple[int, LayerShape] | None:
+        """Next layer whose DAG predecessors are all complete."""
+        if self.finished or self.running:
+            return None
+        idx = self.next_layer
+        preds = self.dnng.predecessors(idx)
+        if all(p in self.done_layers for p in preds):
+            return idx, self.dnng.layers[idx]
+        return None
+
+
+def schedule_dynamic(
+    dnngs: Sequence[DNNG],
+    array: ArrayShape,
+    time_fn: TimeFn,
+    stage: StageModel | None = None,
+    policy: str = "paper",
+) -> ScheduleResult:
+    """Run Algorithm 1 end-to-end over ``dnngs`` and return the full trace.
+
+    ``policy`` selects the grant rule at each Task_Assignment round:
+
+    * ``"paper"`` — Algorithm 1 verbatim: heaviest-``Opr`` ready layer takes
+      the largest free slice, whole.
+    * ``"width_aware"`` — beyond-paper refinement (EXPERIMENTS.md §Perf):
+      (i) a layer is never granted more columns than ``min(N, cols)`` needs
+      (leftover stays free for other tenants); (ii) *hold-for-width*: a layer
+      declines a slice narrower than half its fair-share/demand width while
+      other tenants are still computing — avoiding the straggler pathology
+      where a width-critical layer (e.g. a T=1 FC) gets pinned to a sliver
+      for its whole (long) execution.
+    """
+    if policy not in ("paper", "width_aware"):
+        raise ValueError(f"unknown policy {policy!r}")
+    if not dnngs:
+        return ScheduleResult(trace=(), completion={}, makespan=0.0, array=array)
+    names = [g.name for g in dnngs]
+    if len(set(names)) != len(names):
+        raise ValueError(f"duplicate DNNG names: {names}")
+
+    tenants = {g.name: _Tenant(g) for g in dnngs}
+    pset = PartitionSet(array)
+    bus = _Bus()
+    trace: list[TraceEvent] = []
+    completion: dict[str, float] = {}
+    # in-flight layer state: tenant -> (idx, layer, part, t_assign, t_cstart, t_cend)
+    inflight: dict[str, tuple] = {}
+
+    # event heap: (time, seq, kind, tenant); kinds: "arrive", "cdone", "done"
+    seq = itertools.count()
+    events: list[tuple[float, int, str, str]] = []
+    for g in dnngs:
+        heapq.heappush(events, (g.arrival_time, next(seq), "arrive", g.name))
+
+    first_layer_done = False  # Fig. 5 line 5: very first layer gets all PEs
+
+    def ready_tenants(now: float) -> list[tuple[str, int, LayerShape]]:
+        out = []
+        for name, t in tenants.items():
+            if t.dnng.arrival_time > now:
+                continue
+            rl = t.ready_layer()
+            if rl is not None:
+                out.append((name, rl[0], rl[1]))
+        return out
+
+    def launch(now: float, tenant: str, layer_idx: int, layer: LayerShape,
+               part: Partition) -> None:
+        t = tenants[tenant]
+        t.running = True
+        # stage-in on the shared bus, then compute; stage-out acquires the
+        # bus only when compute actually completes (see "cdone" handler).
+        if stage is not None:
+            _, si_end = bus.acquire(now, stage.stage_in_s(layer))
+        else:
+            si_end = now
+        c_dur = time_fn(layer, part)
+        if c_dur <= 0:
+            raise ValueError(f"time_fn returned non-positive duration {c_dur}")
+        c_end = si_end + c_dur
+        inflight[tenant] = (layer_idx, layer, part, now, si_end, c_end)
+        heapq.heappush(events, (c_end, next(seq), "cdone", tenant))
+
+    def n_live() -> int:
+        return sum(1 for t in tenants.values() if not t.finished)
+
+    def demand_cols(layer: LayerShape) -> int:
+        return max(1, min(layer.gemm_n, array.cols))
+
+    def grant_width(layer: LayerShape, slice_cols: int) -> int:
+        if policy == "paper":
+            return slice_cols
+        return min(slice_cols, demand_cols(layer))
+
+    def declines(layer: LayerShape, slice_cols: int) -> bool:
+        """width_aware hold-for-width: wait for a merge instead of accepting
+        a sliver, but only while another tenant is computing (so a future
+        completion event is guaranteed — no deadlock).
+
+        Decline iff the offered width is under half the layer's demand AND
+        running here would take >2x the demand-width runtime — i.e. the
+        opportunity cost of being pinned to a sliver is material.  This is
+        what prevents a width-critical layer (T=1 FC: runtime ~ 1/cols) from
+        being trapped the way AlexNet/fc6 is under the verbatim policy.
+        """
+        if policy == "paper" or not pset.busy_partitions:
+            return False
+        demand = demand_cols(layer)
+        if slice_cols * 2 >= demand:
+            return False
+        t_here = time_fn(layer, Partition(rows=array.rows, col_start=0,
+                                          cols=slice_cols))
+        t_want = time_fn(layer, Partition(rows=array.rows, col_start=0,
+                                          cols=demand))
+        return t_here > 2.0 * t_want
+
+    def assign(now: float) -> None:
+        """(Re-)run Partition_Calculation + Task_Assignment at time ``now``."""
+        nonlocal first_layer_done
+        ready = ready_tenants(now)
+        if not ready:
+            return
+        whole_array_free = (not pset.busy_partitions
+                            and len(pset.free_partitions) == 1)
+        if whole_array_free and len(ready) == 1:
+            # Fig. 5 lines 5–6: single available task -> all PEs, no split.
+            tenant, idx, layer = ready[0]
+            part = pset.allocate(tenant, grant_width(layer, array.cols))
+            launch(now, tenant, idx, layer, part)
+            first_layer_done = True
+            return
+        if whole_array_free:
+            # fresh equal split among all available layers (lines 8–10)
+            parts = partition_calculation(array, len(ready))
+            for a in task_assignment(ready, parts):
+                w = grant_width(a.layer, a.partition.cols)
+                got = pset.allocate_exact(
+                    a.tenant, Partition(rows=a.partition.rows,
+                                        col_start=a.partition.col_start,
+                                        cols=w))
+                launch(now, a.tenant, a.layer_index, a.layer, got)
+            first_layer_done = True
+            return
+        # steady state: heaviest ready layer -> largest merged free slice,
+        # re-matching after every grant (width_aware grants leave remainders).
+        progressed = True
+        while progressed:
+            progressed = False
+            free = pset.free_partitions
+            ready = ready_tenants(now)
+            if not free or not ready:
+                break
+            for a in task_assignment(ready, free):
+                if declines(a.layer, a.partition.cols):
+                    continue
+                w = grant_width(a.layer, a.partition.cols)
+                got = pset.allocate_exact(
+                    a.tenant, Partition(rows=a.partition.rows,
+                                        col_start=a.partition.col_start,
+                                        cols=w))
+                launch(now, a.tenant, a.layer_index, a.layer, got)
+                progressed = True
+                first_layer_done = True
+                break  # free list changed; re-sort and re-match
+
+    def compute_done(tenant: str, now: float) -> None:
+        idx, layer, part, t_assign, t_cstart, t_cend = inflight[tenant]
+        if stage is not None:
+            _, so_end = bus.acquire(now, stage.stage_out_s(layer))
+        else:
+            so_end = now
+        trace.append(TraceEvent(tenant=tenant, layer_index=idx,
+                                layer_name=layer.name or f"L{idx}",
+                                partition=part, start=t_assign, end=so_end,
+                                compute_start=t_cstart, compute_end=t_cend))
+        heapq.heappush(events, (so_end, next(seq), "done", tenant))
+
+    def finish(tenant: str, now: float) -> None:
+        t = tenants[tenant]
+        t.running = False
+        t.done_layers.add(t.next_layer)
+        t.next_layer += 1
+        inflight.pop(tenant, None)
+        pset.free(tenant)  # eager merge (§3.3)
+        if t.finished:
+            completion[tenant] = now
+
+    now = 0.0
+    while events:
+        now, _, kind, name = heapq.heappop(events)
+        if kind == "done":
+            finish(name, now)
+        elif kind == "cdone":
+            compute_done(name, now)
+        # drain all events at the same timestamp before re-assigning
+        while events and events[0][0] == now:
+            _, _, k2, n2 = heapq.heappop(events)
+            if k2 == "done":
+                finish(n2, now)
+            elif k2 == "cdone":
+                compute_done(n2, now)
+        assign(now)
+        pset.check()
+
+    if len(completion) != len(dnngs):
+        missing = set(names) - set(completion)
+        raise RuntimeError(f"scheduler deadlock: {missing} never completed")
+    return ScheduleResult(trace=tuple(trace), completion=completion,
+                          makespan=max(completion.values()), array=array)
+
+
+def schedule_sequential(
+    dnngs: Sequence[DNNG],
+    array: ArrayShape,
+    time_fn: TimeFn,
+    stage: StageModel | None = None,
+) -> ScheduleResult:
+    """Single-tenancy baseline: DNNs strictly in arrival order, every layer on
+    the full array, stage-in/compute/stage-out fully serialised (the paper's
+    Fig. 9 'baseline systolic array' under Scale-Sim's non-overlapped DRAM
+    model)."""
+    full = Partition(rows=array.rows, col_start=0, cols=array.cols)
+    trace: list[TraceEvent] = []
+    completion: dict[str, float] = {}
+    now = 0.0
+    for g in sorted(dnngs, key=lambda g: (g.arrival_time, g.name)):
+        now = max(now, g.arrival_time)
+        for i, layer in enumerate(g.layers):
+            si = stage.stage_in_s(layer) if stage else 0.0
+            so = stage.stage_out_s(layer) if stage else 0.0
+            c = time_fn(layer, full)
+            trace.append(TraceEvent(
+                tenant=g.name, layer_index=i,
+                layer_name=layer.name or f"L{i}", partition=full,
+                start=now, end=now + si + c + so,
+                compute_start=now + si, compute_end=now + si + c))
+            now += si + c + so
+        completion[g.name] = now
+    return ScheduleResult(trace=tuple(trace), completion=completion,
+                          makespan=now, array=array)

@@ -1,0 +1,148 @@
+"""Gradient compression for the data-parallel all-reduce.
+
+Two schemes, both with **error feedback** (the compression residual is
+carried to the next step so the compressed SGD direction stays unbiased in
+the long run — Karimireddy et al. 2019):
+
+* ``int8``  — blockwise symmetric int8 quantisation.  The cross-replica
+  reduction runs as reduce-scatter(all_to_all of int8 chunks) → local f32
+  sum → int8 all-gather: 4× fewer bytes on both wire legs than a f32
+  all-reduce, at one extra tiny f32 psum for the shared scale.
+* ``topk``  — magnitude top-k sparsification (indices + values), reduced by
+  dense scatter-add on each replica (k ≪ N so the wire cost is 2k words).
+
+Both are pure-JAX and run inside ``shard_map`` over the "data" axis; see
+``training.train_loop.make_train_step(compression=...)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    kind: str = "none"            # none | int8 | topk
+    block: int = 256              # int8 quantisation block
+    topk_frac: float = 0.01      # fraction of entries kept by topk
+
+
+# ---------------------------------------------------------------------------
+# int8 blockwise quantisation
+# ---------------------------------------------------------------------------
+
+def _pad_to(x: jax.Array, m: int) -> tuple[jax.Array, int]:
+    n = x.size
+    pad = (-n) % m
+    return jnp.pad(x.reshape(-1), (0, pad)), n
+
+
+def quantize_int8(g: jax.Array, block: int) -> tuple[jax.Array, jax.Array]:
+    """g -> (int8 codes, f32 per-block scales)."""
+    flat, _ = _pad_to(g, block)
+    blocks = flat.reshape(-1, block)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    q = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, shape,
+                    size: int) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)[:size]
+    return flat.reshape(shape)
+
+
+def int8_psum_mean(g: jax.Array, axis_name: str, block: int = 256) -> jax.Array:
+    """Mean-all-reduce of ``g`` over ``axis_name`` with int8 wire format.
+
+    reduce-scatter leg: all_to_all of int8 chunks (each replica becomes the
+    reducer of 1/R of the tensor); local dequant + f32 mean; all-gather leg:
+    int8 again.  Wire bytes ≈ 2·N·1 B vs 2·N·4 B for f32 — the scales add
+    N/block extra f32 words.
+    """
+    R = jax.lax.axis_size(axis_name)
+    flat, size = _pad_to(g, block * R)
+    chunks = flat.reshape(R, -1)                       # (R, N/R)
+    q, scale = quantize_int8(chunks, block)            # q: (R·nb, block)
+    nb = q.shape[0] // R
+    q = q.reshape(R, nb, block)
+    scale = scale.reshape(R, nb, 1)
+    # reduce-scatter: replica r receives chunk r from everyone
+    q_rs = jax.lax.all_to_all(q, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)             # (R, nb, block)
+    s_rs = jax.lax.all_to_all(scale, axis_name, split_axis=0, concat_axis=0,
+                              tiled=False)
+    local = jnp.mean(q_rs.astype(jnp.float32) * s_rs, axis=0)  # (nb, block)
+    # all-gather (int8 again)
+    q2, s2 = quantize_int8(local, block)
+    qg = jax.lax.all_gather(q2.reshape(nb, block), axis_name)   # (R, nb, bl)
+    sg = jax.lax.all_gather(s2, axis_name)
+    out = (qg.astype(jnp.float32) * sg).reshape(-1)[:size]
+    return out.reshape(g.shape)
+
+
+# ---------------------------------------------------------------------------
+# top-k sparsification
+# ---------------------------------------------------------------------------
+
+def topk_psum_mean(g: jax.Array, axis_name: str,
+                   frac: float = 0.01) -> jax.Array:
+    """Mean-all-reduce keeping only each replica's top-k |g| entries."""
+    flat = g.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    picked = flat[idx]
+    dense = jnp.zeros_like(flat).at[idx].set(picked)
+    # the dense psum here stands in for an index-union collective; the wire
+    # bytes of a real deployment are 2k words (idx+val all-gather).
+    return jax.lax.pmean(dense, axis_name).reshape(g.shape)
+
+
+# ---------------------------------------------------------------------------
+# error-feedback wrapper
+# ---------------------------------------------------------------------------
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(jnp.zeros_like, grads)
+
+
+def compressed_mean(grads: Any, err: Any, axis_name: str,
+                    cfg: CompressionConfig) -> tuple[Any, Any]:
+    """(grads + err) --compress--> mean over axis; returns (mean, new_err).
+
+    new_err is the per-leaf residual (what compression destroyed locally);
+    it is added back before the next step's compression.
+    """
+    if cfg.kind == "none":
+        return jax.tree.map(partial(jax.lax.pmean, axis_name=axis_name),
+                            grads), err
+
+    def leaf(g, e):
+        corrected = g + e
+        if cfg.kind == "int8":
+            q, s = quantize_int8(corrected, cfg.block)
+            local_hat = dequantize_int8(q, s, corrected.shape, corrected.size)
+            reduced = int8_psum_mean(corrected, axis_name, cfg.block)
+        elif cfg.kind == "topk":
+            flat = corrected.reshape(-1)
+            k = max(1, int(flat.size * cfg.topk_frac))
+            _, idx = jax.lax.top_k(jnp.abs(flat), k)
+            local_hat = (jnp.zeros_like(flat).at[idx].set(flat[idx])
+                         .reshape(corrected.shape))
+            reduced = topk_psum_mean(corrected, axis_name, cfg.topk_frac)
+        else:
+            raise ValueError(cfg.kind)
+        return reduced, corrected - local_hat
+
+    flat, treedef = jax.tree.flatten(grads)
+    flat_e = jax.tree.leaves(err)
+    pairs = [leaf(g, e) for g, e in zip(flat, flat_e)]
+    reduced = treedef.unflatten([p[0] for p in pairs])
+    new_err = treedef.unflatten([p[1] for p in pairs])
+    return reduced, new_err

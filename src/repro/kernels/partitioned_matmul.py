@@ -1,0 +1,147 @@
+"""Multi-tenant partitioned weight-stationary GEMM — the paper's kernel on TPU.
+
+The paper partitions a 128×128 weight-stationary systolic array *vertically*:
+every tenant owns all PE rows and a contiguous range of PE **columns**, and a
+one-gate PE change (``Mul_En``) keeps foreign data flowing through without
+firing the multiplier.  The TPU has no per-PE enable, so the insight is
+re-expressed structurally (DESIGN.md §2):
+
+* PE columns        →  the GEMM **N dimension** (output channels / lanes);
+* vertical slices   →  disjoint contiguous **N-block ranges**, one per tenant
+  (``owner`` map — the partition table of Algorithm 1);
+* ``Mul_En`` gating →  (a) the grid's index map never routes tenant A's
+  activations against tenant B's weight columns, and (b) ``pl.when`` skips
+  whole blocks beyond a tenant's valid streamed rows — compute is *not
+  scheduled* rather than masked, so the "gate" costs zero cycles;
+* load/feed/drain SRAM buffers → the HBM→VMEM BlockSpec pipeline (weights
+  double-buffered into VMEM = ① load; activation stream = ② feed; the f32
+  accumulator flushed at the last K step = ③ drain).
+
+All tenants execute inside ONE fused ``pallas_call`` grid, so a single TPU
+core is time/space-shared among tenants exactly like the paper's single
+systolic array — no per-tenant kernel launches, no dead lanes between
+partitions (ragged edges are zero-padded, not recomputed).
+
+Grid layout: ``(n_blocks, t_blocks, k_blocks)`` with K innermost — the f32
+accumulator tile stays resident in VMEM across the K reduction (the TPU
+analogue of partial sums flowing down the array's columns) and is drained
+once per (n, t) tile.
+
+Scalar-prefetch operands (``owner``, ``valid_t``) are the dynamic partition
+state: Algorithm 1 re-computes them per scheduling round on the host, and
+the SAME compiled kernel serves any partition layout of the same geometry —
+that is what makes the partitioning *dynamic* at zero recompile cost.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# MXU/VREG-aligned defaults: 128-multiples on the matmul dims; the f32
+# accumulator tile (block_t × block_n) plus the two operand tiles must fit
+# VMEM (~16 MiB/core): 128·512·4 B + 128·512·2 B·2 ≈ 0.5 MiB per buffer set,
+# leaving room for Pallas' double buffering.
+DEFAULT_BLOCK_T = 128
+DEFAULT_BLOCK_K = 128
+DEFAULT_BLOCK_N = 128
+
+
+def _kernel(owner_ref, valid_t_ref, valid_k_ref, x_ref, w_ref, o_ref,
+            acc_ref, *, n_k_blocks: int, block_t: int, block_k: int):
+    """One (n, t, k) grid step: acc += x_blk @ w_blk for the owning tenant."""
+    t = pl.program_id(1)
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Mul_En analogue: blocks entirely past the owning tenant's valid rows
+    # (T) or valid reduction depth (K) never fire the MXU.  The paper gates
+    # per-PE pass-through; block-granular work-skipping is the TPU-native
+    # equivalent — and skipping dead K-blocks is a beyond-paper extension
+    # (the padded shared grid makes ragged K otherwise costly).
+    n = pl.program_id(0)
+    tenant = owner_ref[n]
+    live = (t * block_t < valid_t_ref[tenant]) \
+        & (k * block_k < valid_k_ref[tenant])
+
+    @pl.when(live)
+    def _mac():
+        acc_ref[...] += jax.lax.dot_general(
+            x_ref[0], w_ref[...],
+            dimension_numbers=(((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k_blocks - 1)
+    def _drain():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_t", "block_k", "block_n", "interpret"))
+def partitioned_matmul(xs: jax.Array, w: jax.Array, owner: jax.Array,
+                       valid_t: jax.Array, valid_k: jax.Array | None = None,
+                       *,
+                       block_t: int = DEFAULT_BLOCK_T,
+                       block_k: int = DEFAULT_BLOCK_K,
+                       block_n: int = DEFAULT_BLOCK_N,
+                       interpret: bool = False) -> jax.Array:
+    """Fused multi-tenant GEMM.  See ``ref.partitioned_matmul_ref``.
+
+    xs:      (E, T, K) — per-tenant activations, zero-padded to shared T/K.
+    w:       (K, N)    — tenant weights concatenated along N.
+    owner:   (N // block_n,) int32 — column-block → tenant (partition map).
+    valid_t: (E,) int32 — valid streamed rows per tenant.
+    valid_k: (E,) int32 — valid reduction depth per tenant (default: K).
+    Returns  (T, N) f32.
+    """
+    E, T, K = xs.shape
+    if valid_k is None:
+        valid_k = jnp.full((E,), K, jnp.int32)
+    K2, N = w.shape
+    if K2 != K:
+        raise ValueError(f"K mismatch: xs {K} vs w {K2}")
+    for name, dim, blk in (("T", T, block_t), ("K", K, block_k),
+                           ("N", N, block_n)):
+        if dim % blk:
+            raise ValueError(f"{name}={dim} not divisible by block {blk}; "
+                             "pad in ops.fused_tenant_gemm")
+    n_blocks, t_blocks, k_blocks = N // block_n, T // block_t, K // block_k
+    if owner.shape != (n_blocks,):
+        raise ValueError(f"owner must be ({n_blocks},), got {owner.shape}")
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_blocks, t_blocks, k_blocks),
+        in_specs=[
+            # ② feed: the OWNING tenant's activation block — the index map
+            # is the partition routing (never crosses a partition edge).
+            pl.BlockSpec((1, block_t, block_k),
+                         lambda n, t, k, owner, vt, vk: (owner[n], t, k)),
+            # ① load: stationary weight column-block of this partition.
+            pl.BlockSpec((block_k, block_n),
+                         lambda n, t, k, owner, vt, vk: (k, n)),
+        ],
+        # ③ drain: one output tile per (t, n), revisited across k.
+        out_specs=pl.BlockSpec((block_t, block_n),
+                               lambda n, t, k, owner, vt, vk: (t, n)),
+        scratch_shapes=[pltpu.VMEM((block_t, block_n), jnp.float32)],
+    )
+    kernel = functools.partial(_kernel, n_k_blocks=k_blocks,
+                               block_t=block_t, block_k=block_k)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, N), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(owner.astype(jnp.int32), valid_t.astype(jnp.int32),
+      valid_k.astype(jnp.int32), xs, w)

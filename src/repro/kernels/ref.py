@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for the Pallas kernels (the allclose references).
+
+Semantics contract shared with ``partitioned_matmul.py``:
+
+* ``xs``      — (E, T, K): one (padded) activation matrix per tenant.  Rows
+  at/after ``valid_t[e]`` and K-columns beyond the tenant's true K MUST be
+  zero-padded by the caller (zeros contribute nothing to any dot product —
+  this is how per-tenant ragged shapes stay exact inside one fused grid).
+* ``w``       — (K, N): all tenants' weight matrices concatenated along N —
+  the *column/partition* dimension of the paper's systolic array.
+* ``owner``   — (N // block_n,) int32: which tenant owns each column block
+  (the partition map of Algorithm 1; contiguous runs = vertical partitions).
+* ``valid_t`` — (E,) int32: number of valid streamed rows per tenant.  Blocks
+  entirely past ``valid_t[owner]`` are skipped by the kernel (the ``Mul_En``
+  tri-state analogue); the oracle zeroes them explicitly.
+
+Output — (T, N) f32: column block j equals ``xs[owner[j]] @ w[:, block j]``
+with rows >= valid_t[owner[j]] equal to zero.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def partitioned_matmul_ref(xs: jnp.ndarray, w: jnp.ndarray,
+                           owner: jnp.ndarray, valid_t: jnp.ndarray,
+                           block_n: int) -> jnp.ndarray:
+    """O(E·T·K·N) reference for the multi-tenant partitioned GEMM."""
+    E, T, K = xs.shape
+    K2, N = w.shape
+    assert K2 == K, (K2, K)
+    assert N % block_n == 0
+    n_blocks = N // block_n
+    assert owner.shape == (n_blocks,)
+
+    # out[:, j] = xs[owner[j]] @ w[:, j] — computed densely then masked.
+    # (E, T, N) full cross-product, then select the owner's plane per block.
+    full = jnp.einsum("etk,kn->etn", xs.astype(jnp.float32),
+                      w.astype(jnp.float32))
+    owner_per_col = jnp.repeat(owner, block_n)              # (N,)
+    out = jnp.take_along_axis(
+        full, owner_per_col[None, None, :].repeat(T, axis=1), axis=0)[0]
+    # Mul_En masking: rows past the owning tenant's valid_t are zero.
+    rows = jnp.arange(T)[:, None]
+    live = rows < valid_t[owner_per_col][None, :]
+    return jnp.where(live, out, 0.0)
+
+
+def matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Plain GEMM oracle (single-tenant baseline)."""
+    return x.astype(jnp.float32) @ w.astype(jnp.float32)

@@ -1,0 +1,125 @@
+"""Lowerable step builders shared by dryrun / roofline / perf benchmarks.
+
+``build_lowerable(spec, cell, mesh)`` returns ``(jitted, args)`` such that
+``jitted.lower(*args).compile()`` exercises exactly the computation of that
+(architecture × input-shape) cell on that mesh:
+
+* ``train_4k``    → full train step (fwd + bwd + AdamW update), FSDP+TP;
+* ``prefill_32k`` → chunked-attention forward, last-position logits;
+* ``decode_*``    → single-token ``decode_step`` against a seq_len cache.
+
+All arguments are ShapeDtypeStructs — nothing is allocated; this is the
+pattern that lets a CPU host validate a 512-chip lowering.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchSpec, ShapeCell, input_specs, params_spec
+from repro.distributed.sharding import (
+    FSDP_TP,
+    MeshRules,
+    batch_shardings,
+    cache_shardings,
+    params_shardings,
+)
+from repro.models.model import decode_step, forward, prefill
+from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.training.train_loop import TrainConfig, loss_and_grads
+
+
+@dataclasses.dataclass(frozen=True)
+class Lowerable:
+    """A jit'd step plus its abstract arguments (SDS pytrees)."""
+
+    jitted: Any
+    args: tuple
+    kind: str
+    arch_id: str
+    cell_name: str
+
+    def lower(self):
+        return self.jitted.lower(*self.args)
+
+
+def _opt_shardings(o_sds, mesh: Mesh, rules: MeshRules):
+    return {"master": params_shardings(o_sds["master"], mesh, rules),
+            "m": params_shardings(o_sds["m"], mesh, rules),
+            "v": params_shardings(o_sds["v"], mesh, rules),
+            "step": NamedSharding(mesh, P())}
+
+
+def build_lowerable(spec: ArchSpec, cell_name: str, mesh: Mesh,
+                    rules: MeshRules = FSDP_TP,
+                    train: TrainConfig = TrainConfig(),
+                    reduced: bool = False) -> Lowerable:
+    cfg = spec.smoke if reduced else spec.model
+    cell = spec.cell(cell_name)
+    if reduced:
+        # shrink the cell to smoke-config scale (CPU trace/compile tests)
+        specs = input_specs(cfg, cell, batch=min(cell.global_batch, 4),
+                            seq=min(cell.seq_len, 32))
+    else:
+        specs = input_specs(cfg, cell)
+    p_sds = params_spec(cfg)
+    p_sh = params_shardings(p_sds, mesh, rules)
+
+    if cell.kind == "train":
+        batch_sds = specs
+        b_sh = batch_shardings(batch_sds, mesh)
+        o_sds = jax.eval_shape(init_opt_state, p_sds)
+        o_sh = _opt_shardings(o_sds, mesh, rules)
+
+        def step(params, opt_state, batch):
+            loss, grads = loss_and_grads(cfg, params, batch,
+                                         train.microbatches)
+            new_p, new_o = adamw_update(train.opt, params, grads, opt_state)
+            return new_p, new_o, loss
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, o_sh, b_sh),
+            out_shardings=(p_sh, o_sh, NamedSharding(mesh, P())),
+            donate_argnums=(0, 1))
+        return Lowerable(jitted, (p_sds, o_sds, batch_sds), "train",
+                         spec.arch_id, cell_name)
+
+    if cell.kind == "prefill":
+        batch_sds = specs
+        b_sh = batch_shardings(batch_sds, mesh)
+
+        def step(params, batch):
+            return prefill(cfg, params, batch["tokens"],
+                           frames=batch.get("frames"),
+                           patches=batch.get("patches"))
+
+        jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+        return Lowerable(jitted, (p_sds, batch_sds), "prefill",
+                         spec.arch_id, cell_name)
+
+    if cell.kind == "decode":
+        cache_sds = specs["cache"]
+        c_sh = cache_shardings(cache_sds, mesh)
+        tok_sh = batch_shardings(
+            {"token": specs["token"], "cache_len": specs["cache_len"]}, mesh)
+
+        def step(params, cache, token, cache_len):
+            return decode_step(cfg, params, cache, token, cache_len)
+
+        jitted = jax.jit(
+            step,
+            in_shardings=(p_sh, c_sh, tok_sh["token"], tok_sh["cache_len"]),
+            out_shardings=(None, c_sh),
+            donate_argnums=(1,))
+        return Lowerable(jitted,
+                         (p_sds, cache_sds, specs["token"],
+                          specs["cache_len"]),
+                         "decode", spec.arch_id, cell_name)
+
+    raise ValueError(cell.kind)

@@ -1,0 +1,102 @@
+"""End-to-end training driver.
+
+Runs a real training loop (CPU: smoke configs; TPU: full configs) with
+checkpoint/restart, deterministic data, and optional gradient compression::
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+        --smoke --steps 200 --batch 16 --seq 64 --ckpt-dir /tmp/ckpt
+
+Fault tolerance demonstrated by construction: kill the process at any step
+and re-run the same command — it resumes from the latest committed
+checkpoint and regenerates the exact data stream from (seed, step).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get, list_archs
+from repro.launch.mesh import make_host_mesh
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, make_batch
+from repro.training.optimizer import OptConfig
+from repro.training.train_loop import (
+    TrainConfig,
+    init_sharded,
+    make_train_step,
+)
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="llama3.2-3b", choices=list_archs())
+    p.add_argument("--smoke", action="store_true",
+                   help="reduced config (CPU-runnable)")
+    p.add_argument("--steps", type=int, default=200)
+    p.add_argument("--batch", type=int, default=16)
+    p.add_argument("--seq", type=int, default=64)
+    p.add_argument("--lr", type=float, default=3e-3)
+    p.add_argument("--microbatches", type=int, default=1)
+    p.add_argument("--seed", type=int, default=0)
+    p.add_argument("--ckpt-dir", default="")
+    p.add_argument("--ckpt-every", type=int, default=50)
+    p.add_argument("--log-every", type=int, default=10)
+    args = p.parse_args(argv)
+
+    spec = get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.model
+    mesh = make_host_mesh()
+    print(f"arch={args.arch} family={cfg.family} mesh={mesh.devices.shape} "
+          f"{mesh.axis_names}")
+
+    params, opt_state = init_sharded(cfg, mesh, seed=args.seed)
+    tcfg = TrainConfig(
+        opt=OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 5),
+                      total_steps=args.steps),
+        microbatches=args.microbatches)
+    _, jitted = make_train_step(cfg, mesh, tcfg)
+
+    start = 0
+    if args.ckpt_dir:
+        got = ckpt.latest_step(args.ckpt_dir)
+        if got is not None:
+            state = ckpt.restore(args.ckpt_dir, got,
+                                 {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start = got
+            print(f"resumed from step {start}")
+
+    dcfg = DataConfig(vocab=cfg.vocab, batch=args.batch, seq=args.seq,
+                      seed=args.seed)
+    extras = {}
+    if cfg.frontend == "audio":
+        extras["frames"] = (args.batch, cfg.enc_seq, cfg.d_model)
+    elif cfg.frontend == "vision":
+        extras["patches"] = (args.batch, cfg.n_patches, cfg.d_model)
+
+    step_fn = None
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = make_batch(dcfg, step, mesh, extras)
+        if step_fn is None:
+            step_fn = jitted(params, opt_state, batch)
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if (step + 1) % args.log_every == 0:
+            dt = (time.time() - t0) / args.log_every
+            print(f"step {step + 1:5d}  loss {float(m['loss']):7.4f}  "
+                  f"gnorm {float(m['grad_norm']):8.3f}  {dt*1e3:6.1f} ms/it",
+                  flush=True)
+            t0 = time.time()
+        if args.ckpt_dir and (step + 1) % args.ckpt_every == 0:
+            d = ckpt.save(args.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt_state})
+            print(f"checkpointed -> {d}")
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

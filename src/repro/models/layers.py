@@ -1,0 +1,390 @@
+"""Shared neural layers for the assigned architectures (pure JAX).
+
+Design notes
+------------
+* Functional style: params are nested dicts of ``jnp`` arrays; every layer is
+  ``init_*(key, ...) -> params`` + ``apply(params, x, ...) -> y``.
+* Attention is **chunked** (flash-style online softmax over KV blocks) so the
+  32k-prefill cells never materialise an (S × S) score tensor — required for
+  the multi-pod dry-run to fit HBM.
+* GQA throughout: ``n_kv_heads <= n_heads``; local (sliding-window) attention
+  for RecurrentGemma; bidirectional for the Whisper encoder.
+* Compute dtype is bf16, accumulation/softmax in f32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Params = dict[str, Any]
+
+DEFAULT_ATTN_CHUNK = 512
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, in_dim: int, out_dim: int,
+               dtype=jnp.bfloat16) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key: jax.Array, vocab: int, dim: int,
+               dtype=jnp.bfloat16) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+def init_layernorm(dim: int) -> Params:
+    return {"scale": jnp.ones((dim,), jnp.float32),
+            "bias": jnp.zeros((dim,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """Apply RoPE.  x: (..., S, H, D); positions: (..., S) int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32)
+                    * (math.log(theta) / half))
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # broadcast over heads
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA, chunked flash-style, causal / local / bidirectional)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    causal: bool = True
+    window: int | None = None          # local attention window (tokens back)
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    chunk: int = DEFAULT_ATTN_CHUNK    # KV-block size for the online softmax
+    q_chunks: int = 1                  # Q-block count: >1 enables STATIC
+    #   causal/window skipping — each Q block scans only the KV chunks it
+    #   can see (triangular ≈2× flop/byte saving at long S); block count is
+    #   a trace-time constant so the saving is visible in the lowered HLO
+
+    @property
+    def q_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_kv_heads * self.head_dim
+
+
+def init_attention(key: jax.Array, cfg: AttnConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": dense_init(k1, cfg.d_model, cfg.q_dim),
+        "wk": dense_init(k2, cfg.d_model, cfg.kv_dim),
+        "wv": dense_init(k3, cfg.d_model, cfg.kv_dim),
+        "wo": dense_init(k4, cfg.q_dim, cfg.d_model),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), jnp.float32)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), jnp.float32)
+    return p
+
+
+def _project_qkv(p: Params, cfg: AttnConfig, x: jax.Array,
+                 positions: jax.Array):
+    B, S, _ = x.shape
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(q.dtype)
+        k = k + p["bk"].astype(k.dtype)
+        v = v + p["bv"].astype(v.dtype)
+    q = q.reshape(B, S, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                       q_pos: jax.Array, kv_pos: jax.Array,
+                       causal: bool, window: int | None,
+                       chunk: int, q_chunks: int = 1) -> jax.Array:
+    """Flash-style attention: scan over KV chunks with online softmax.
+
+    q: (B, Sq, H, D); k/v: (B, Sk, KV, D); positions broadcastable (B, S).
+    Never materialises (Sq × Sk); peak extra memory is (B, H, Sq/q_chunks,
+    chunk).  With ``q_chunks > 1`` each Q block only scans the KV chunks it
+    can actually see (causal lower-triangle / local window) — the trip
+    counts are trace-time constants, so the ~2× triangular saving shows up
+    in the compiled HLO, not just at runtime.
+    """
+    B, Sq, H, D = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    scale = 1.0 / math.sqrt(D)
+    n_chunks = -(-Sk // chunk)
+    pad = n_chunks * chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)), constant_values=-1)
+    # (n, B, chunk, KV, D)
+    kc = k.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, KV, D).transpose(1, 0, 2, 3, 4)
+    pc = kv_pos.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def run_block(qf, qp, q_start, q_end):
+        """Online softmax of one Q block over its visible KV chunks."""
+        Sq_b = qf.shape[1]
+
+        def _update(carry, kb, vb, s):
+            m, l, acc = carry
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p_blk = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p_blk.sum(axis=-1)
+            # PV product in bf16 (f32 accumulate): halves the HBM traffic
+            # of the largest residual without touching softmax numerics
+            acc_new = (acc * alpha[..., None]
+                       + jnp.einsum("bhqk,bkhd->bhqd",
+                                    p_blk.astype(jnp.bfloat16),
+                                    vb.astype(jnp.bfloat16)
+                                    ).astype(jnp.float32))
+            return m_new, l_new, acc_new
+
+        def body(carry, blk):
+            kb, vb, pb = blk
+            kb = jnp.repeat(kb, rep, axis=2)  # (B, c, H, D)
+            vb = jnp.repeat(vb, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+            mask = (pb[:, None, None, :] >= 0)
+            if causal:
+                mask = mask & (pb[:, None, None, :]
+                               <= qp[:, None, :, None])
+            if window is not None:
+                mask = mask & (pb[:, None, None, :]
+                               > qp[:, None, :, None] - window)
+            s = jnp.where(mask, s, -1e30)
+            return _update(carry, kb, vb, s), None
+
+        def body_nomask(carry, blk):
+            # chunks strictly below this Q block's start are FULLY visible
+            # under the causal mask — the mask/select chain (3 score-sized
+            # tensors) is statically dead and skipped entirely.
+            kb, vb, _pb = blk
+            kb = jnp.repeat(kb, rep, axis=2)
+            vb = jnp.repeat(vb, rep, axis=2)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qf, kb.astype(jnp.float32))
+            return _update(carry, kb, vb, s), None
+
+        m0 = jnp.full((B, H, Sq_b), -1e30, jnp.float32)
+        l0 = jnp.zeros((B, H, Sq_b), jnp.float32)
+        acc0 = jnp.zeros((B, H, Sq_b, D), jnp.float32)
+        carry = (m0, l0, acc0)
+        # static visibility bound: causal -> KV chunks past this Q block's
+        # last position never contribute; window -> chunks before the
+        # window's start never contribute.  Both are trace-time slices
+        # (identity row->position layout, i.e. training/prefill).
+        lo_c, hi_c, diag_c = 0, n_chunks, 0
+        if causal and Sq == Sk and q_chunks > 1:
+            hi_c = min(n_chunks, -(-q_end // chunk))
+            if window is None and pad == 0:
+                # chunks [lo_c, diag_c) need no masking at all
+                diag_c = max(lo_c, q_start // chunk)
+            else:
+                lo_c = max(0, (q_start - window) // chunk) \
+                    if window is not None else 0
+        if diag_c > lo_c:
+            carry, _ = jax.lax.scan(jax.checkpoint(body_nomask), carry,
+                                    (kc[lo_c:diag_c], vc[lo_c:diag_c],
+                                     pc[lo_c:diag_c]))
+            lo_c = diag_c
+        # remat the chunk body: backward recomputes the (B,H,Sq_b,chunk)
+        # score block instead of saving one per scan step.
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), carry,
+                                      (kc[lo_c:hi_c], vc[lo_c:hi_c],
+                                       pc[lo_c:hi_c]))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq_b, H, D)
+
+    qf_all = (q * scale).astype(jnp.float32)
+    if q_chunks <= 1 or Sq % q_chunks or Sq != Sk:
+        return run_block(qf_all, q_pos, 0, Sk)
+    qb = Sq // q_chunks
+    outs = []
+    for i in range(q_chunks):
+        outs.append(run_block(qf_all[:, i * qb:(i + 1) * qb],
+                              q_pos[:, i * qb:(i + 1) * qb],
+                              i * qb, (i + 1) * qb))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(p: Params, cfg: AttnConfig, x: jax.Array,
+              positions: jax.Array | None = None) -> jax.Array:
+    """Self-attention over a full sequence (training / prefill)."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = _chunked_attention(q, k, v, positions, positions,
+                             cfg.causal, cfg.window, cfg.chunk,
+                             q_chunks=cfg.q_chunks)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def cross_attention(p: Params, cfg: AttnConfig, x: jax.Array,
+                    kv: jax.Array) -> jax.Array:
+    """Encoder-decoder cross attention (no RoPE on kv side)."""
+    B, S, _ = x.shape
+    Sk = kv.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    pos_k = jnp.broadcast_to(jnp.arange(Sk, dtype=jnp.int32), (B, Sk))
+    cfg_nc = dataclasses.replace(cfg, causal=False, window=None,
+                                 use_rope=False)
+    q, _, _ = _project_qkv(p, cfg_nc, x, pos_q)
+    k = (kv @ p["wk"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    v = (kv @ p["wv"]).reshape(B, Sk, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qkv_bias:
+        k = k + p["bk"].astype(k.dtype).reshape(cfg.n_kv_heads, cfg.head_dim)
+        v = v + p["bv"].astype(v.dtype).reshape(cfg.n_kv_heads, cfg.head_dim)
+    out = _chunked_attention(q, k, v, pos_q, pos_k, causal=False, window=None,
+                             chunk=cfg.chunk)
+    return out.reshape(B, S, cfg.q_dim) @ p["wo"]
+
+
+def decode_attention(p: Params, cfg: AttnConfig, x: jax.Array,
+                     k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len: jax.Array):
+    """Single-token decode against a (B, S_max, KV, D) cache.
+
+    Returns (out, new_k_cache, new_v_cache).  ``cache_len``: (B,) int32 —
+    the number of valid entries; the new token is written at that index.
+    """
+    B, S1, _ = x.shape
+    assert S1 == 1, "decode_attention expects a single new token"
+    pos = cache_len[:, None].astype(jnp.int32)  # (B, 1)
+    q, k, v = _project_qkv(p, cfg, x, pos)
+    idx = cache_len.astype(jnp.int32)
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, idx].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, idx].set(v[:, 0].astype(v_cache.dtype))
+    S = k_cache.shape[1]
+    kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    # entries beyond cache_len are masked via the causal predicate
+    out = _chunked_attention(q, k_cache, v_cache, pos, kv_pos,
+                             causal=True, window=cfg.window, chunk=cfg.chunk)
+    return out.reshape(B, 1, cfg.q_dim) @ p["wo"], k_cache, v_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key: jax.Array, d_model: int, d_ff: int, kind: str) -> Params:
+    """kind: 'swiglu' | 'geglu' | 'gelu' | 'relu2' (squared ReLU, Nemotron)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: Params = {"down": dense_init(k2, d_ff, d_model)}
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = dense_init(k1, d_model, d_ff)
+        p["up"] = dense_init(k3, d_model, d_ff)
+    else:
+        p["up"] = dense_init(k1, d_model, d_ff)
+    return p
+
+
+def mlp(p: Params, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        h = jax.nn.silu(x @ p["gate"]) * (x @ p["up"])
+    elif kind == "geglu":
+        h = jax.nn.gelu(x @ p["gate"]) * (x @ p["up"])
+    elif kind == "gelu":
+        h = jax.nn.gelu(x @ p["up"])
+    elif kind == "relu2":
+        h = jnp.square(jax.nn.relu(x @ p["up"]))
+    else:
+        raise ValueError(f"unknown mlp kind {kind!r}")
+    return h @ p["down"]
+
+
+# ---------------------------------------------------------------------------
+# conv1d (short causal depthwise conv — Mamba/RecurrentGemma temporal mix)
+# ---------------------------------------------------------------------------
+
+def init_conv1d(key: jax.Array, dim: int, width: int) -> Params:
+    scale = 1.0 / math.sqrt(width)
+    return {"w": (jax.random.normal(key, (width, dim), jnp.float32)
+                  * scale).astype(jnp.bfloat16),
+            "b": jnp.zeros((dim,), jnp.float32)}
+
+
+def causal_conv1d(p: Params, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B, S, dim)."""
+    width = p["w"].shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1], :] * p["w"][i].astype(x.dtype)
+              for i in range(width))
+    return out + p["b"].astype(x.dtype)
+
+
+def conv1d_step(p: Params, window: jax.Array, x_t: jax.Array):
+    """Single decode step.  window: (B, width-1, dim) history; x_t: (B, dim).
+
+    Returns (y_t, new_window).
+    """
+    width = p["w"].shape[0]
+    full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # (B, width, d)
+    y = jnp.einsum("bwd,wd->bd", full.astype(jnp.float32),
+                   p["w"].astype(jnp.float32))
+    y = (y + p["b"]).astype(x_t.dtype)
+    return y, full[:, 1:, :]

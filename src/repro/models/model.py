@@ -1,0 +1,631 @@
+"""Model assembly for the 10 assigned architectures.
+
+One :class:`ModelConfig` describes any of the five families:
+
+* ``dense``  — llama-style decoder (deepseek-coder, llama3.2, nemotron,
+  mistral-nemo) and the internvl2 VLM backbone (vision stub prefix);
+* ``moe``    — dense backbone with MoE FFNs (dbrx, phi3.5-moe);
+* ``ssm``    — Mamba-2 SSD stack (mamba2-780m), attention-free;
+* ``hybrid`` — RecurrentGemma: repeating [RG-LRU, RG-LRU, local-attn]
+  pattern, every block followed by an MLP;
+* ``encdec`` — Whisper: bidirectional encoder over stubbed audio-frame
+  embeddings + causal decoder with cross-attention.
+
+Implementation notes
+--------------------
+* **scan over layers** with stacked params — keeps HLO size O(1) in depth so
+  the 62-layer deepseek config lowers/compiles quickly for every dry-run cell;
+* **remat** (``jax.checkpoint``) around each layer body: activations between
+  layers are the only saved residuals in training;
+* **prefill** uses chunked flash-style attention (no S×S buffer — mandatory
+  at 32k); **decode** uses a plain einsum over the KV cache so GSPMD can
+  shard the cache's *sequence* dimension over the ``model`` mesh axis (a
+  single-query softmax over a sharded axis costs two tiny all-reduces);
+* hybrid local attention decodes against a **ring-buffer window cache**
+  (window 2048), which is what makes the 500k-decode cell O(window) instead
+  of O(seq).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models.layers import AttnConfig
+from repro.models.moe import init_moe, moe_ffn
+from repro.models.rglru import (
+    RGLRUConfig,
+    init_rglru,
+    rglru_forward,
+    rglru_init_cache,
+    rglru_step,
+)
+from repro.models.ssm import (
+    SSMConfig,
+    init_ssd,
+    ssd_forward,
+    ssd_init_cache,
+    ssd_step,
+)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec
+    n_layers: int
+    d_model: int
+    vocab: int
+    n_heads: int = 0
+    n_kv_heads: int = 0
+    head_dim: int = 0
+    d_ff: int = 0
+    mlp_kind: str = "swiglu"
+    norm: str = "rms"            # rms | ln
+    use_rope: bool = True
+    rope_theta: float = 10000.0
+    qkv_bias: bool = False
+    attn_chunk: int = 512
+    attn_q_chunks: int = 1
+    # moe
+    n_experts: int = 0
+    top_k: int = 0
+    capacity_factor: float = 1.25
+    # ssm
+    ssm_state: int = 128
+    ssm_head_dim: int = 64
+    ssm_expand: int = 2
+    # hybrid
+    window: int = 2048
+    lru_width: int = 0
+    pattern: tuple[str, ...] = ()   # e.g. ("rec", "rec", "attn")
+    # encdec
+    n_enc_layers: int = 0
+    enc_seq: int = 1500
+    max_dec_seq: int = 8192      # learned decoder position-table size
+    # frontend stub
+    frontend: str = "none"       # none | audio | vision
+    n_patches: int = 256
+    # training
+    remat: bool = True
+
+    @property
+    def attn_cfg(self) -> AttnConfig:
+        return AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.head_dim,
+            causal=True, window=None, use_rope=self.use_rope,
+            rope_theta=self.rope_theta, qkv_bias=self.qkv_bias,
+            chunk=self.attn_chunk, q_chunks=self.attn_q_chunks)
+
+    @property
+    def local_attn_cfg(self) -> AttnConfig:
+        return dataclasses.replace(self.attn_cfg, window=self.window)
+
+    @property
+    def ssm_cfg(self) -> SSMConfig:
+        return SSMConfig(d_model=self.d_model, d_state=self.ssm_state,
+                         head_dim=self.ssm_head_dim, expand=self.ssm_expand)
+
+    @property
+    def rglru_cfg(self) -> RGLRUConfig:
+        return RGLRUConfig(d_model=self.d_model,
+                           lru_width=self.lru_width or self.d_model)
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def param_count(self) -> int:
+        """Exact parameter count (for 6·N·D roofline accounting)."""
+        counts = jax.tree.reduce(
+            lambda a, b: a + b,
+            jax.tree.map(lambda x: x.size,
+                         jax.eval_shape(lambda: init_params(
+                             self, jax.random.key(0)))),
+            0)
+        return int(counts)
+
+
+def _norm_init(cfg: ModelConfig, dim: int) -> Params:
+    return (L.init_rmsnorm(dim) if cfg.norm == "rms"
+            else L.init_layernorm(dim))
+
+
+def _norm(cfg: ModelConfig, p: Params, x: jax.Array) -> jax.Array:
+    return L.rmsnorm(p, x) if cfg.norm == "rms" else L.layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    """One decoder block of the dense/moe families."""
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "attn_norm": _norm_init(cfg, cfg.d_model),
+        "attn": L.init_attention(k1, cfg.attn_cfg),
+        "mlp_norm": _norm_init(cfg, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = init_moe(k2, cfg.d_model, cfg.d_ff, cfg.n_experts,
+                            cfg.mlp_kind)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind)
+    return p
+
+
+def _init_hybrid_super(cfg: ModelConfig, key: jax.Array) -> Params:
+    """One RecurrentGemma super-block following cfg.pattern."""
+    p: Params = {}
+    ks = jax.random.split(key, len(cfg.pattern) * 2)
+    for i, kind in enumerate(cfg.pattern):
+        sub: Params = {
+            "temporal_norm": _norm_init(cfg, cfg.d_model),
+            "mlp_norm": _norm_init(cfg, cfg.d_model),
+            "mlp": L.init_mlp(ks[2 * i], cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+        }
+        if kind == "rec":
+            sub["rglru"] = init_rglru(ks[2 * i + 1], cfg.rglru_cfg)
+        else:
+            sub["attn"] = L.init_attention(ks[2 * i + 1], cfg.local_attn_cfg)
+        p[f"sub{i}"] = sub
+    return p
+
+
+def _init_enc_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2 = jax.random.split(key)
+    enc_attn = dataclasses.replace(cfg.attn_cfg, causal=False, use_rope=False)
+    return {
+        "attn_norm": _norm_init(cfg, cfg.d_model),
+        "attn": L.init_attention(k1, enc_attn),
+        "mlp_norm": _norm_init(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k2, cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def _init_dec_block(cfg: ModelConfig, key: jax.Array) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    dec_attn = dataclasses.replace(cfg.attn_cfg, use_rope=False)
+    return {
+        "attn_norm": _norm_init(cfg, cfg.d_model),
+        "attn": L.init_attention(k1, dec_attn),
+        "cross_norm": _norm_init(cfg, cfg.d_model),
+        "cross": L.init_attention(k2, dec_attn),
+        "mlp_norm": _norm_init(cfg, cfg.d_model),
+        "mlp": L.init_mlp(k3, cfg.d_model, cfg.d_ff, cfg.mlp_kind),
+    }
+
+
+def _stack_init(fn, cfg: ModelConfig, key: jax.Array, n: int) -> Params:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: fn(cfg, k))(keys)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Params:
+    ke, kb, kh, ko = jax.random.split(key, 4)
+    p: Params = {"embed": L.embed_init(ke, cfg.vocab, cfg.d_model),
+                 "final_norm": _norm_init(cfg, cfg.d_model),
+                 "lm_head": L.dense_init(ko, cfg.d_model, cfg.vocab)}
+    if cfg.family in ("dense", "moe"):
+        p["blocks"] = _stack_init(_init_block, cfg, kb, cfg.n_layers)
+    elif cfg.family == "ssm":
+        def blk(c, k):
+            return {"norm": _norm_init(c, c.d_model),
+                    "ssd": init_ssd(k, c.ssm_cfg)}
+        p["blocks"] = _stack_init(blk, cfg, kb, cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, len(cfg.pattern))
+        p["blocks"] = _stack_init(_init_hybrid_super, cfg, kb, n_super)
+        # leftover layers (26 = 8*3 + 2 for recurrentgemma) are recurrent
+        for i in range(rem):
+            sub = {
+                "temporal_norm": _norm_init(cfg, cfg.d_model),
+                "mlp_norm": _norm_init(cfg, cfg.d_model),
+                "mlp": L.init_mlp(jax.random.fold_in(kh, 2 * i), cfg.d_model,
+                                  cfg.d_ff, cfg.mlp_kind),
+                "rglru": init_rglru(jax.random.fold_in(kh, 2 * i + 1),
+                                    cfg.rglru_cfg),
+            }
+            p[f"tail{i}"] = sub
+    elif cfg.family == "encdec":
+        p["enc_blocks"] = _stack_init(_init_enc_block, cfg, kb,
+                                      cfg.n_enc_layers)
+        p["dec_blocks"] = _stack_init(_init_dec_block, cfg, kh, cfg.n_layers)
+        p["enc_final_norm"] = _norm_init(cfg, cfg.d_model)
+        p["enc_pos"] = (jax.random.normal(
+            jax.random.fold_in(ke, 1), (cfg.enc_seq, cfg.d_model),
+            jnp.float32) * 0.02).astype(jnp.bfloat16)
+        p["dec_pos"] = (jax.random.normal(
+            jax.random.fold_in(ke, 2), (cfg.max_dec_seq, cfg.d_model),
+            jnp.float32) * 0.02).astype(jnp.bfloat16)
+    else:
+        raise ValueError(f"unknown family {cfg.family!r}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# full-sequence forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+def _dense_block_fwd(cfg: ModelConfig, bp: Params, x: jax.Array,
+                     positions: jax.Array) -> jax.Array:
+    h = x + L.attention(bp["attn"], cfg.attn_cfg,
+                        _norm(cfg, bp["attn_norm"], x), positions)
+    z = _norm(cfg, bp["mlp_norm"], h)
+    if cfg.family == "moe":
+        ff = moe_ffn(bp["moe"], z, cfg.top_k, cfg.mlp_kind,
+                     capacity_factor=cfg.capacity_factor)
+    else:
+        ff = L.mlp(bp["mlp"], z, cfg.mlp_kind)
+    return h + ff
+
+
+def _hybrid_sub_fwd(cfg: ModelConfig, sp: Params, kind: str, x: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    z = _norm(cfg, sp["temporal_norm"], x)
+    if kind == "rec":
+        t = rglru_forward(sp["rglru"], cfg.rglru_cfg, z)
+    else:
+        t = L.attention(sp["attn"], cfg.local_attn_cfg, z, positions)
+    h = x + t
+    return h + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], h), cfg.mlp_kind)
+
+
+def _scan_blocks(cfg: ModelConfig, blocks: Params, x: jax.Array,
+                 body) -> jax.Array:
+    """lax.scan over stacked layer params with optional remat."""
+    fn = jax.checkpoint(body) if cfg.remat else body
+
+    def step(h, bp):
+        return fn(bp, h), None
+
+    out, _ = jax.lax.scan(step, x, blocks)
+    return out
+
+
+def forward(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            frames: jax.Array | None = None,
+            patches: jax.Array | None = None,
+            return_hidden: bool = False) -> jax.Array:
+    """Full-sequence logits (or final hidden states).
+
+    tokens: (B, S) int32.  ``frames`` (audio stub, B×enc_seq×d) feeds the
+    encdec encoder; ``patches`` (vision stub, B×n_patches×d) is prepended to
+    the token embeddings (internvl2).  Returns (B, S, vocab) logits for the
+    token positions, or the normed (B, S, d) hidden states when
+    ``return_hidden`` (prefill needs only the last position's logits — the
+    (B, S, vocab) tensor would dominate peak memory at 32k).
+    """
+    B, S = tokens.shape
+    x = params["embed"][tokens].astype(jnp.bfloat16)
+    n_prefix = 0
+    if cfg.frontend == "vision":
+        if patches is None:
+            raise ValueError("vision frontend needs `patches`")
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+        n_prefix = patches.shape[1]
+    positions = jnp.broadcast_to(
+        jnp.arange(x.shape[1], dtype=jnp.int32), (B, x.shape[1]))
+
+    if cfg.family in ("dense", "moe"):
+        x = _scan_blocks(cfg, params["blocks"], x,
+                         lambda bp, h: _dense_block_fwd(cfg, bp, h, positions))
+    elif cfg.family == "ssm":
+        def body(bp, h):
+            return h + ssd_forward(bp["ssd"], cfg.ssm_cfg,
+                                   _norm(cfg, bp["norm"], h))
+        x = _scan_blocks(cfg, params["blocks"], x, body)
+    elif cfg.family == "hybrid":
+        def super_body(bp, h):
+            for i, kind in enumerate(cfg.pattern):
+                h = _hybrid_sub_fwd(cfg, bp[f"sub{i}"], kind, h, positions)
+            return h
+        x = _scan_blocks(cfg, params["blocks"], x, super_body)
+        i = 0
+        while f"tail{i}" in params:
+            x = _hybrid_sub_fwd(cfg, params[f"tail{i}"], "rec", x, positions)
+            i += 1
+    elif cfg.family == "encdec":
+        if frames is None:
+            raise ValueError("encdec needs `frames` (audio stub)")
+        mem = _encode(cfg, params, frames)
+        x = x + params["dec_pos"][:S].astype(x.dtype)
+
+        def dec_body(bp, h):
+            h = h + L.attention(bp["attn"],
+                                dataclasses.replace(cfg.attn_cfg,
+                                                    use_rope=False),
+                                _norm(cfg, bp["attn_norm"], h), positions)
+            h = h + L.cross_attention(
+                bp["cross"], dataclasses.replace(cfg.attn_cfg,
+                                                 use_rope=False),
+                _norm(cfg, bp["cross_norm"], h), mem)
+            return h + L.mlp(bp["mlp"], _norm(cfg, bp["mlp_norm"], h),
+                             cfg.mlp_kind)
+        x = _scan_blocks(cfg, params["dec_blocks"], x, dec_body)
+
+    x = _norm(cfg, params["final_norm"], x)
+    if n_prefix:
+        x = x[:, n_prefix:]
+    if return_hidden:
+        return x
+    return x @ params["lm_head"]
+
+
+def _encode(cfg: ModelConfig, params: Params, frames: jax.Array) -> jax.Array:
+    """Whisper encoder over stubbed frame embeddings (B, enc_seq, d)."""
+    x = frames.astype(jnp.bfloat16) + params["enc_pos"].astype(jnp.bfloat16)
+    Bz, Se, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(Se, dtype=jnp.int32), (Bz, Se))
+    enc_attn = dataclasses.replace(cfg.attn_cfg, causal=False, use_rope=False)
+
+    def body(bp, h):
+        h = h + L.attention(bp["attn"], enc_attn,
+                            _norm(cfg, bp["attn_norm"], h), pos)
+        return h + L.mlp(bp["mlp"], _norm(cfg, bp["mlp_norm"], h),
+                         cfg.mlp_kind)
+    x = _scan_blocks(cfg, params["enc_blocks"], x, body)
+    return _norm(cfg, params["enc_final_norm"], x)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict) -> jax.Array:
+    """Mean next-token cross-entropy (labels = tokens shifted by caller)."""
+    logits = forward(cfg, params, batch["tokens"],
+                     frames=batch.get("frames"), patches=batch.get("patches"))
+    logits = logits.astype(jnp.float32)
+    labels = batch["labels"]
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None],
+                               axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# decode (single-token serve step against caches)
+# ---------------------------------------------------------------------------
+
+def _decode_attn(p: Params, cfg_a: AttnConfig, x: jax.Array,
+                 k_cache: jax.Array, v_cache: jax.Array,
+                 cache_len: jax.Array, ring: bool = False,
+                 update_cache: bool = True):
+    """Plain einsum attention for one new token.
+
+    Cache: (B, S, KV, D).  Seq dim is shardable (softmax over the sharded
+    axis costs two scalar-sized all-reduces under GSPMD).  ``ring=True``
+    treats the cache as a ring buffer of a local-attention window.
+    ``update_cache=False`` reads a frozen cache (cross-attention over
+    precomputed encoder KV) — writing would corrupt the memory.
+    """
+    B = x.shape[0]
+    S = k_cache.shape[1]
+    pos = cache_len[:, None].astype(jnp.int32)
+    q, k, v = L._project_qkv(p, cfg_a, x, pos)
+    if ring:
+        slot = (cache_len % S).astype(jnp.int32)
+        kv_pos_new = cache_len.astype(jnp.int32)
+    else:
+        slot = cache_len.astype(jnp.int32)
+        kv_pos_new = slot
+    bidx = jnp.arange(B)
+    if update_cache:
+        k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, slot].set(v[:, 0].astype(v_cache.dtype))
+    if ring:
+        base = jnp.arange(S, dtype=jnp.int32)[None, :]
+        n_wrap = (cache_len[:, None] + 1 - base + S - 1) // S
+        kv_pos = base + (jnp.maximum(n_wrap, 0) - 0) * 0  # placeholder
+        # true position of ring slot s: the latest write w <= cache_len with
+        # w % S == s:  w = cache_len - ((cache_len - s) % S)
+        kv_pos = cache_len[:, None] - ((cache_len[:, None] - base) % S)
+        valid = kv_pos >= 0
+    else:
+        kv_pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+        valid = kv_pos <= cache_len[:, None]
+    rep = cfg_a.n_heads // cfg_a.n_kv_heads
+    qf = q[:, 0].astype(jnp.float32)                       # (B, H, D)
+    kf = k_cache.astype(jnp.float32)
+    s = jnp.einsum("bhd,bskd->bhsk" if False else "bhd,bskd->bhks",
+                   qf, kf)
+    # group heads: (B, KV, rep, S)
+    s = s.reshape(B, cfg_a.n_kv_heads, 1, -1) if False else s
+    scale = 1.0 / math.sqrt(cfg_a.head_dim)
+    qg = qf.reshape(B, cfg_a.n_kv_heads, rep, cfg_a.head_dim) * scale
+    s = jnp.einsum("bkrd,bskd->bkrs", qg, kf)              # (B,KV,rep,S)
+    mask = valid[:, None, None, :]
+    if cfg_a.window is not None:
+        mask = mask & (kv_pos[:, None, None, :]
+                       > cache_len[:, None, None, None] - cfg_a.window)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkrs,bskd->bkrd", w, v_cache.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg_a.n_heads * cfg_a.head_dim).astype(x.dtype)
+    return out @ p["wo"], k_cache, v_cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
+               dtype=jnp.bfloat16) -> Params:
+    """Decode cache pytree for a (batch, max_seq) serving session."""
+    kv = lambda S: jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype)
+    if cfg.family in ("dense", "moe"):
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+        }
+    if cfg.family == "ssm":
+        single = ssd_init_cache(cfg.ssm_cfg, batch, dtype)
+        return jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+            single)
+    if cfg.family == "hybrid":
+        n_super, rem = divmod(cfg.n_layers, len(cfg.pattern))
+        n_attn = sum(1 for k in cfg.pattern if k == "attn") * n_super
+        n_rec = (sum(1 for k in cfg.pattern if k == "rec") * n_super) + rem
+        win = min(cfg.window, max_seq)
+        rec = rglru_init_cache(cfg.rglru_cfg, batch, dtype)
+        return {
+            "attn_k": jnp.zeros((n_attn, batch, win, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype),
+            "attn_v": jnp.zeros((n_attn, batch, win, cfg.n_kv_heads,
+                                 cfg.head_dim), dtype),
+            "rec": jax.tree.map(
+                lambda x: jnp.broadcast_to(x, (n_rec,) + x.shape), rec),
+        }
+    if cfg.family == "encdec":
+        return {
+            "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "v": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
+                            cfg.head_dim), dtype),
+            "cross_k": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dtype),
+            "cross_v": jnp.zeros((cfg.n_layers, batch, cfg.enc_seq,
+                                  cfg.n_kv_heads, cfg.head_dim), dtype),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: Params, cache: Params,
+                token: jax.Array, cache_len: jax.Array):
+    """One serving step: (B, 1) token ids -> (B, 1, vocab) logits + new cache.
+
+    ``cache_len``: (B,) int32 — current sequence length per batch row.
+    """
+    B = token.shape[0]
+    x = params["embed"][token].astype(jnp.bfloat16)        # (B, 1, d)
+
+    if cfg.family in ("dense", "moe"):
+        def body(carry, xs):
+            h = carry
+            bp, kc, vc = xs
+            z = _norm(cfg, bp["attn_norm"], h)
+            a, kc, vc = _decode_attn(bp["attn"], cfg.attn_cfg, z, kc, vc,
+                                     cache_len)
+            h = h + a
+            z = _norm(cfg, bp["mlp_norm"], h)
+            if cfg.family == "moe":
+                h = h + moe_ffn(bp["moe"], z, cfg.top_k, cfg.mlp_kind,
+                                capacity_factor=cfg.capacity_factor)
+            else:
+                h = h + L.mlp(bp["mlp"], z, cfg.mlp_kind)
+            return h, (kc, vc)
+
+        x, (ks, vs) = jax.lax.scan(body, x,
+                                   (params["blocks"], cache["k"], cache["v"]))
+        new_cache = {"k": ks, "v": vs}
+    elif cfg.family == "ssm":
+        def body(carry, xs):
+            h = carry
+            bp, c = xs
+            y, c2 = ssd_step(bp["ssd"], cfg.ssm_cfg,
+                             c, _norm(cfg, bp["norm"], h)[:, 0])
+            return h + y[:, None, :], c2
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(cfg, params, cache, x, cache_len)
+    elif cfg.family == "encdec":
+        x, new_cache = _encdec_decode(cfg, params, cache, x, cache_len)
+    else:
+        raise ValueError(cfg.family)
+
+    x = _norm(cfg, params["final_norm"], x)
+    return x @ params["lm_head"], new_cache
+
+
+def _hybrid_decode(cfg: ModelConfig, params: Params, cache: Params,
+                   x: jax.Array, cache_len: jax.Array):
+    n_super, rem = divmod(cfg.n_layers, len(cfg.pattern))
+    ai = ri = 0
+    ks, vs = cache["attn_k"], cache["attn_v"]
+    rec = cache["rec"]
+    # hybrid super-blocks are unrolled for decode (pattern is heterogeneous;
+    # 26 layers decode fine without scan)
+    for s in range(n_super):
+        bp = jax.tree.map(lambda t: t[s], params["blocks"])
+        for i, kind in enumerate(cfg.pattern):
+            sp = bp[f"sub{i}"]
+            z = _norm(cfg, sp["temporal_norm"], x)
+            if kind == "rec":
+                rc = jax.tree.map(lambda t: t[ri], rec)
+                y, rc2 = rglru_step(sp["rglru"], cfg.rglru_cfg, rc, z[:, 0])
+                rec = jax.tree.map(lambda full, new: full.at[ri].set(new),
+                                   rec, rc2)
+                x = x + y[:, None, :]
+                ri += 1
+            else:
+                a, k2, v2 = _decode_attn(sp["attn"], cfg.local_attn_cfg, z,
+                                         ks[ai], vs[ai], cache_len, ring=True)
+                ks = ks.at[ai].set(k2)
+                vs = vs.at[ai].set(v2)
+                x = x + a
+                ai += 1
+            x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x),
+                          cfg.mlp_kind)
+    for t in range(rem):
+        sp = params[f"tail{t}"]
+        z = _norm(cfg, sp["temporal_norm"], x)
+        rc = jax.tree.map(lambda a: a[ri], rec)
+        y, rc2 = rglru_step(sp["rglru"], cfg.rglru_cfg, rc, z[:, 0])
+        rec = jax.tree.map(lambda full, new: full.at[ri].set(new), rec, rc2)
+        x = x + y[:, None, :]
+        x = x + L.mlp(sp["mlp"], _norm(cfg, sp["mlp_norm"], x), cfg.mlp_kind)
+        ri += 1
+    return x, {"attn_k": ks, "attn_v": vs, "rec": rec}
+
+
+def _encdec_decode(cfg: ModelConfig, params: Params, cache: Params,
+                   x: jax.Array, cache_len: jax.Array):
+    pos = cache_len[:, None]
+    x = x + jnp.take_along_axis(
+        params["dec_pos"][None].astype(x.dtype),
+        pos[..., None].astype(jnp.int32) % params["dec_pos"].shape[0],
+        axis=1)
+    a_cfg = dataclasses.replace(cfg.attn_cfg, use_rope=False)
+    enc_len = jnp.full_like(cache_len, cfg.enc_seq - 1)
+
+    def body(carry, xs):
+        h = carry
+        bp, kc, vc, xk, xv = xs
+        z = _norm(cfg, bp["attn_norm"], h)
+        a, kc, vc = _decode_attn(bp["attn"], a_cfg, z, kc, vc, cache_len)
+        h = h + a
+        z = _norm(cfg, bp["cross_norm"], h)
+        # cross attention: query the (precomputed, frozen) encoder KV
+        c, _, _ = _decode_attn(bp["cross"],
+                               dataclasses.replace(a_cfg, causal=False),
+                               z, xk, xv, enc_len, update_cache=False)
+        h = h + c
+        return h + L.mlp(bp["mlp"], _norm(cfg, bp["mlp_norm"], h),
+                         cfg.mlp_kind), (kc, vc)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["dec_blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    return x, {"k": ks, "v": vs, "cross_k": cache["cross_k"],
+               "cross_v": cache["cross_v"]}
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens: jax.Array,
+            frames: jax.Array | None = None,
+            patches: jax.Array | None = None) -> jax.Array:
+    """Prefill = full forward returning last-position logits.
+
+    The vocab projection runs on the last position only — at 32k the full
+    (B, S, vocab) logits would be the single largest live tensor.
+    (Cache materialisation for the serving engine lives in repro.serving.)
+    """
+    hidden = forward(cfg, params, tokens, frames=frames, patches=patches,
+                     return_hidden=True)
+    return hidden[:, -1:] @ params["lm_head"]

@@ -1,0 +1,118 @@
+"""Token-choice top-k Mixture-of-Experts (DBRX 16e/top-4, Phi-3.5-MoE 16e/top-2).
+
+Dispatch is capacity-based and sort-based (no (T × E × C) one-hot tensor):
+
+1. router logits → top-k (expert, gate) per token;
+2. flatten the T·k assignments, compute each assignment's *rank within its
+   expert* via an argsort over expert ids (stable), positions past the
+   capacity ``C = ceil(T·k/E · capacity_factor)`` are dropped;
+3. scatter token activations into an (E, C, d) buffer, run the expert FFNs
+   as one batched einsum, gather back and combine weighted by the gates.
+
+Sharding: expert weights are laid out (E, d, ff); the ``ff`` dim is
+tensor-parallel over the ``model`` mesh axis (same rule as dense MLPs) and
+``E`` is FSDP-sharded over ``data``.  Dispatch/combine are local to a data
+shard, so no all-to-all is required — the only collective is the same
+output-reduction a dense TP MLP needs.  (An EP all-to-all layout is a
+documented §Perf alternative.)
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+
+Params = dict[str, Any]
+
+
+def init_moe(key: jax.Array, d_model: int, d_ff: int, n_experts: int,
+             kind: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / math.sqrt(d_model)
+
+    def ew(k, a, b):
+        return (jax.random.normal(k, (n_experts, a, b), jnp.float32)
+                * scale).astype(jnp.bfloat16)
+
+    p: Params = {
+        "router": dense_init(ks[0], d_model, n_experts, dtype=jnp.float32),
+        "down": ew(ks[1], d_ff, d_model),
+    }
+    if kind in ("swiglu", "geglu"):
+        p["gate"] = ew(ks[2], d_model, d_ff)
+        p["up"] = ew(ks[3], d_model, d_ff)
+    else:
+        p["up"] = ew(ks[2], d_model, d_ff)
+    return p
+
+
+def moe_ffn(p: Params, x: jax.Array, top_k: int, kind: str = "swiglu",
+            capacity_factor: float = 1.25) -> jax.Array:
+    """Apply the MoE FFN.  x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    T = B * S
+    xt = x.reshape(T, d)
+
+    logits = (xt.astype(jnp.float32) @ p["router"])          # (T, E)
+    gates_all = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(gates_all, top_k)   # (T, k)
+    # renormalise the selected gates (standard for token-choice routing)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9)
+
+    A = T * top_k
+    cap = int(math.ceil(T * top_k / E * capacity_factor))
+    flat_expert = expert_ids.reshape(A)                       # (A,)
+    flat_gate = gate_vals.reshape(A)
+    flat_token = jnp.repeat(jnp.arange(T), top_k)
+
+    # rank of each assignment within its expert (stable by token order)
+    order = jnp.argsort(flat_expert, stable=True)             # (A,)
+    sorted_expert = flat_expert[order]
+    # position within run of equal expert ids
+    idx_in_sorted = jnp.arange(A)
+    seg_start = jnp.searchsorted(sorted_expert, jnp.arange(E), side="left")
+    pos_sorted = idx_in_sorted - seg_start[sorted_expert]
+    pos = jnp.zeros((A,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+
+    keep = pos < cap
+    safe_pos = jnp.where(keep, pos, 0)
+    # scatter tokens into (E, C, d); dropped assignments write nothing
+    buf = jnp.zeros((E, cap, d), x.dtype)
+    buf = buf.at[flat_expert, safe_pos].add(
+        jnp.where(keep[:, None], xt[flat_token], 0).astype(x.dtype))
+
+    # batched expert FFN: (E, C, d) x (E, d, f) -> (E, C, f)
+    if "gate" in p:
+        h_g = jnp.einsum("ecd,edf->ecf", buf, p["gate"])
+        h_u = jnp.einsum("ecd,edf->ecf", buf, p["up"])
+        h = (jax.nn.silu(h_g) if kind == "swiglu" else jax.nn.gelu(h_g)) * h_u
+    else:
+        h = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", buf, p["up"]))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])        # (E, C, d)
+
+    # gather back and combine
+    picked = out_buf[flat_expert, safe_pos]                   # (A, d)
+    picked = jnp.where(keep[:, None], picked, 0)
+    weighted = picked * flat_gate[:, None].astype(picked.dtype)
+    out = jnp.zeros((T, d), x.dtype).at[flat_token].add(
+        weighted.astype(x.dtype))
+    return out.reshape(B, S, d)
+
+
+def aux_load_balance_loss(p: Params, x: jax.Array, top_k: int) -> jax.Array:
+    """Switch-style load-balancing auxiliary loss (mean fraction · prob)."""
+    B, S, d = x.shape
+    E = p["router"].shape[1]
+    logits = (x.reshape(-1, d).astype(jnp.float32) @ p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, ids = jax.lax.top_k(probs, top_k)
+    counts = jnp.zeros((E,), jnp.float32).at[ids.reshape(-1)].add(1.0)
+    frac = counts / counts.sum()
+    return E * jnp.sum(frac * probs.mean(axis=0))

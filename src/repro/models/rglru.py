@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence (per channel):
+
+    r_t = sigmoid(W_a x_t + b_a)            # recurrence gate
+    i_t = sigmoid(W_x x_t + b_x)            # input gate
+    a_t = exp(-c · softplus(Λ) · r_t)       # c = 8
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 - a_t²) ⊙ (i_t ⊙ x_t)
+
+computed over a sequence with ``jax.lax.associative_scan`` on the linear
+recurrence pairs (a, b) ∘ (a', b') = (a·a', a'·b + b'); decode is a single
+fused step.  The full residual block is: conv1d → RG-LRU, gated (GeGLU-like)
+as in the Griffin paper.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    causal_conv1d,
+    conv1d_step,
+    dense_init,
+    init_conv1d,
+)
+
+Params = dict[str, Any]
+_C = 8.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    d_model: int
+    lru_width: int
+    conv_width: int = 4
+
+
+def init_rglru(key: jax.Array, cfg: RGLRUConfig) -> Params:
+    ks = jax.random.split(key, 6)
+    w = cfg.lru_width
+    # Λ init so that a^c in [0.9, 0.999] (Griffin appendix)
+    u = jax.random.uniform(ks[0], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / (2.0 * _C)))
+    return {
+        "in_x": dense_init(ks[1], cfg.d_model, w),      # branch through conv/LRU
+        "in_gate": dense_init(ks[2], cfg.d_model, w),   # multiplicative gate
+        "conv": init_conv1d(ks[3], w, cfg.conv_width),
+        "wa": dense_init(ks[4], w, w),
+        "wx": dense_init(ks[5], w, w),
+        "ba": jnp.zeros((w,), jnp.float32),
+        "bx": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "out": dense_init(jax.random.fold_in(key, 7), w, cfg.d_model),
+    }
+
+
+def _gates(p: Params, x: jax.Array):
+    """Returns (a, beta·i·x) for the linear recurrence, in f32."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["wa"].astype(jnp.float32) + p["ba"])
+    i = jax.nn.sigmoid(xf @ p["wx"].astype(jnp.float32) + p["bx"])
+    log_a = -_C * jax.nn.softplus(p["lambda"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i * xf
+
+
+def rglru_forward(p: Params, cfg: RGLRUConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence RG-LRU block.  u: (B, S, d_model)."""
+    x = u @ p["in_x"]
+    gate = jax.nn.gelu(u @ p["in_gate"])
+    x = causal_conv1d(p["conv"], x)
+    a, b = _gates(p, x)                      # (B, S, w) each, f32
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = h.astype(u.dtype) * gate
+    return h @ p["out"]
+
+
+def rglru_init_cache(cfg: RGLRUConfig, batch: int, dtype=jnp.bfloat16) -> Params:
+    return {
+        "state": jnp.zeros((batch, cfg.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+def rglru_step(p: Params, cfg: RGLRUConfig, cache: Params, u_t: jax.Array):
+    """Single decode step.  u_t: (B, d_model) -> (y_t, new_cache)."""
+    x = u_t @ p["in_x"]
+    gate = jax.nn.gelu(u_t @ p["in_gate"])
+    x, conv_win = conv1d_step(p["conv"], cache["conv"], x)
+    a, b = _gates(p, x)
+    h = a * cache["state"] + b
+    y = h.astype(u_t.dtype) * gate
+    return y @ p["out"], {"state": h, "conv": conv_win}

@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD — state-space duality) block, chunked, pure JAX.
+
+Implements the SSD algorithm of Dao & Gu (arXiv:2405.21060): the selective
+SSM   h_t = exp(A·dt_t)·h_{t-1} + dt_t·B_t·x_t ;  y_t = C_t·h_t + D·x_t
+computed chunk-parallel:
+
+* intra-chunk: a (Q × Q) masked "attention" with decay kernel
+  L[i,j] = exp(sum_{j<m<=i} a_m);
+* inter-chunk: per-chunk final states combined with a sequential
+  ``lax.scan`` over chunks (the chunk count is small: S / 256).
+
+Decode is O(1): carry (B, H, P, N) SSM state + conv window.
+
+Shapes follow the Mamba-2 reference: d_inner = expand · d_model heads of
+size ``head_dim`` (P), shared-across-head B/C of state size N (n_groups=1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    causal_conv1d,
+    conv1d_step,
+    dense_init,
+    init_conv1d,
+)
+
+Params = dict[str, Any]
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_model: int
+    d_state: int = 128          # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 256            # Q
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        assert self.d_inner % self.head_dim == 0
+        return self.d_inner // self.head_dim
+
+
+def init_ssd(key: jax.Array, cfg: SSMConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    d_in = cfg.d_inner
+    # fused input projection: [z (gate), x, B, C, dt]
+    proj_out = 2 * d_in + 2 * cfg.d_state + cfg.n_heads
+    return {
+        "in_proj": dense_init(ks[0], cfg.d_model, proj_out),
+        "conv": init_conv1d(ks[1], d_in + 2 * cfg.d_state, cfg.conv_width),
+        "A_log": jnp.zeros((cfg.n_heads,), jnp.float32),  # A = -exp(A_log)
+        "D": jnp.ones((cfg.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((cfg.n_heads,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, cfg.d_model),
+    }
+
+
+def _split_proj(cfg: SSMConfig, zxbcdt: jax.Array):
+    d_in, N, H = cfg.d_inner, cfg.d_state, cfg.n_heads
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in:2 * d_in + 2 * N]
+    dt = zxbcdt[..., 2 * d_in + 2 * N:]
+    return z, xBC, dt
+
+
+def ssd_forward(p: Params, cfg: SSMConfig, u: jax.Array) -> jax.Array:
+    """Full-sequence SSD.  u: (B, S, d_model) -> (B, S, d_model)."""
+    Bsz, S, _ = u.shape
+    H, P, N, Q = cfg.n_heads, cfg.head_dim, cfg.d_state, cfg.chunk
+    zxbcdt = u @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(causal_conv1d(p["conv"], xBC))
+    x = xBC[..., :cfg.d_inner].reshape(Bsz, S, H, P)
+    Bmat = xBC[..., cfg.d_inner:cfg.d_inner + N]           # (B, S, N)
+    Cmat = xBC[..., cfg.d_inner + N:]                      # (B, S, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"])                   # (B, S, H)
+    A = -jnp.exp(p["A_log"])                               # (H,)
+    a = dt * A                                             # (B, S, H) log-decay
+    xdt = x.astype(jnp.float32) * dt[..., None]            # dt-scaled input
+
+    n_chunks = -(-S // Q)
+    pad = n_chunks * Q - S
+    if pad:
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+
+    def chunked(t):  # (B, S', ...) -> (B, n, Q, ...)
+        return t.reshape((Bsz, n_chunks, Q) + t.shape[2:])
+
+    xc = chunked(xdt)                                      # (B,n,Q,H,P)
+    ac = chunked(a)                                        # (B,n,Q,H)
+    Bc = chunked(Bmat.astype(jnp.float32))                 # (B,n,Q,N)
+    Cc = chunked(Cmat.astype(jnp.float32))                 # (B,n,Q,N)
+
+    cum = jnp.cumsum(ac, axis=2)                           # (B,n,Q,H)
+    # intra-chunk decay kernel L[i,j] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,n,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    # intra-chunk output: y = (C_i . B_j) * L[i,j] * xdt_j
+    G = jnp.einsum("bniN,bnjN->bnij", Cc, Bc)              # (B,n,Q,Q)
+    y_intra = jnp.einsum("bnij,bnijh,bnjhp->bnihp", G, L, xc)
+
+    # per-chunk final states: sum_j exp(cum_Q - cum_j) * B_j x_j
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,n,Q,H)
+    states = jnp.einsum("bnjN,bnjh,bnjhp->bnhpN",
+                        Bc, decay_to_end, xc)              # (B,n,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                # (B,n,H)
+
+    def scan_body(h, inp):
+        st, dec = inp                                      # (B,H,P,N),(B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                    # emit PREVIOUS state
+
+    h0 = jnp.zeros((Bsz, H, P, N), jnp.float32)
+    _, h_prev = jax.lax.scan(
+        scan_body,
+        h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)               # (B,n,H,P,N)
+
+    # inter-chunk contribution: C_i · (decay_from_start_i · h_prev)
+    decay_from_start = jnp.exp(cum)                        # (B,n,Q,H)
+    y_inter = jnp.einsum("bniN,bnih,bnhpN->bnihp",
+                         Cc, decay_from_start, h_prev)
+    y = (y_intra + y_inter).reshape(Bsz, n_chunks * Q, H, P)[:, :S]
+    y = y + x.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(Bsz, S, cfg.d_inner).astype(u.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def ssd_init_cache(cfg: SSMConfig, batch: int, dtype=jnp.float32) -> Params:
+    return {
+        "state": jnp.zeros((batch, cfg.n_heads, cfg.head_dim, cfg.d_state),
+                           jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1,
+                           cfg.d_inner + 2 * cfg.d_state), dtype),
+    }
+
+
+def ssd_step(p: Params, cfg: SSMConfig, cache: Params, u_t: jax.Array):
+    """Single decode step.  u_t: (B, d_model).  Returns (y_t, new_cache)."""
+    H, P, N = cfg.n_heads, cfg.head_dim, cfg.d_state
+    zxbcdt = u_t @ p["in_proj"]
+    z = zxbcdt[..., :cfg.d_inner]
+    xBC = zxbcdt[..., cfg.d_inner:2 * cfg.d_inner + 2 * N]
+    dt = zxbcdt[..., 2 * cfg.d_inner + 2 * N:]
+    xBC, conv_win = conv1d_step(p["conv"], cache["conv"], xBC)
+    xBC = jax.nn.silu(xBC)
+    x = xBC[..., :cfg.d_inner].reshape(-1, H, P).astype(jnp.float32)
+    Bmat = xBC[..., cfg.d_inner:cfg.d_inner + N].astype(jnp.float32)
+    Cmat = xBC[..., cfg.d_inner + N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                                       # (B, H)
+    state = (cache["state"] * decay[..., None, None]
+             + jnp.einsum("bhp,bN->bhpN", x * dt[..., None], Bmat))
+    y = jnp.einsum("bhpN,bN->bhp", state, Cmat) + x * p["D"][None, :, None]
+    y = y.reshape(-1, cfg.d_inner).astype(u_t.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], {"state": state, "conv": conv_win}

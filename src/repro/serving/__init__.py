@@ -1,0 +1,1 @@
+"""Multi-tenant serving: the paper's partitioning algorithm at mesh level."""

@@ -1,0 +1,143 @@
+"""Multi-tenant serving engine — Algorithm 1 driving live mesh tenancy.
+
+The engine is the cluster-scale version of the paper's Fig. 4 timeline:
+
+* tenants (models) arrive with a request queue; ``demand`` ≙ Opr — here the
+  total outstanding decode work (tokens × per-token FLOPs);
+* ``TenantMeshManager.rebalance`` is Partition_Calculation+Task_Assignment:
+  contiguous ``model``-axis column slices, heaviest demand → widest slice;
+* when a tenant's queue drains it releases its slice; adjacent free slices
+  merge and ``grow_into_free`` widens the survivors (merge-accelerate);
+* a failed device column evicts its tenants, which simply re-enter the
+  rebalance round — the paper's re-assignment IS the recovery path.
+
+The engine is deliberately mesh-agnostic about execution: each admitted
+tenant runs a :class:`DecodeSession` jit'd for its CURRENT slice width (on
+real hardware the session's jit would target ``manager.submesh(name)``; on
+the CPU test rig the submesh is 1 device wide and sessions run locally).
+``width_history`` records every (time, tenant, width) grant — the serving
+benchmark's equivalent of Fig. 9(c,d).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Callable
+
+from repro.distributed.tenancy import TenantMeshManager
+from repro.serving.kv_cache import DecodeSession, Request
+
+
+@dataclasses.dataclass
+class TenantService:
+    name: str
+    session: DecodeSession
+    queue: list[Request] = dataclasses.field(default_factory=list)
+    flops_per_token: float = 1.0
+    width: int = 0
+    served: int = 0
+
+    @property
+    def outstanding_tokens(self) -> int:
+        q = sum(r.max_new - len(r.out) + len(r.prompt) for r in self.queue)
+        live = sum(r.max_new - len(r.out)
+                   for r in self.session.live.values())
+        return q + live
+
+    @property
+    def demand(self) -> float:
+        """Opr analogue: outstanding work in FLOPs."""
+        return self.outstanding_tokens * self.flops_per_token
+
+    @property
+    def drained(self) -> bool:
+        return not self.queue and not self.session.live
+
+
+class MultiTenantEngine:
+    """Round-based multi-tenant decode executor over a device mesh."""
+
+    def __init__(self, manager: TenantMeshManager):
+        self.manager = manager
+        self.tenants: dict[str, TenantService] = {}
+        self.width_history: list[tuple[int, str, int]] = []
+        self.round = 0
+        self._rid = itertools.count()
+
+    # -- tenancy ------------------------------------------------------------
+    def add_tenant(self, name: str, session: DecodeSession,
+                   flops_per_token: float, min_cols: int = 1) -> TenantService:
+        svc = TenantService(name=name, session=session,
+                            flops_per_token=flops_per_token)
+        self.tenants[name] = svc
+        self.manager.admit(name, demand=svc.demand, min_cols=min_cols)
+        self._rebalance()
+        return svc
+
+    def submit(self, tenant: str, prompt: list[int], max_new: int) -> Request:
+        req = Request(rid=next(self._rid), prompt=prompt, max_new=max_new)
+        self.tenants[tenant].queue.append(req)
+        return req
+
+    def _rebalance(self) -> None:
+        for name, svc in self.tenants.items():
+            self.manager.tenant(name).demand = svc.demand
+        grants = self.manager.rebalance()
+        for name, part in grants.items():
+            self.tenants[name].width = part.cols
+            self.width_history.append((self.round, name, part.cols))
+
+    def _retire_drained(self) -> list[str]:
+        done = [n for n, s in self.tenants.items() if s.drained]
+        for n in done:
+            self.manager.release(n)
+            del self.tenants[n]
+        if done:
+            # merge-accelerate survivors (paper §3.3) — no re-shard storm
+            grown = self.manager.grow_into_free()
+            for name, part in grown.items():
+                if name in self.tenants:
+                    self.tenants[name].width = part.cols
+                    self.width_history.append((self.round, name, part.cols))
+        return done
+
+    # -- execution ----------------------------------------------------------
+    def step(self) -> dict[str, dict[int, int]]:
+        """One engine round: admit from queues, decode every tenant, retire.
+
+        Returns {tenant: {rid: token}} of this round's emissions.
+        """
+        self.round += 1
+        out: dict[str, dict[int, int]] = {}
+        for name, svc in self.tenants.items():
+            while svc.queue and svc.session.can_admit():
+                svc.session.admit(svc.queue.pop(0))
+            if svc.session.live:
+                emitted = svc.session.step()
+                svc.served += len(emitted)
+                out[name] = emitted
+        self._retire_drained()
+        return out
+
+    def run_until_drained(self, max_rounds: int = 10_000) -> int:
+        """Drive rounds until every tenant drains; returns rounds used."""
+        r0 = self.round
+        while self.tenants:
+            if self.round - r0 >= max_rounds:
+                raise RuntimeError(
+                    f"engine did not drain in {max_rounds} rounds; "
+                    f"live={list(self.tenants)}")
+            self.step()
+        return self.round - r0
+
+    # -- fault handling -----------------------------------------------------
+    def fail_column(self, col: int) -> list[str]:
+        """Device-column failure: evict + immediately re-place tenants."""
+        evicted = self.manager.mark_unhealthy(col)
+        self._rebalance()
+        return evicted
+
+    def heal_column(self, col: int) -> None:
+        self.manager.mark_healthy(col)
+        self._rebalance()

@@ -1,0 +1,127 @@
+"""Serving-side cache/session management on top of ``models.model``.
+
+A :class:`DecodeSession` owns a fixed-capacity batched cache for one tenant
+model and multiplexes request slots into it (continuous batching): requests
+claim a free row, prefill writes their prompt KV, decode steps advance every
+live row together, finished rows are released for reuse.
+
+The cache pytree itself comes from ``models.model.init_cache`` so every
+family (KV / SSM state / RG-LRU ring window) gets the right structure.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import (
+    ModelConfig,
+    decode_step,
+    forward,
+    init_cache,
+)
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new: int
+    out: list[int] = dataclasses.field(default_factory=list)
+    slot: int = -1
+
+    @property
+    def done(self) -> bool:
+        return len(self.out) >= self.max_new
+
+
+class DecodeSession:
+    """Fixed-slot continuous-batching session for one model/tenant."""
+
+    def __init__(self, cfg: ModelConfig, params: Any, batch_slots: int,
+                 max_seq: int):
+        self.cfg = cfg
+        self.params = params
+        self.slots = batch_slots
+        self.max_seq = max_seq
+        self.cache = init_cache(cfg, batch_slots, max_seq)
+        self.cache_len = jnp.zeros((batch_slots,), jnp.int32)
+        self.live: dict[int, Request] = {}     # slot -> request
+        self._free = list(range(batch_slots))
+        self._decode = jax.jit(
+            lambda p, c, t, l: decode_step(cfg, p, c, t, l))
+
+    # -- admission ----------------------------------------------------------
+    def can_admit(self) -> bool:
+        return bool(self._free)
+
+    def admit(self, req: Request) -> None:
+        if not self._free:
+            raise RuntimeError("no free slots")
+        slot = self._free.pop()
+        req.slot = slot
+        self.live[slot] = req
+        # sequential prompt ingestion through decode_step (prefill-by-decode;
+        # a fused prefill is the §Perf variant) — each prompt token advances
+        # only this row; other rows are advanced by masking below.
+        for tok in req.prompt:
+            self._step_one_row(slot, tok)
+
+    def _step_one_row(self, slot: int, token: int) -> None:
+        toks = jnp.zeros((self.slots, 1), jnp.int32).at[slot, 0].set(token)
+        logits, new_cache = self._decode(self.params, self.cache, toks,
+                                         self.cache_len)
+        # merge: only this row's cache mutates; others must stay untouched.
+        row = jnp.arange(self.slots) == slot
+        self.cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                row.reshape((1, -1) + (1,) * (new.ndim - 2))
+                if new.ndim >= 2 else row, new, old),
+            new_cache, self.cache)
+        self.cache_len = jnp.where(row, self.cache_len + 1, self.cache_len)
+
+    # -- decode -------------------------------------------------------------
+    def step(self) -> dict[int, int]:
+        """One decode step for every live row; returns {rid: new_token}."""
+        if not self.live:
+            return {}
+        # last emitted (or last prompt) token per row
+        toks = jnp.zeros((self.slots, 1), jnp.int32)
+        for slot, req in self.live.items():
+            last = req.out[-1] if req.out else req.prompt[-1]
+            toks = toks.at[slot, 0].set(last)
+        logits, new_cache = self._decode(self.params, self.cache, toks,
+                                         self.cache_len)
+        live_mask = jnp.zeros((self.slots,), bool)
+        for slot in self.live:
+            live_mask = live_mask.at[slot].set(True)
+        self.cache = jax.tree.map(
+            lambda new, old: jnp.where(
+                live_mask.reshape((1, -1) + (1,) * (new.ndim - 2))
+                if new.ndim >= 2 else live_mask, new, old),
+            new_cache, self.cache)
+        self.cache_len = jnp.where(live_mask, self.cache_len + 1,
+                                   self.cache_len)
+
+        emitted: dict[int, int] = {}
+        greedy = jnp.argmax(logits[:, 0, :], axis=-1)
+        for slot, req in list(self.live.items()):
+            tok = int(greedy[slot])
+            req.out.append(tok)
+            emitted[req.rid] = tok
+            if req.done:
+                self.release(slot)
+        return emitted
+
+    def release(self, slot: int) -> None:
+        req = self.live.pop(slot)
+        req.slot = -1
+        self.cache_len = self.cache_len.at[slot].set(0)
+        self._free.append(slot)
+
+    @property
+    def occupancy(self) -> float:
+        return len(self.live) / self.slots

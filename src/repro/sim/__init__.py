@@ -1,0 +1,20 @@
+"""Scale-Sim + Accelergy analogue: the paper's evaluation toolchain in Python.
+
+``systolic``  — analytic weight-stationary cycle model (partition-aware).
+``energy``    — 45 nm per-access/per-cycle energy model with documented constants.
+``workloads`` — the paper's 12 DNNs (heavy multi-domain + light RNN) as DNNGs.
+``runner``    — baseline-vs-partitioned experiment driver (reproduces Fig. 9).
+"""
+
+from repro.sim.systolic import SystolicConfig, layer_time_fn
+from repro.sim.energy import EnergyModel, EnergyBreakdown
+from repro.sim.runner import run_experiment, ExperimentResult
+
+__all__ = [
+    "SystolicConfig",
+    "layer_time_fn",
+    "EnergyModel",
+    "EnergyBreakdown",
+    "run_experiment",
+    "ExperimentResult",
+]

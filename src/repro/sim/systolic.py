@@ -1,0 +1,53 @@
+"""Analytic weight-stationary systolic-array timing model (Scale-Sim analogue).
+
+The paper evaluates with Scale-Sim [16] in analytical mode; this module is the
+equivalent closed-form model, extended to be **partition-aware** (col offsets,
+per-partition folds) via :func:`repro.core.dataflow.ws_cost`.
+
+Array config follows the paper §4.2: a TPU-v3-like 128×128 PE array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.dataflow import GEMM, DataflowCost, ws_cost
+from repro.core.dnng import LayerShape
+from repro.core.partition import ArrayShape, Partition
+from repro.core.scheduler import TimeFn
+
+
+@dataclasses.dataclass(frozen=True)
+class SystolicConfig:
+    """Hardware parameters of the simulated accelerator (paper §4.2)."""
+
+    rows: int = 128
+    cols: int = 128
+    clock_hz: float = 940e6          # TPU v3 core clock
+    dram_bw_bytes: float = 64e9      # off-chip staging bandwidth (shared bus)
+
+    @property
+    def array(self) -> ArrayShape:
+        return ArrayShape(rows=self.rows, cols=self.cols)
+
+    @property
+    def macs_per_cycle(self) -> int:
+        return self.rows * self.cols
+
+
+def layer_cost(layer: LayerShape, part: Partition) -> DataflowCost:
+    """Cycle/access breakdown of one layer on one partition."""
+    return ws_cost(GEMM.of_layer(layer), part)
+
+
+def layer_cycles(layer: LayerShape, part: Partition) -> int:
+    return layer_cost(layer, part).cycles
+
+
+def layer_time_fn(cfg: SystolicConfig) -> TimeFn:
+    """Scheduler oracle: seconds for ``layer`` on ``part`` at ``cfg.clock_hz``."""
+
+    def fn(layer: LayerShape, part: Partition) -> float:
+        return layer_cycles(layer, part) / cfg.clock_hz
+
+    return fn

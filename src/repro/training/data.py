@@ -1,0 +1,77 @@
+"""Deterministic synthetic LM data pipeline.
+
+Every batch is a pure function of (seed, step) — restart-safe: resuming from
+a checkpoint at step k regenerates exactly the batches k, k+1, … with no
+data-order state to persist.  Batches are placed sharded (batch dim over the
+data axes) straight onto the mesh, so host memory never holds more than its
+own shard on multi-host runs (here: single host, full array).
+
+The token stream is a mixture of Zipf-distributed ids (realistic rank-
+frequency mass for LM loss curves) plus a deterministic structural pattern
+(a repeating n-gram per sequence) that gives the model something learnable —
+loss decreasing over a few hundred steps is a real signal, which the
+quickstart example and integration tests assert.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+
+from repro.distributed.sharding import batch_shardings
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+    zipf_a: float = 1.2
+    ngram: int = 8          # length of the learnable repeating pattern
+
+
+def _host_batch(cfg: DataConfig, step: int) -> dict[str, np.ndarray]:
+    rng = np.random.default_rng(np.uint64(cfg.seed * 1_000_003 + step))
+    # zipf body (clipped to vocab), then overwrite a periodic n-gram
+    z = rng.zipf(cfg.zipf_a, size=(cfg.batch, cfg.seq + 1)) - 1
+    toks = np.minimum(z, cfg.vocab - 1).astype(np.int32)
+    grams = rng.integers(0, cfg.vocab, size=(cfg.batch, cfg.ngram),
+                         dtype=np.int32)
+    reps = -(-(cfg.seq + 1) // cfg.ngram)
+    pattern = np.tile(grams, (1, reps))[:, :cfg.seq + 1]
+    mask = rng.random((cfg.batch, cfg.seq + 1)) < 0.75
+    toks = np.where(mask, pattern, toks)
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def make_batch(cfg: DataConfig, step: int, mesh: Mesh | None = None,
+               extras: dict[str, Any] | None = None) -> dict[str, Any]:
+    """Batch for ``step``: {tokens, labels} (+ stub frontend inputs)."""
+    host = _host_batch(cfg, step)
+    batch: dict[str, Any] = {k: jnp.asarray(v) for k, v in host.items()}
+    if extras:
+        # stub modality frontends: deterministic pseudo-embeddings
+        key = jax.random.fold_in(jax.random.key(cfg.seed), step)
+        for name, shape in extras.items():
+            batch[name] = (jax.random.normal(
+                jax.random.fold_in(key, hash(name) % (2**31)), shape,
+                jnp.float32) * 0.02).astype(jnp.bfloat16)
+    if mesh is not None:
+        sh = batch_shardings(batch, mesh)
+        batch = jax.tree.map(jax.device_put, batch, sh)
+    return batch
+
+
+def batch_iterator(cfg: DataConfig, mesh: Mesh | None = None,
+                   start_step: int = 0,
+                   extras: dict[str, Any] | None = None):
+    step = start_step
+    while True:
+        yield step, make_batch(cfg, step, mesh, extras)
+        step += 1

@@ -1,0 +1,98 @@
+"""AdamW with f32 master weights + cosine LR schedule (pure JAX).
+
+bf16 training keeps a f32 master copy of every parameter inside the
+optimizer state; the model's bf16 params are re-cast from the masters after
+each update (the standard mixed-precision recipe).  The optimizer state is
+a pytree mirroring the params, so the same sharding rules apply leaf-wise.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+
+def cosine_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup → cosine decay to ``min_lr_frac·lr``."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr * step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac * cfg.lr + (1 - cfg.min_lr_frac) * cfg.lr \
+        * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any) -> dict[str, Any]:
+    """master (f32 copy), m, v, step."""
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return {"master": master, "m": zeros,
+            "v": jax.tree.map(jnp.copy, zeros),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms/biases/scalars (standard practice)."""
+    names = [str(getattr(k, "key", k)) for k in path]
+    leaf = names[-1]
+    return leaf not in ("scale", "bias", "ba", "bx", "bq", "bk", "bv",
+                        "lambda", "A_log", "D", "dt_bias")
+
+
+def adamw_update(cfg: OptConfig, params: Any, grads: Any,
+                 state: dict[str, Any]) -> tuple[Any, dict[str, Any]]:
+    """One AdamW step.  Returns (new bf16/bf-dtype params, new state)."""
+    step = state["step"] + 1
+    lr = cosine_lr(cfg, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    def upd(path, p_master, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m2 = cfg.b1 * m + (1 - cfg.b1) * g
+        v2 = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m2 / b1c
+        vh = v2 / b2c
+        delta = mh / (jnp.sqrt(vh) + cfg.eps)
+        if _decay_mask(path):
+            delta = delta + cfg.weight_decay * p_master
+        return p_master - lr * delta, m2, v2
+
+    triples = jax.tree_util.tree_map_with_path(
+        upd, state["master"], grads, state["m"], state["v"])
+    new_master = jax.tree.map(lambda t: t[0], triples,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], triples,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], triples,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_params = jax.tree.map(lambda mst, p: mst.astype(p.dtype),
+                              new_master, params)
+    return new_params, {"master": new_master, "m": new_m, "v": new_v,
+                        "step": step}

@@ -1,0 +1,196 @@
+"""Train-step factories: GSPMD (jit) path and shard_map DP path.
+
+Two step builders, one contract — ``step(params, opt_state, batch) ->
+(params, opt_state, metrics)``:
+
+* :func:`make_train_step` — the production path.  ``jax.jit`` with
+  NamedSharding in/out specs; GSPMD inserts the collectives (this is what
+  the multi-pod dry-run lowers).  Microbatch gradient accumulation happens
+  *inside* the jit via ``lax.scan`` over microbatches (keeps HLO size O(1)
+  in the accumulation factor).
+* :func:`make_dp_train_step` — explicit data-parallel shard_map over the
+  ("pod","data") axes with **gradient compression** (int8 / top-k with error
+  feedback) on the cross-replica reduction, hierarchically: reduce inside a
+  pod over "data", then across pods over "pod" — the two-level tree an ICI/
+  DCN deployment uses.  Params are replicated in this path (pure DP); the
+  GSPMD path covers FSDP+TP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.compression import (
+    CompressionConfig,
+    compressed_mean,
+    init_error_state,
+)
+from repro.distributed.sharding import (
+    MeshRules,
+    FSDP_TP,
+    batch_axes,
+    batch_shardings,
+    params_shardings,
+)
+from repro.models.model import ModelConfig, init_params, loss_fn
+from repro.training.optimizer import (
+    OptConfig,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    opt: OptConfig = OptConfig()
+    microbatches: int = 1          # grad-accumulation factor
+    compression: CompressionConfig = CompressionConfig()
+
+
+def _split_micro(batch: Any, n: int) -> Any:
+    """(B, ...) -> (n, B/n, ...) for lax.scan accumulation."""
+    def r(x):
+        B = x.shape[0]
+        if B % n:
+            raise ValueError(f"batch {B} not divisible by microbatches {n}")
+        return x.reshape((n, B // n) + x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def loss_and_grads(cfg: ModelConfig, params: Any, batch: Any,
+                   microbatches: int = 1) -> tuple[jax.Array, Any]:
+    """Mean loss + grads, with scan-based microbatch accumulation."""
+    if microbatches == 1:
+        return jax.value_and_grad(lambda p: loss_fn(cfg, p, batch))(params)
+    micro = _split_micro(batch, microbatches)
+
+    def body(carry, mb):
+        loss_acc, g_acc = carry
+        l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
+        return (loss_acc + l,
+                jax.tree.map(jnp.add, g_acc, g)), None
+
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros(()), zeros), micro)
+    inv = 1.0 / microbatches
+    return loss * inv, jax.tree.map(lambda g: g * inv, grads)
+
+
+# ---------------------------------------------------------------------------
+# GSPMD path (jit + NamedSharding) — what the dry-run lowers
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh: Mesh,
+                    train: TrainConfig = TrainConfig(),
+                    rules: MeshRules = FSDP_TP,
+                    donate: bool = True) -> Callable:
+    """jit'd (params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, batch):
+        loss, grads = loss_and_grads(cfg, params, batch, train.microbatches)
+        new_params, new_state = adamw_update(train.opt, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "step": new_state["step"]}
+        return new_params, new_state, metrics
+
+    def shardings_for(params_tree, opt_tree, batch_tree):
+        p_sh = params_shardings(params_tree, mesh, rules)
+        o_sh = {
+            "master": params_shardings(opt_tree["master"], mesh, rules),
+            "m": params_shardings(opt_tree["m"], mesh, rules),
+            "v": params_shardings(opt_tree["v"], mesh, rules),
+            "step": NamedSharding(mesh, P()),
+        }
+        b_sh = batch_shardings(batch_tree, mesh)
+        m_sh = {"loss": NamedSharding(mesh, P()),
+                "grad_norm": NamedSharding(mesh, P()),
+                "step": NamedSharding(mesh, P())}
+        return (p_sh, o_sh, b_sh), (p_sh, o_sh, m_sh)
+
+    def jitted(params_tree, opt_tree, batch_tree):
+        in_sh, out_sh = shardings_for(params_tree, opt_tree, batch_tree)
+        return jax.jit(step, in_shardings=in_sh, out_shardings=out_sh,
+                       donate_argnums=(0, 1) if donate else ())
+
+    return step, jitted
+
+
+def init_sharded(cfg: ModelConfig, mesh: Mesh, seed: int = 0,
+                 rules: MeshRules = FSDP_TP) -> tuple[Any, Any]:
+    """Initialise params + opt state directly sharded on ``mesh``."""
+    p_spec = jax.eval_shape(lambda: init_params(cfg, jax.random.key(seed)))
+    p_sh = params_shardings(p_spec, mesh, rules)
+    params = jax.jit(lambda: init_params(cfg, jax.random.key(seed)),
+                     out_shardings=p_sh)()
+    o_spec = jax.eval_shape(lambda: init_opt_state(params))
+    o_sh = {"master": params_shardings(o_spec["master"], mesh, rules),
+            "m": params_shardings(o_spec["m"], mesh, rules),
+            "v": params_shardings(o_spec["v"], mesh, rules),
+            "step": NamedSharding(mesh, P())}
+    opt_state = jax.jit(lambda p: init_opt_state(p), out_shardings=o_sh)(params)
+    return params, opt_state
+
+
+# ---------------------------------------------------------------------------
+# shard_map DP path with gradient compression (hierarchical pod reduce)
+# ---------------------------------------------------------------------------
+
+def make_dp_train_step(cfg: ModelConfig, mesh: Mesh,
+                       train: TrainConfig = TrainConfig()) -> Callable:
+    """Explicit-DP step: params replicated, batch sharded over data axes,
+    grads compressed (error feedback) then mean-reduced per axis level.
+
+    step(params, opt_state, err_state, batch)
+        -> (params, opt_state, err_state, metrics)
+    """
+    axes = batch_axes(mesh)
+
+    def inner(params, opt_state, err, batch):
+        loss, grads = loss_and_grads(cfg, params, batch, train.microbatches)
+        # hierarchical: intra-pod ("data") first, then cross-pod ("pod")
+        for ax in reversed(axes):
+            grads, err = compressed_mean(grads, err, ax, train.compression)
+        loss = jax.lax.pmean(loss, axes[0])
+        if len(axes) > 1:
+            loss = jax.lax.pmean(loss, axes[1])
+        new_params, new_state = adamw_update(train.opt, params, grads,
+                                             opt_state)
+        metrics = {"loss": loss, "grad_norm": global_norm(grads),
+                   "step": new_state["step"]}
+        return new_params, new_state, err, metrics
+
+    rep = P()
+    bspec = P(axes)
+
+    def batch_specs(batch):
+        return jax.tree.map(lambda _: bspec, batch)
+
+    def step(params, opt_state, err, batch):
+        fn = jax.shard_map(
+            inner, mesh=mesh,
+            in_specs=(jax.tree.map(lambda _: rep, params),
+                      jax.tree.map(lambda _: rep, opt_state),
+                      jax.tree.map(lambda _: rep, err),
+                      batch_specs(batch)),
+            out_specs=(jax.tree.map(lambda _: rep, params),
+                       jax.tree.map(lambda _: rep, opt_state),
+                       jax.tree.map(lambda _: rep, err),
+                       {"loss": rep, "grad_norm": rep, "step": rep}),
+            check_vma=False)
+        return jax.jit(fn, donate_argnums=(0, 1, 2))(
+            params, opt_state, err, batch)
+
+    return step
+
+
+def init_dp_error_state(params: Any) -> Any:
+    return init_error_state(
+        jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params))

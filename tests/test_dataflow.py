@@ -1,0 +1,72 @@
+"""Partitioned-WS dataflow model tests (core/dataflow.py)."""
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dataflow import GEMM, partitioned_ws_loopnest, utilization, ws_cost
+from repro.core.dnng import LayerShape
+from repro.core.partition import Partition
+
+
+class TestWsCost:
+    def test_single_fold(self):
+        g = GEMM(T=100, K=128, N=128)
+        c = ws_cost(g, Partition(128, 0, 128))
+        assert c.folds_k == 1 and c.folds_n == 1
+        # 2R + C + T - 2
+        assert c.cycles == 2 * 128 + 128 + 100 - 2
+
+    def test_fold_counts(self):
+        g = GEMM(T=10, K=300, N=500)
+        c = ws_cost(g, Partition(128, 0, 64))
+        assert c.folds_k == 3 and c.folds_n == 8
+
+    def test_col_offset_penalty(self):
+        g = GEMM(T=64, K=128, N=64)
+        c0 = ws_cost(g, Partition(128, 0, 64))
+        c1 = ws_cost(g, Partition(128, 64, 64))
+        assert c1.cycles == c0.cycles + 64  # pass-through fill offset
+
+    def test_mul_en_accounting(self):
+        g = GEMM(T=50, K=128, N=128)
+        part = Partition(128, 0, 128)
+        c = ws_cost(g, part)
+        # feed-phase multiplier firings = T per PE per fold
+        assert c.feed_pe_cycles == 50 * part.n_pes
+        # load-phase latch cycles = R per PE per fold
+        assert c.load_pe_cycles == 128 * part.n_pes
+        assert c.active_pe_cycles == g.macs
+
+    @given(t=st.integers(1, 4096), k=st.integers(1, 4096),
+           n=st.integers(1, 4096), cols=st.sampled_from([16, 32, 64, 128]),
+           start=st.sampled_from([0, 16, 64]))
+    @settings(max_examples=200, deadline=None)
+    def test_properties(self, t, k, n, cols, start):
+        g = GEMM(T=t, K=k, N=n)
+        part = Partition(128, start, cols)
+        c = ws_cost(g, part)
+        assert c.cycles > 0
+        assert c.macs == t * k * n
+        # a PE cannot do more useful MACs than it has cycles
+        assert c.active_pe_cycles <= c.pe_cycles
+        # feed firings cover at least every useful MAC
+        assert c.feed_pe_cycles >= c.active_pe_cycles
+        assert 0 < utilization(g, part) <= 1.0
+
+    def test_utilization_improves_on_fitting_partition(self):
+        """Small-N layers waste columns on wide partitions."""
+        g = GEMM(T=64, K=128, N=16)
+        wide = utilization(g, Partition(128, 0, 128))
+        snug = utilization(g, Partition(128, 0, 16))
+        assert snug > wide
+
+
+class TestLoopNest:
+    def test_three_phases(self):
+        layer = LayerShape.fc("l", 256, 512, batch=64)
+        g = GEMM.of_layer(layer)
+        nest = partitioned_ws_loopnest(g, Partition(128, 0, 32))
+        assert [k for k, _, _ in nest.load] == ["parallel", "parallel"]
+        assert [k for k, _, _ in nest.feed] == ["parallel", "temporal"]
+        assert [k for k, _, _ in nest.drain] == ["parallel", "temporal"]
+        # spatial extents never exceed the partition geometry
+        assert nest.load[0][2] <= 128 and nest.load[1][2] <= 32

@@ -1,0 +1,209 @@
+"""Per-arch smoke tests + decode-vs-forward consistency (all families)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get, list_archs
+from repro.models.model import (
+    _encode,
+    decode_step,
+    forward,
+    init_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+
+def _inputs(cfg, key, B, S):
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (B, S), 0,
+                              cfg.vocab)
+    kw = {}
+    if cfg.frontend == "audio":
+        kw["frames"] = jax.random.normal(
+            jax.random.fold_in(key, 2), (B, cfg.enc_seq, cfg.d_model)) * 0.02
+    elif cfg.frontend == "vision":
+        kw["patches"] = jax.random.normal(
+            jax.random.fold_in(key, 3),
+            (B, cfg.n_patches, cfg.d_model)) * 0.02
+    return toks, kw
+
+
+def _fill_cross_cache(cfg, params, cache, frames):
+    B = frames.shape[0]
+    mem = _encode(cfg, params, frames)
+
+    def fill(bp, mem):
+        kk = (mem @ bp["cross"]["wk"]).reshape(
+            B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+        vv = (mem @ bp["cross"]["wv"]).reshape(
+            B, cfg.enc_seq, cfg.n_kv_heads, cfg.head_dim)
+        if cfg.qkv_bias:
+            kk = kk + bp["cross"]["bk"].astype(kk.dtype).reshape(
+                cfg.n_kv_heads, cfg.head_dim)
+            vv = vv + bp["cross"]["bv"].astype(vv.dtype).reshape(
+                cfg.n_kv_heads, cfg.head_dim)
+        return kk, vv
+
+    ks, vs = jax.vmap(fill, in_axes=(0, None))(params["dec_blocks"], mem)
+    cache["cross_k"] = ks.astype(cache["cross_k"].dtype)
+    cache["cross_v"] = vs.astype(cache["cross_v"].dtype)
+    return cache
+
+
+@pytest.mark.parametrize("arch", list_archs())
+class TestArchSmoke:
+    """One reduced-config forward + train-step + decode per assigned arch."""
+
+    def test_forward_shapes_no_nans(self, arch):
+        cfg = get(arch).smoke
+        key = jax.random.key(0)
+        params = init_params(cfg, key)
+        B, S = 2, 16
+        toks, kw = _inputs(cfg, key, B, S)
+        logits = forward(cfg, params, toks, **kw)
+        assert logits.shape == (B, S, cfg.vocab)
+        assert not jnp.isnan(logits.astype(jnp.float32)).any()
+
+    def test_train_step_loss_finite_grads_flow(self, arch):
+        cfg = get(arch).smoke
+        key = jax.random.key(1)
+        params = init_params(cfg, key)
+        B, S = 2, 16
+        toks, kw = _inputs(cfg, key, B, S)
+        batch = {"tokens": toks, "labels": toks, **kw}
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(cfg, p, batch))(params)
+        assert jnp.isfinite(loss)
+        gnorm = sum(float(jnp.abs(g.astype(jnp.float32)).sum())
+                    for g in jax.tree.leaves(grads))
+        assert np.isfinite(gnorm) and gnorm > 0
+
+    def test_decode_step_shapes(self, arch):
+        cfg = get(arch).smoke
+        key = jax.random.key(2)
+        params = init_params(cfg, key)
+        B = 2
+        cache = init_cache(cfg, B, 32)
+        tok = jnp.zeros((B, 1), jnp.int32)
+        logits, new_cache = decode_step(cfg, params, cache, tok,
+                                        jnp.zeros((B,), jnp.int32))
+        assert logits.shape == (B, 1, cfg.vocab)
+        assert not jnp.isnan(logits.astype(jnp.float32)).any()
+        assert jax.tree.structure(new_cache) == jax.tree.structure(cache)
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "nemotron-4-15b",
+                                  "mistral-nemo-12b", "deepseek-coder-33b",
+                                  "internvl2-26b", "mamba2-780m",
+                                  "recurrentgemma-2b", "whisper-small",
+                                  "dbrx-132b", "phi3.5-moe-42b-a6.6b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode reproduces the full-sequence forward logits.
+
+    The strongest cache-correctness property: catches ring-buffer indexing,
+    SSM state updates, RoPE position handling, cross-attention freezing.
+    MoE uses a generous capacity factor so no tokens are dropped (capacity
+    dropping is the one *semantic* forward/decode difference).
+    """
+    cfg = get(arch).smoke
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    if cfg.frontend == "vision":
+        # decode_step ingests token ids only; the patch prefix is a prefill
+        # concern (serving covers it) — the backbone equivalence is what
+        # this test checks.
+        cfg = dataclasses.replace(cfg, frontend="none")
+    key = jax.random.key(42)
+    params = init_params(cfg, key)
+    B, S = 2, 12
+    toks, kw = _inputs(cfg, key, B, S)
+    full = forward(cfg, params, toks, **kw)
+
+    cache = init_cache(cfg, B, 16)
+    if cfg.family == "encdec":
+        cache = _fill_cross_cache(cfg, params, cache, kw["frames"])
+    clen = jnp.zeros((B,), jnp.int32)
+    outs = []
+    for i in range(S):
+        lg, cache = decode_step(cfg, params, cache, toks[:, i:i + 1], clen)
+        clen = clen + 1
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1).astype(jnp.float32)
+    ref = full.astype(jnp.float32)
+    rel = float(jnp.max(jnp.abs(dec - ref)) / (jnp.max(jnp.abs(ref)) + 1e-9))
+    assert rel < 2e-2, f"{arch}: decode diverges from forward (rel {rel})"
+
+
+def test_prefill_matches_forward_last_position():
+    cfg = get("llama3.2-3b").smoke
+    key = jax.random.key(7)
+    params = init_params(cfg, key)
+    toks, _ = _inputs(cfg, key, 2, 16)
+    full = forward(cfg, params, toks)
+    last = prefill(cfg, params, toks)
+    np.testing.assert_allclose(
+        np.asarray(last[:, 0]).astype(np.float32),
+        np.asarray(full[:, -1]).astype(np.float32), rtol=2e-2, atol=2e-2)
+
+
+def test_local_attention_window_respected():
+    """RecurrentGemma local attention must not see past the window."""
+    spec = get("recurrentgemma-2b")
+    cfg = spec.smoke  # window 16
+    key = jax.random.key(3)
+    params = init_params(cfg, key)
+    B, S = 1, 24
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    base = forward(cfg, params, toks)
+    # perturb a token OUTSIDE the window of the last position
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)
+    out2 = forward(cfg, params, toks2)
+    # the recurrent (RG-LRU) path DOES carry long-range state, so full
+    # equality is not expected — but attention contributions beyond the
+    # window must be absent in an attention-only config.
+    attn_only = dataclasses.replace(cfg, pattern=("attn",), n_layers=1)
+    p2 = init_params(attn_only, key)
+    a = forward(attn_only, p2, toks)
+    b = forward(attn_only, p2, toks2)
+    np.testing.assert_allclose(
+        np.asarray(a[0, -1]).astype(np.float32),
+        np.asarray(b[0, -1]).astype(np.float32), rtol=1e-5, atol=1e-5)
+
+
+def test_full_configs_match_assignment():
+    """The exact published dimensions from the assignment block."""
+    expect = {
+        "whisper-small": dict(n_layers=12, d_model=768, n_heads=12,
+                              n_kv_heads=12, d_ff=3072, vocab=51865),
+        "internvl2-26b": dict(n_layers=48, d_model=6144, n_heads=48,
+                              n_kv_heads=8, d_ff=16384, vocab=92553),
+        "dbrx-132b": dict(n_layers=40, d_model=6144, n_heads=48,
+                          n_kv_heads=8, d_ff=10752, vocab=100352,
+                          n_experts=16, top_k=4),
+        "phi3.5-moe-42b-a6.6b": dict(n_layers=32, d_model=4096, n_heads=32,
+                                     n_kv_heads=8, d_ff=6400, vocab=32064,
+                                     n_experts=16, top_k=2),
+        "deepseek-coder-33b": dict(n_layers=62, d_model=7168, n_heads=56,
+                                   n_kv_heads=8, d_ff=19200, vocab=32256),
+        "llama3.2-3b": dict(n_layers=28, d_model=3072, n_heads=24,
+                            n_kv_heads=8, d_ff=8192, vocab=128256),
+        "nemotron-4-15b": dict(n_layers=32, d_model=6144, n_heads=48,
+                               n_kv_heads=8, d_ff=24576, vocab=256000,
+                               mlp_kind="relu2"),
+        "mistral-nemo-12b": dict(n_layers=40, d_model=5120, n_heads=32,
+                                 n_kv_heads=8, d_ff=14336, vocab=131072),
+        "mamba2-780m": dict(n_layers=48, d_model=1536, vocab=50280,
+                            ssm_state=128),
+        "recurrentgemma-2b": dict(n_layers=26, d_model=2560, n_heads=10,
+                                  n_kv_heads=1, d_ff=7680, vocab=256000,
+                                  window=2048),
+    }
+    for arch, fields in expect.items():
+        cfg = get(arch).model
+        for f, v in fields.items():
+            assert getattr(cfg, f) == v, (arch, f, getattr(cfg, f), v)

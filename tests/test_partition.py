@@ -1,0 +1,115 @@
+"""Algorithm 1 unit + property tests (core/partition.py)."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dnng import LayerShape
+from repro.core.partition import (
+    ArrayShape,
+    Partition,
+    PartitionSet,
+    partition_calculation,
+    task_assignment,
+)
+
+
+class TestPartitionCalculation:
+    def test_paper_example(self):
+        # §3.2: 128×128 with 4 partitions -> 128×32 each
+        parts = partition_calculation(ArrayShape(128, 128), 4)
+        assert len(parts) == 4
+        assert all(p.rows == 128 for p in parts)
+        assert all(p.cols == 32 for p in parts)
+
+    def test_single(self):
+        (p,) = partition_calculation(ArrayShape(128, 128), 1)
+        assert (p.rows, p.cols, p.col_start) == (128, 128, 0)
+
+    def test_remainder_goes_to_first(self):
+        parts = partition_calculation(ArrayShape(128, 128), 3)
+        assert [p.cols for p in parts] == [44, 42, 42]
+        assert sum(p.cols for p in parts) == 128
+
+    def test_more_tasks_than_columns(self):
+        parts = partition_calculation(ArrayShape(8, 4), 100)
+        assert len(parts) == 4  # clamped; no zero-width slices
+        assert all(p.cols == 1 for p in parts)
+
+    @given(cols=st.integers(1, 512), n=st.integers(1, 64))
+    @settings(max_examples=200, deadline=None)
+    def test_tiles_exactly(self, cols, n):
+        parts = partition_calculation(ArrayShape(16, cols), n)
+        assert sum(p.cols for p in parts) == cols
+        cursor = 0
+        for p in sorted(parts, key=lambda p: p.col_start):
+            assert p.col_start == cursor
+            cursor += p.cols
+
+
+class TestTaskAssignment:
+    def test_heaviest_to_largest(self):
+        heavy = LayerShape.fc("h", 4096, 4096)
+        light = LayerShape.fc("l", 16, 16)
+        parts = [Partition(128, 0, 16), Partition(128, 16, 112)]
+        out = task_assignment(
+            [("a", 0, light), ("b", 0, heavy)], parts)
+        by_tenant = {a.tenant: a.partition for a in out}
+        assert by_tenant["b"].cols == 112
+        assert by_tenant["a"].cols == 16
+
+    def test_extra_layers_left_unmatched(self):
+        l = LayerShape.fc("l", 8, 8)
+        out = task_assignment([("a", 0, l), ("b", 0, l)],
+                              [Partition(4, 0, 4)])
+        assert len(out) == 1
+
+
+class TestPartitionSet:
+    def test_allocate_free_merge(self):
+        ps = PartitionSet(ArrayShape(128, 128))
+        a = ps.allocate("a", 32)
+        b = ps.allocate("b", 32)
+        c = ps.allocate("c", 64)
+        assert ps.utilization == 1.0
+        ps.free("b")
+        ps.check()
+        ps.free("a")
+        ps.check()
+        # a+b must have merged into one 64-wide free slice
+        assert any(p.cols == 64 for p in ps.free_partitions)
+        ps.free("c")
+        assert len(ps.free_partitions) == 1
+        assert ps.free_partitions[0].cols == 128
+
+    def test_double_allocate_rejected(self):
+        ps = PartitionSet(ArrayShape(8, 8))
+        ps.allocate("a", 4)
+        with pytest.raises(ValueError):
+            ps.allocate("a", 2)
+
+    def test_free_unknown_rejected(self):
+        ps = PartitionSet(ArrayShape(8, 8))
+        with pytest.raises(KeyError):
+            ps.free("ghost")
+
+    @given(st.lists(
+        st.tuples(st.sampled_from(["alloc", "free"]), st.integers(0, 9),
+                  st.integers(1, 32)),
+        min_size=1, max_size=60))
+    @settings(max_examples=200, deadline=None)
+    def test_invariants_under_random_ops(self, ops):
+        """free+busy always tile [0, cols); free slices always maximal."""
+        ps = PartitionSet(ArrayShape(16, 64))
+        live = set()
+        for kind, tid, cols in ops:
+            name = f"t{tid}"
+            if kind == "alloc" and name not in live:
+                try:
+                    ps.allocate(name, cols)
+                    live.add(name)
+                except ValueError:
+                    pass  # no slice wide enough — legal outcome
+            elif kind == "free" and name in live:
+                ps.free(name)
+                live.remove(name)
+            ps.check()  # the invariant

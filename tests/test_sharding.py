@@ -1,0 +1,109 @@
+"""Sharding-rule tests (distributed/sharding.py)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get, params_spec
+from repro.distributed.sharding import (
+    FSDP_TP,
+    REPLICATED,
+    TP_ONLY,
+    batch_shardings,
+    cache_shardings,
+    logical_axes_of,
+    param_pspec,
+    params_shardings,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import init_cache
+
+
+MESH = make_host_mesh()  # (n_dev, 1) — axis names data/model
+
+
+def _leaves_with_specs(tree, mesh, rules):
+    sh = params_shardings(tree, mesh, rules)
+    return list(zip(jax.tree_util.tree_leaves_with_path(tree),
+                    jax.tree.leaves(sh)))
+
+
+@pytest.mark.parametrize("arch", ["llama3.2-3b", "dbrx-132b", "mamba2-780m",
+                                  "recurrentgemma-2b", "whisper-small"])
+@pytest.mark.parametrize("rules", [FSDP_TP, TP_ONLY, REPLICATED])
+def test_every_leaf_gets_valid_spec(arch, rules):
+    tree = params_spec(get(arch).smoke)
+    for (path, leaf), sh in _leaves_with_specs(tree, MESH, rules):
+        spec = sh.spec
+        assert len(spec) <= leaf.ndim
+        # sharded dims must divide (the divisibility fallback guarantee)
+        sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+        for dim, ax in zip(leaf.shape, spec):
+            if ax is None:
+                continue
+            axes = ax if isinstance(ax, tuple) else (ax,)
+            total = 1
+            for a in axes:
+                total *= sizes[a]
+            assert dim % total == 0, (path, leaf.shape, spec)
+
+
+def test_logical_axes_stacked_blocks():
+    tree = params_spec(get("llama3.2-3b").smoke)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        names = [str(getattr(k, "key", k)) for k in path]
+        axes = logical_axes_of(path, leaf)
+        if names[0] == "blocks":
+            assert axes[0] == "layers"
+        if names[-1] == "wq":
+            assert axes[-2:] == ("embed", "heads")
+
+
+def test_moe_expert_axis():
+    tree = params_spec(get("dbrx-132b").smoke)
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if "moe" in names and names[-1] in ("gate", "up", "down"):
+            axes = logical_axes_of(path, leaf)
+            assert "expert" in axes
+            assert leaf.ndim == 4  # (layers, E, in, out)
+
+
+def test_batch_shardings_dim0():
+    batch = {"tokens": jax.ShapeDtypeStruct((8, 16), jnp.int32),
+             "odd": jax.ShapeDtypeStruct((7, 3), jnp.float32)}
+    sh = batch_shardings(batch, MESH)
+    n = MESH.devices.size
+    if n > 1:
+        assert sh["tokens"].spec == P(("data",))
+        assert sh["odd"].spec == P()  # 7 not divisible -> replicate
+    else:
+        assert sh["tokens"].spec in (P(("data",)), P())
+
+
+def test_cache_shardings_kv_seq_dim():
+    cfg = get("llama3.2-3b").smoke
+    cache = jax.eval_shape(lambda: init_cache(cfg, 8, 32))
+    sh = cache_shardings(cache, MESH)
+    specs = jax.tree.leaves(sh)
+    assert all(hasattr(s, "spec") for s in specs)
+
+
+def test_tuned_profiles_are_valid():
+    """Every measured tuned profile factorizes 256 chips and respects the
+    framework's own divisibility constraints for its arch."""
+    from repro.configs import ARCHS, TUNED_PROFILES
+    assert set(TUNED_PROFILES) == set(ARCHS)
+    for arch, prof in TUNED_PROFILES.items():
+        data, model = prof["mesh"]
+        assert data * model == 256, (arch, prof)
+        assert prof["q_chunks"] >= 1
+        assert prof["attn_chunk"] in (512, 1024, 2048)
+        cfg = ARCHS[arch].model
+        # mesh-override archs: TP divides q-heads, EXCEPT whisper where
+        # the measured optimum trades head divisibility for exact
+        # batch=data fit (EXPERIMENTS.md §Perf H17 — its heads are small
+        # enough that contraction-sharded attention is cheap)
+        if model != 16 and cfg.n_heads and arch != "whisper-small":
+            assert cfg.n_heads % model == 0, (arch, model, cfg.n_heads)

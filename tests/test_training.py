@@ -1,0 +1,216 @@
+"""Training-substrate tests: optimizer, microbatching, data, checkpoints."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.launch.mesh import make_host_mesh
+from repro.training import checkpoint as ckpt
+from repro.training.data import DataConfig, make_batch
+from repro.training.optimizer import (
+    OptConfig,
+    adamw_update,
+    cosine_lr,
+    init_opt_state,
+)
+from repro.training.train_loop import (
+    TrainConfig,
+    init_sharded,
+    loss_and_grads,
+    make_train_step,
+)
+
+MESH = make_host_mesh()
+CFG = get("llama3.2-3b").smoke
+
+
+class TestOptimizer:
+    def test_cosine_schedule_shape(self):
+        oc = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100,
+                       min_lr_frac=0.1)
+        lrs = [float(cosine_lr(oc, jnp.asarray(s))) for s in
+               [0, 5, 10, 50, 100]]
+        assert lrs[0] == 0.0
+        assert lrs[1] == pytest.approx(5e-4)
+        assert lrs[2] == pytest.approx(1e-3)
+        assert lrs[3] < lrs[2]
+        assert lrs[4] == pytest.approx(1e-4, rel=1e-3)
+
+    def test_master_weights_are_f32(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16)}
+        st = init_opt_state(params)
+        assert st["master"]["w"].dtype == jnp.float32
+
+    def test_update_moves_params_and_keeps_dtype(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16),
+                  "scale": jnp.ones((4,), jnp.float32)}
+        st = init_opt_state(params)
+        grads = {"w": jnp.ones((4, 4), jnp.float32),
+                 "scale": jnp.ones((4,), jnp.float32)}
+        new, st2 = adamw_update(OptConfig(lr=1e-2, warmup_steps=0),
+                                params, grads, st)
+        assert new["w"].dtype == jnp.bfloat16
+        assert float(st2["step"]) == 1
+        assert not np.allclose(np.asarray(new["w"], np.float32), 1.0)
+
+    def test_no_decay_on_norm_scales(self):
+        params = {"w": jnp.ones((4, 4), jnp.bfloat16),
+                  "scale": jnp.ones((4,), jnp.float32)}
+        st = init_opt_state(params)
+        zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+        new, _ = adamw_update(OptConfig(lr=1e-2, warmup_steps=0,
+                                        weight_decay=0.5),
+                              params, zeros, st)
+        # zero grad + decay: 'w' shrinks, 'scale' must not
+        assert float(np.asarray(new["w"], np.float32).max()) < 1.0
+        np.testing.assert_allclose(np.asarray(new["scale"]), 1.0)
+
+
+class TestMicrobatching:
+    def test_grads_match_unbatched(self):
+        key = jax.random.key(0)
+        from repro.models.model import init_params
+        params = init_params(CFG, key)
+        dcfg = DataConfig(vocab=CFG.vocab, batch=8, seq=16, seed=1)
+        batch = make_batch(dcfg, 0)
+        l1, g1 = loss_and_grads(CFG, params, batch, microbatches=1)
+        l2, g2 = loss_and_grads(CFG, params, batch, microbatches=4)
+        assert float(l1) == pytest.approx(float(l2), rel=2e-2)
+        n1 = np.sqrt(sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                         for x in jax.tree.leaves(g1)))
+        n2 = np.sqrt(sum(float(jnp.sum(jnp.square(x.astype(jnp.float32))))
+                         for x in jax.tree.leaves(g2)))
+        assert n1 == pytest.approx(n2, rel=5e-2)
+
+    def test_indivisible_batch_rejected(self):
+        from repro.models.model import init_params
+        params = init_params(CFG, jax.random.key(0))
+        batch = make_batch(DataConfig(vocab=CFG.vocab, batch=6, seq=8), 0)
+        with pytest.raises(ValueError, match="divisible"):
+            loss_and_grads(CFG, params, batch, microbatches=4)
+
+
+class TestData:
+    def test_deterministic_per_step(self):
+        dcfg = DataConfig(vocab=100, batch=4, seq=16, seed=7)
+        a = make_batch(dcfg, 3)
+        b = make_batch(dcfg, 3)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        c = make_batch(dcfg, 4)
+        assert not np.array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(c["tokens"]))
+
+    def test_labels_are_next_tokens(self):
+        dcfg = DataConfig(vocab=100, batch=2, seq=16, seed=0)
+        b = make_batch(dcfg, 0)
+        assert b["tokens"].shape == b["labels"].shape == (2, 16)
+        assert int(b["tokens"].max()) < 100
+
+    def test_loss_decreases_end_to_end(self):
+        params, opt_state = init_sharded(CFG, MESH, seed=0)
+        _, jitted = make_train_step(
+            CFG, MESH, TrainConfig(opt=OptConfig(lr=1e-2, warmup_steps=5,
+                                                 total_steps=100)))
+        dcfg = DataConfig(vocab=CFG.vocab, batch=8, seq=32, seed=0)
+        step_fn, losses = None, []
+        for i in range(30):
+            batch = make_batch(dcfg, i, MESH)
+            if step_fn is None:
+                step_fn = jitted(params, opt_state, batch)
+            params, opt_state, m = step_fn(params, opt_state, batch)
+            losses.append(float(m["loss"]))
+        assert losses[-1] < losses[0] - 0.4, losses[::6]
+
+
+class TestCheckpoint:
+    def test_roundtrip_bf16(self):
+        tree = {"a": jnp.arange(6, dtype=jnp.bfloat16).reshape(2, 3),
+                "b": {"c": jnp.ones((4,), jnp.float32),
+                      "d": jnp.zeros((), jnp.int32)}}
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 5, tree)
+            assert ckpt.latest_step(d) == 5
+            out = ckpt.restore(d, 5, tree)
+            for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+                assert x.dtype == y.dtype
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+    def test_latest_ignores_tmp(self):
+        with tempfile.TemporaryDirectory() as d:
+            tree = {"a": jnp.ones((2,))}
+            ckpt.save(d, 1, tree)
+            os.makedirs(os.path.join(d, "step_00000009.tmp"))
+            assert ckpt.latest_step(d) == 1
+
+    def test_structure_mismatch_detected(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 1, {"a": jnp.ones((2,))})
+            with pytest.raises(ValueError, match="mismatch"):
+                ckpt.restore(d, 1, {"a": jnp.ones((3,))})
+
+    def test_atomic_commit_overwrites(self):
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 1, {"a": jnp.ones((2,))})
+            ckpt.save(d, 1, {"a": jnp.zeros((2,))})  # re-commit same step
+            out = ckpt.restore(d, 1, {"a": jnp.ones((2,))})
+            np.testing.assert_array_equal(np.asarray(out["a"]), 0.0)
+
+    def test_elastic_restore_with_shardings(self):
+        from repro.distributed.sharding import params_shardings
+        from repro.models.model import init_params
+        params = init_params(CFG, jax.random.key(0))
+        sh = params_shardings(params, MESH)
+        with tempfile.TemporaryDirectory() as d:
+            ckpt.save(d, 2, params)
+            out = ckpt.restore(d, 2, params, shardings=sh)
+            for x, y in zip(jax.tree.leaves(out), jax.tree.leaves(params)):
+                np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+ELASTIC = r"""
+import os, sys, tempfile
+ckpt_dir = sys.argv[1]
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import jax
+from repro.configs import get
+from repro.distributed.sharding import params_shardings
+from repro.models.model import init_params
+from repro.training import checkpoint as ckpt
+import numpy as np
+
+cfg = get("llama3.2-3b").smoke
+template = jax.eval_shape(lambda: init_params(cfg, jax.random.key(0)))
+# restore a 1-device checkpoint onto a (2, 4) mesh — the elastic path
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+sh = params_shardings(template, mesh)
+got = ckpt.restore_latest(ckpt_dir, template, shardings=sh)
+assert got is not None
+step, params = got
+leaf = jax.tree.leaves(params)[0]
+assert len(leaf.sharding.device_set) >= 1
+total = sum(x.size for x in jax.tree.leaves(params))
+print("ELASTIC_OK", step, total)
+"""
+
+
+def test_elastic_reshard_across_meshes(tmp_path):
+    """Checkpoint written on THIS process's 1-device mesh restores onto an
+    8-device (2,4) mesh in a subprocess — the paper's merge/rebalance as
+    an elastic-scaling event."""
+    import subprocess
+    import sys
+
+    from repro.models.model import init_params
+    params = init_params(CFG, jax.random.key(0))
+    ckpt.save(str(tmp_path), 7, params)
+    r = subprocess.run([sys.executable, "-c", ELASTIC, str(tmp_path)],
+                       capture_output=True, text=True, timeout=600,
+                       env={**os.environ, "PYTHONPATH": "src"})
+    assert "ELASTIC_OK 7" in r.stdout, r.stderr[-2000:]
