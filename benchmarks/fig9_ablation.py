@@ -7,17 +7,19 @@ Two sweeps over the paper's unpublished knobs:
 * light × RNN sequence scale (request chunk length).
 
 Each cell reports makespan / turnaround / energy savings of verbatim
-Algorithm 1 vs the sequential baseline, bracketing the paper's reported
-56 %/44 % time and 35 %/62 % energy numbers.
+Algorithm 1 (``policy="equal"`` through `repro.api.Session`) vs the
+sequential baseline, bracketing the paper's reported 56 %/44 % time and
+35 %/62 % energy numbers.  A third sweep holds the workloads fixed and
+ablates across every registered partition policy.
 """
 
 from __future__ import annotations
 
 import dataclasses
 
+from repro.api import Session, list_policies
 from repro.core.dnng import DNNG
 from repro.sim import workloads as W
-from repro.sim.runner import run_experiment
 
 
 def _scale_batch(g: DNNG, factor: int) -> DNNG:
@@ -59,8 +61,12 @@ def _scale_light(steps_factor: float):
     return W._stagger([melody, gt, dv, hw], 2e-6)
 
 
-def run() -> dict:
+def run(policy_matrix: bool = True) -> dict:
+    """``policy_matrix=False`` skips the workload × policy sweep — the
+    suite driver (benchmarks.run) already computes that exact matrix for
+    BENCH_fig9.json and passes False to avoid simulating it twice."""
     out = {}
+    sess = Session(policy="equal", backend="sim")
     orig_heavy, orig_light = W.heavy_workload, W.light_workload
     try:
         print("== heavy × inference batch ==")
@@ -69,7 +75,7 @@ def run() -> dict:
         for batch in (1, 2, 4, 8):
             W.WORKLOADS["heavy"] = \
                 lambda b=batch: [_scale_batch(g, b) for g in orig_heavy()]
-            r = run_experiment("heavy")
+            r = sess.run("heavy")
             out[f"heavy_b{batch}"] = r
             print(f"{batch:>6}{r.time_saving*100:>11.1f}"
                   f"{r.turnaround_saving*100:>13.1f}"
@@ -80,7 +86,7 @@ def run() -> dict:
               f"{'energy%':>9}")
         for scale in (0.25, 0.5, 1.0, 4.0):
             W.WORKLOADS["light"] = lambda s=scale: _scale_light(s)
-            r = run_experiment("light")
+            r = sess.run("light")
             out[f"light_s{scale}"] = r
             print(f"{scale:>6}{r.time_saving*100:>11.1f}"
                   f"{r.turnaround_saving*100:>13.1f}"
@@ -88,6 +94,18 @@ def run() -> dict:
     finally:
         W.WORKLOADS["heavy"] = orig_heavy
         W.WORKLOADS["light"] = orig_light
+
+    if policy_matrix:
+        print("\n== workload × partition policy ==")
+        print(f"{'policy':>14}{'workload':>9}{'makespan%':>11}"
+              f"{'turnaround%':>13}{'energy%':>9}")
+        for pol in list_policies():
+            for wl in ("heavy", "light"):
+                r = Session(policy=pol, backend="sim").run(wl)
+                out[f"{wl}_{pol}"] = r
+                print(f"{pol:>14}{wl:>9}{r.time_saving*100:>11.1f}"
+                      f"{r.turnaround_saving*100:>13.1f}"
+                      f"{r.energy_saving*100:>9.1f}")
     return out
 
 

@@ -1,16 +1,20 @@
-"""Fig. 9(a,b) — per-DNN computation time, baseline vs dynamic partitioning."""
+"""Fig. 9(a,b) — per-DNN computation time, baseline vs dynamic partitioning.
+
+Runs through `repro.api.Session` so any registered policy can be compared;
+the paper's numbers correspond to ``policy="equal"``.
+"""
 
 from __future__ import annotations
 
-from repro.sim.runner import run_experiment
+from repro.api import Session
 
 
-def run(policies=("paper",)) -> dict:
+def run(policies=("equal",)) -> dict:
     out = {}
     for wl, paper_time in (("heavy", 0.56), ("light", 0.44)):
         for pol in policies:
-            res = run_experiment(wl, policy=pol)
-            tag = wl if pol == "paper" else f"{wl}[{pol}]"
+            res = Session(policy=pol, backend="sim").run(wl)
+            tag = wl if pol in ("equal", "paper") else f"{wl}[{pol}]"
             out[tag] = res
             print(f"== Fig 9({'a' if wl == 'heavy' else 'b'}) {tag} ==")
             print(f"{'DNN':<18}{'baseline ms':>14}{'partitioned ms':>16}")
@@ -26,4 +30,4 @@ def run(policies=("paper",)) -> dict:
 
 
 if __name__ == "__main__":
-    run(policies=("paper", "width_aware"))
+    run(policies=("equal", "width_aware"))

@@ -2,17 +2,50 @@
 
     PYTHONPATH=src python -m benchmarks.run
 
-Order: the Fig. 9 reproduction (time / partitions / energy), the kernel
-bench, the serving bench, then the roofline table (which needs
+Order: the policy × workload matrix (written to ``BENCH_fig9.json`` at the
+repo root so the perf trajectory is machine-trackable across PRs), the
+Fig. 9 reproduction (time / partitions / energy), the sensitivity ablation,
+the kernel bench, the serving bench, then the roofline table (which needs
 ``benchmarks/results/dryrun.json`` from ``repro.launch.dryrun`` — skipped
 with a notice when absent, since the dry-run takes ~30 min of compiles).
 """
 
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_fig9.json")
+
+
+def emit_bench_json(path: str = BENCH_JSON) -> dict:
+    """Fig. 9 matrix over every registered policy, machine-readable.
+
+    One row per workload × policy with time/turnaround/energy savings,
+    utilization and the partition-width histogram — the cross-PR perf
+    trajectory record.
+    """
+    from repro.api import Session, list_policies
+
+    rows = []
+    for pol in list_policies():
+        for wl in ("heavy", "light"):
+            rows.append(Session(policy=pol, backend="sim").run(wl).as_dict())
+    blob = {"benchmark": "fig9", "backend": "sim", "results": rows}
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"{'policy':>14}{'workload':>9}{'time%':>8}{'turnar%':>9}"
+          f"{'energy%':>9}{'util%':>7}")
+    for r in rows:
+        print(f"{r['policy']:>14}{r['workload']:>9}"
+              f"{r['time_saving']*100:>8.1f}{r['turnaround_saving']*100:>9.1f}"
+              f"{r['energy_saving']*100:>9.1f}{r['utilization']*100:>7.1f}")
+    print(f"wrote {path}")
+    return blob
 
 
 def main() -> int:
@@ -26,9 +59,14 @@ def main() -> int:
     )
 
     print("#" * 72)
+    print("# Fig 9 policy x workload matrix -> BENCH_fig9.json")
+    print("#" * 72)
+    emit_bench_json()
+
+    print("#" * 72)
     print("# Fig 9(a,b) — computation time")
     print("#" * 72)
-    fig9_time.run(policies=("paper", "width_aware"))
+    fig9_time.run(policies=("equal", "width_aware"))
 
     print("#" * 72)
     print("# Fig 9(c,d) — partition assignment")
@@ -44,7 +82,7 @@ def main() -> int:
     print("# Fig 9 sensitivity ablation (unpublished workload knobs)")
     print("#" * 72)
     from benchmarks import fig9_ablation
-    fig9_ablation.run()
+    fig9_ablation.run(policy_matrix=False)  # matrix already in BENCH_fig9
 
     print("#" * 72)
     print("# kernel bench — partitioned-WS fused GEMM")

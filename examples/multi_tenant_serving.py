@@ -1,10 +1,12 @@
 """Multi-tenant serving with dynamic partitioning + fault injection.
 
 Three architectures (dense llama, SSM mamba2, hybrid recurrentgemma) share
-one device mesh under Algorithm-1 tenancy.  Mid-run, a device column fails:
-the affected tenant is evicted, re-placed by the same Task_Assignment that
-handles arrivals, and the run completes — the paper's merge/re-assign logic
-IS the fault-tolerance story.
+one device mesh under Algorithm-1 tenancy, with the partition policy chosen
+by name from the `repro.api` registry (``proportional`` here — MoCA-style
+demand-weighted slices; the llama tenant is pinned to SLA tier 0).
+Mid-run, a device column fails: the affected tenant is evicted, re-placed
+by the same policy that handles arrivals, and the run completes — the
+paper's merge/re-assign logic IS the fault-tolerance story.
 
     PYTHONPATH=src python examples/multi_tenant_serving.py
 """
@@ -22,7 +24,7 @@ TENANTS = ["llama3.2-3b", "mamba2-780m", "recurrentgemma-2b"]
 
 mesh = make_host_mesh(model=1)
 mgr = TenantMeshManager(mesh, "model")
-eng = MultiTenantEngine(mgr)
+eng = MultiTenantEngine(mgr, policy="proportional")
 
 key = jax.random.key(0)
 for i, name in enumerate(TENANTS):
@@ -30,10 +32,10 @@ for i, name in enumerate(TENANTS):
     params = init_params(cfg, jax.random.fold_in(key, i))
     sess = DecodeSession(cfg, params, batch_slots=2, max_seq=64)
     flops_tok = 2.0 * sum(x.size for x in jax.tree.leaves(params))
-    eng.add_tenant(name, sess, flops_per_token=flops_tok)
+    eng.add_tenant(name, sess, flops_per_token=flops_tok, tier=i)
     for r in range(3):
         eng.submit(name, prompt=[1 + r, 2, 3], max_new=6 + 2 * i)
-    print(f"admitted {name} (family={cfg.family}), 3 requests")
+    print(f"admitted {name} (family={cfg.family}, tier={i}), 3 requests")
 
 print("\n-- running 5 rounds --")
 for _ in range(5):

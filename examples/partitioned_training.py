@@ -28,7 +28,9 @@ from repro.training.train_loop import (
 )
 
 mesh = make_host_mesh(model=1)
-mgr = TenantMeshManager(mesh, "model")
+# demand-weighted slices via the repro.api policy registry ("equal" would
+# reproduce the paper's Algorithm 1 verbatim)
+mgr = TenantMeshManager(mesh, "model", policy="proportional")
 mgr.admit("llama", demand=10.0)
 mgr.admit("mamba", demand=5.0)
 grants = mgr.rebalance()

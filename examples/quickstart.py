@@ -1,6 +1,7 @@
 """Quickstart: the paper's algorithm end-to-end in 60 seconds on CPU.
 
-1. Reproduce Fig. 9 (heavy workload): dynamic partitioning vs sequential.
+1. Reproduce Fig. 9 (heavy workload) through `repro.api.Session`: dynamic
+   partitioning vs sequential, then compare partition policies.
 2. Run the fused multi-tenant Pallas GEMM (interpret mode) and check it
    against the oracle.
 3. Train a reduced llama3.2-3b for 30 steps and watch the loss drop.
@@ -12,14 +13,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-# -- 1. the paper's simulation ------------------------------------------
-from repro.sim.runner import format_report, run_experiment
+# -- 1. the paper's simulation, via the API front door -------------------
+from repro.api import Session, list_policies
+from repro.sim.runner import format_report
 
 print("=" * 70)
-print("1) Fig. 9 reproduction — heavy workload")
+print("1) Fig. 9 reproduction — heavy workload (policy='equal' = Alg. 1)")
 print("=" * 70)
-res = run_experiment("heavy")
+res = Session(policy="equal", backend="sim").run("heavy")
 print(format_report(res))
+
+print()
+print("policy comparison (heavy):")
+for pol in list_policies():
+    r = Session(policy=pol, backend="sim").run("heavy")
+    print(f"  {pol:<14} time saving {r.time_saving*100:5.1f}%  "
+          f"energy saving {r.energy_saving*100:5.1f}%")
 
 # -- 2. the kernel -------------------------------------------------------
 from repro.kernels import fused_tenant_gemm

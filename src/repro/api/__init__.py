@@ -1,0 +1,56 @@
+"""`repro.api` — the public front door: pluggable policies × backends.
+
+    from repro.api import Session
+    Session(policy="proportional", backend="sim").run("heavy")
+
+Three pieces:
+
+* :mod:`repro.api.policy`  — the :class:`PartitionPolicy` protocol
+  (``split`` / ``assign``) and the string-keyed registry with the
+  ``equal`` (paper Algorithm 1), ``proportional``, ``best_fit``,
+  ``priority`` and ``width_aware`` implementations;
+* :mod:`repro.api.backend` — the :class:`Accelerator` protocol
+  (``time_fn`` / ``stage_model`` / ``energy``) with the ``sim``
+  (Scale-Sim/Accelergy analogue) and ``mesh`` (device-grid latency)
+  backends;
+* :mod:`repro.api.session` — the :class:`Session` facade binding one
+  policy to one backend and running workloads by name.
+"""
+
+from repro.api.policy import (
+    AssignContext,
+    BestFitPolicy,
+    EqualPolicy,
+    PartitionPolicy,
+    PriorityPolicy,
+    ProportionalPolicy,
+    TenantDemand,
+    WidthAwarePolicy,
+    get_policy,
+    list_policies,
+    register_policy,
+    resolve_policy,
+)
+from repro.api.backend import (
+    Accelerator,
+    MeshBackend,
+    SimBackend,
+    get_backend,
+    list_backends,
+    register_backend,
+    resolve_backend,
+)
+from repro.api.session import Session, SessionResult
+
+__all__ = [
+    # policies
+    "PartitionPolicy", "TenantDemand", "AssignContext",
+    "EqualPolicy", "ProportionalPolicy", "BestFitPolicy", "PriorityPolicy",
+    "WidthAwarePolicy",
+    "register_policy", "get_policy", "list_policies", "resolve_policy",
+    # backends
+    "Accelerator", "SimBackend", "MeshBackend",
+    "register_backend", "get_backend", "list_backends", "resolve_backend",
+    # session
+    "Session", "SessionResult",
+]

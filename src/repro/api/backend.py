@@ -1,0 +1,148 @@
+"""Accelerator backend protocol — one execution surface for every frontend.
+
+A backend answers three questions the scheduler and Session need:
+
+* ``array``        — the partitionable geometry (PE rows × columns, or mesh
+  rows × device columns);
+* ``time_fn``      — the compute oracle ``(layer, partition) -> seconds``;
+* ``stage_model``  — the shared-bus staging model (None = staging is free);
+* ``energy``       — post-hoc energy accounting for a finished schedule
+  (None when the backend has no energy model).
+
+Registered backends (``list_backends()``):
+
+=========  ==============================================================
+``sim``    the paper's evaluation rig: Scale-Sim-style analytic cycle
+           model (`repro.sim.systolic`) + 45 nm Accelergy-style energy
+           (`repro.sim.energy`) on a 128×128 weight-stationary array
+``mesh``   cluster-scale analogue: device columns along the ``model``
+           mesh axis with the `repro.distributed.tenancy` latency
+           estimator (compute + per-layer collective + launch overhead)
+=========  ==============================================================
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Protocol, runtime_checkable
+
+from repro.core.dnng import LayerShape
+from repro.core.partition import ArrayShape
+from repro.core.scheduler import ScheduleResult, StageModel, TimeFn
+
+
+@runtime_checkable
+class Accelerator(Protocol):
+    """Structural protocol — any object with this surface is a backend."""
+
+    name: str
+
+    @property
+    def array(self) -> ArrayShape: ...
+
+    def time_fn(self) -> TimeFn: ...
+
+    def stage_model(self) -> Optional[StageModel]: ...
+
+    def energy(self, result: ScheduleResult,
+               layers_by_key: dict[tuple[str, int], LayerShape],
+               baseline_pe: bool) -> Optional[object]: ...
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_BACKENDS: dict[str, type] = {}
+
+
+def register_backend(name: str):
+    def deco(cls):
+        if name in _BACKENDS:
+            raise ValueError(f"backend {name!r} already registered")
+        cls.name = name
+        _BACKENDS[name] = cls
+        return cls
+
+    return deco
+
+
+def list_backends() -> list[str]:
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str, **kwargs) -> Accelerator:
+    if name not in _BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; registered: "
+                         f"{list_backends()}")
+    return _BACKENDS[name](**kwargs)
+
+
+def resolve_backend(backend: "str | Accelerator", **kwargs) -> Accelerator:
+    if isinstance(backend, str):
+        return get_backend(backend, **kwargs)
+    if kwargs:
+        raise ValueError("backend kwargs only apply to string-keyed backends")
+    if isinstance(backend, Accelerator):
+        return backend
+    raise ValueError(f"not an Accelerator backend: {backend!r}")
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+@register_backend("sim")
+class SimBackend:
+    """The paper's evaluation toolchain: analytic 128×128 WS systolic array
+    (Scale-Sim analogue) + the 45 nm Mul_En energy model."""
+
+    def __init__(self, config=None, energy=None):
+        from repro.sim.energy import EnergyModel
+        from repro.sim.systolic import SystolicConfig
+        self.config = config or SystolicConfig()
+        self.energy_model = energy or EnergyModel()
+
+    @property
+    def array(self) -> ArrayShape:
+        return self.config.array
+
+    def time_fn(self) -> TimeFn:
+        from repro.sim.systolic import layer_time_fn
+        return layer_time_fn(self.config)
+
+    def stage_model(self) -> Optional[StageModel]:
+        return StageModel(dram_bw_bytes=self.config.dram_bw_bytes)
+
+    def energy(self, result, layers_by_key, baseline_pe):
+        from repro.sim.energy import schedule_energy_with_layers
+        return schedule_energy_with_layers(result, layers_by_key,
+                                           self.config, self.energy_model,
+                                           baseline_pe=baseline_pe)
+
+
+@register_backend("mesh")
+class MeshBackend:
+    """Cluster-scale backend: ``n_cols`` device columns along the ``model``
+    mesh axis, timed by the `repro.distributed.tenancy` latency estimator
+    (per-slice compute + output collective + dispatch overhead).  No energy
+    model — mesh runs report time/utilization only."""
+
+    def __init__(self, n_cols: int = 8, rows: int = 1, latency=None):
+        # lazy: distributed.tenancy imports jax, which sim-only users may
+        # not want on the import path of `repro.api`
+        from repro.distributed.tenancy import MeshLatencyModel
+        self.latency = latency or MeshLatencyModel()
+        self._array = ArrayShape(rows=rows, cols=n_cols)
+
+    @property
+    def array(self) -> ArrayShape:
+        return self._array
+
+    def time_fn(self) -> TimeFn:
+        return self.latency.time_fn()
+
+    def stage_model(self) -> Optional[StageModel]:
+        return StageModel(dram_bw_bytes=self.latency.host_bw_bytes)
+
+    def energy(self, result, layers_by_key, baseline_pe):
+        return None

@@ -1,0 +1,468 @@
+"""Pluggable partition policies — Algorithm 1 generalised to a protocol.
+
+The paper's Algorithm 1 is ONE policy: equal ⌊Y/n⌋ vertical splits
+(Partition_Calculation, Fig. 5 lines 15–19) plus heaviest-``Opr``-first
+assignment (Task_Assignment, lines 20–27).  MoCA (Kim et al., 2023) and the
+systolic-vector scheduling study (Kim et al., 2022) both show the *policy*
+choice dominates under dynamic multi-tenant load, so this module turns the
+two steps into a protocol every consumer (scheduler, serving engine, mesh
+tenancy manager) programs against:
+
+* :meth:`PartitionPolicy.split`  — cut a fully-free array into per-tenant
+  vertical slices.  Returned slices always **tile** ``[0, cols)``; the
+  remainder goes to the highest-priority tenant, as in the paper.
+* :meth:`PartitionPolicy.assign` — bind ready layers to offered slices.  A
+  policy may *trim* a grant (return a sub-slice anchored at the offered
+  ``col_start``) or *decline* one (omit it) — the scheduler re-offers on the
+  next completion event.
+* :meth:`PartitionPolicy.widths` / :meth:`PartitionPolicy.order` — the
+  demand→width core both of the above share; also used directly by
+  ``TenantMeshManager.rebalance`` where slices are carved out of a
+  partially-fenced free list instead of a whole array.
+
+Registered implementations (``list_policies()``):
+
+==============  ============================================================
+``equal``       the paper verbatim: ⌊Y/n⌋ widths, heaviest→largest, whole
+                grants (alias: ``paper``)
+``proportional``MoCA-style demand-weighted widths (largest-remainder
+                apportionment over ``demand``), heaviest→largest
+``best_fit``    demand-capped widths + smallest-slice-that-fits assignment,
+                grants trimmed to the layer's ``gemm_n`` (fold-waste killer)
+``priority``    SLA tiers: reservation floors via ``min_cols`` honoured
+                tier-by-tier, leftover split equally, high tiers assigned
+                first
+``width_aware`` the seed scheduler's beyond-paper refinement: equal splits
+                with demand-trimmed grants and hold-for-width declines
+==============  ============================================================
+
+Adding a policy is ~30 lines: subclass :class:`PartitionPolicy`, implement
+``widths`` (and optionally ``assign``), decorate with
+``@register_policy("name")``.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+from typing import Callable, Mapping, Optional, Sequence
+
+from repro.core.dnng import LayerShape
+from repro.core.partition import (
+    ArrayShape,
+    Assignment,
+    Partition,
+    partition_calculation,
+    task_assignment,
+)
+
+ReadyLayer = tuple[str, int, LayerShape]  # (tenant, layer_index, layer)
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantDemand:
+    """Policy-facing view of one tenant competing for columns.
+
+    ``demand`` is the Opr analogue (MACs for a layer, outstanding FLOPs for
+    a serving tenant); ``width_demand`` is the number of columns the tenant
+    can actually use (``min(gemm_n, cols)`` for a layer; None = unbounded);
+    ``min_cols`` is a reservation floor (memory footprint / SLA guarantee);
+    ``tier`` is the SLA class — smaller is more important.
+    """
+
+    name: str
+    demand: float = 1.0
+    width_demand: Optional[int] = None
+    min_cols: int = 1
+    tier: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class AssignContext:
+    """Runtime context the scheduler passes to :meth:`PartitionPolicy.assign`.
+
+    ``busy`` is the current tenant→partition occupancy (empty when the whole
+    array is free); ``time_fn`` is the backend's compute oracle, available to
+    policies that weigh opportunity cost (e.g. ``width_aware``'s
+    hold-for-width rule).
+    """
+
+    array: ArrayShape
+    time_fn: Optional[Callable[[LayerShape, Partition], float]] = None
+    busy: Mapping[str, Partition] = dataclasses.field(default_factory=dict)
+
+
+class PartitionPolicy(abc.ABC):
+    """Base class + protocol for partition policies.
+
+    Consumers only rely on ``split``/``assign`` (and the mesh manager on
+    ``order``/``widths``), so third-party policies may also duck-type the
+    same surface without subclassing.
+    """
+
+    name: str = ""
+
+    # -- demand -> width core ----------------------------------------------
+    def order(self, tenants: Sequence[TenantDemand]) -> list[TenantDemand]:
+        """Tenants in grant-priority order (default: heaviest demand first,
+        stable — ties keep arrival order, matching Task_Assignment's sort)."""
+        return sorted(tenants, key=lambda t: -t.demand)
+
+    @abc.abstractmethod
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        """Target column widths per tenant for ``total_cols`` available.
+
+        Only tenants placed this round appear in the result; every returned
+        width is >= 1 and the widths sum to <= ``total_cols`` (``split``
+        hands any remainder to the first tenant in :meth:`order`).
+        """
+
+    def _placements(self, array: ArrayShape,
+                    tenants: Sequence[TenantDemand]
+                    ) -> list[tuple[TenantDemand, Partition]]:
+        """Cut the array per :meth:`widths`, in priority order, remainder
+        to the first tenant — the shared body of split() and place()."""
+        tenants = list(tenants)
+        if not tenants:
+            return []
+        ws = self.widths(array.cols, tenants)
+        placed = [t for t in self.order(tenants) if ws.get(t.name, 0) >= 1]
+        if not placed:
+            return []
+        rem = array.cols - sum(ws[t.name] for t in placed)
+        if rem < 0:
+            raise ValueError(f"{self.name or type(self).__name__}.widths "
+                             f"oversubscribed {array.cols} columns: {ws}")
+        out: list[tuple[TenantDemand, Partition]] = []
+        col = 0
+        for i, t in enumerate(placed):
+            w = ws[t.name] + (rem if i == 0 else 0)
+            out.append((t, Partition(rows=array.rows, col_start=col,
+                                     cols=w)))
+            col += w
+        return out
+
+    # -- the protocol ------------------------------------------------------
+    def split(self, array: ArrayShape,
+              tenants: Sequence[TenantDemand]) -> list[Partition]:
+        """Cut the (fully free) array into per-tenant slices that tile it."""
+        return [p for _, p in self._placements(array, tenants)]
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        """Bind ready layers to offered slices (default: the paper's
+        Task_Assignment — heaviest ``Opr`` → largest slice, whole grants)."""
+        return task_assignment(ready, partitions)
+
+    # -- conveniences ------------------------------------------------------
+    def place(self, array: ArrayShape,
+              tenants: Sequence[TenantDemand]) -> dict[str, Partition]:
+        """Tenant-level convenience for whole-array callers: bind each
+        placed tenant to its slice of the split (priority order, first
+        slice absorbs the remainder).  Note the mesh manager does NOT use
+        this — it carves widths()/order() into a free list that may have
+        fenced (unhealthy) columns."""
+        return {t.name: p for t, p in self._placements(array, tenants)}
+
+    def _demand_cols(self, layer: LayerShape,
+                     ctx: AssignContext | None) -> int:
+        cap = ctx.array.cols if ctx is not None else layer.gemm_n
+        return max(1, min(layer.gemm_n, cap))
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_POLICIES: dict[str, type[PartitionPolicy]] = {}
+_ALIASES = {"paper": "equal"}  # legacy scheduler policy strings
+
+
+def register_policy(name: str):
+    """Class decorator: make a policy constructible by name."""
+
+    def deco(cls: type[PartitionPolicy]) -> type[PartitionPolicy]:
+        if name in _POLICIES:
+            raise ValueError(f"policy {name!r} already registered")
+        cls.name = name
+        _POLICIES[name] = cls
+        return cls
+
+    return deco
+
+
+def list_policies() -> list[str]:
+    return sorted(_POLICIES)
+
+
+def get_policy(name: str, **kwargs) -> PartitionPolicy:
+    key = _ALIASES.get(name, name)
+    if key not in _POLICIES:
+        raise ValueError(f"unknown policy {name!r}; registered: "
+                         f"{list_policies()}")
+    return _POLICIES[key](**kwargs)
+
+
+def resolve_policy(policy: "str | PartitionPolicy") -> PartitionPolicy:
+    """Accept a registry name (or legacy alias) or a policy instance."""
+    if isinstance(policy, str):
+        return get_policy(policy)
+    if callable(getattr(policy, "split", None)) and \
+            callable(getattr(policy, "assign", None)):
+        return policy
+    raise ValueError(f"not a PartitionPolicy: {policy!r}")
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+@register_policy("equal")
+class EqualPolicy(PartitionPolicy):
+    """Algorithm 1 verbatim (paper Fig. 5): ⌊Y/n⌋ equal vertical slices,
+    remainder to the first slice, heaviest-``Opr`` layer → largest slice,
+    grants are whole slices."""
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        if not tenants or total_cols < 1:
+            return {}
+        n = min(len(tenants), total_cols)  # no zero-width slices
+        base = total_cols // n
+        if base < 1:
+            return {}
+        return {t.name: base for t in self.order(tenants)[:n]}
+
+    def split(self, array: ArrayShape,
+              tenants: Sequence[TenantDemand]) -> list[Partition]:
+        # defer to the seed implementation so `equal` is provably the paper
+        if not tenants:
+            return []
+        return partition_calculation(array, len(tenants))
+
+
+def _admit_by_floor(order: Sequence[TenantDemand], total_cols: int,
+                    floor_of) -> list[TenantDemand]:
+    """Admit tenants in priority order while reservation floors still fit."""
+    placed: list[TenantDemand] = []
+    floor_sum = 0
+    for t in order:
+        f = floor_of(t)
+        if floor_sum + f > total_cols:
+            continue
+        placed.append(t)
+        floor_sum += f
+    return placed
+
+
+def _largest_remainder(cols: int,
+                       tenants: Sequence[TenantDemand]) -> dict[str, int]:
+    """Apportion ``cols`` to tenants ∝ demand (Hamilton's method; equal
+    quotas when all demands are zero; ties → earlier tenant)."""
+    total_d = sum(max(t.demand, 0.0) for t in tenants)
+    if total_d > 0:
+        quotas = [cols * max(t.demand, 0.0) / total_d for t in tenants]
+    else:
+        quotas = [cols / len(tenants)] * len(tenants)
+    ws = {t.name: int(q) for t, q in zip(tenants, quotas)}
+    left = cols - sum(ws.values())
+    frac = sorted(range(len(tenants)),
+                  key=lambda i: (-(quotas[i] - int(quotas[i])), i))
+    for i in frac[:left]:
+        ws[tenants[i].name] += 1
+    return ws
+
+
+@register_policy("proportional")
+class ProportionalPolicy(PartitionPolicy):
+    """Demand-weighted widths (MoCA-style): columns are apportioned to
+    tenants proportionally to ``demand`` by the largest-remainder method;
+    any tenant whose proportional share falls under its ``min_cols`` floor
+    is pinned at the floor and the rest re-apportioned."""
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        floor_of = lambda t: max(1, t.min_cols)
+        placed = _admit_by_floor(self.order(tenants), total_cols, floor_of)
+        if not placed:
+            return {}
+        ws: dict[str, int] = {}
+        free = list(placed)
+        cols_left = total_cols
+        while free:
+            shares = _largest_remainder(cols_left, free)
+            short = [t for t in free if shares[t.name] < floor_of(t)]
+            if not short:
+                ws.update(shares)
+                break
+            for t in short:  # pin under-floor tenants, re-apportion the rest
+                ws[t.name] = floor_of(t)
+                cols_left -= floor_of(t)
+                free.remove(t)
+        return ws
+
+
+@register_policy("best_fit")
+class BestFitPolicy(PartitionPolicy):
+    """Width-demand-aware fitting: splits cap each slice near the tenant's
+    usable width (``width_demand`` ≈ ``min(gemm_n, cols)``) and assignment
+    gives each layer the *smallest* offered slice that fits it, trimmed to
+    its demand — narrow layers stop hogging wide slices, wide layers stop
+    folding on slivers."""
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        floor_of = lambda t: max(1, t.min_cols)
+        placed = _admit_by_floor(self.order(tenants), total_cols, floor_of)
+        if not placed:
+            return {}
+        base = max(1, total_cols // len(placed))
+        ws = {}
+        for t in placed:
+            wd = t.width_demand if t.width_demand else base
+            ws[t.name] = max(floor_of(t), min(base, wd))
+        # floors can push the fair-share sum over the array: shave the
+        # lowest-priority tenants back toward their floors
+        over = sum(ws.values()) - total_cols
+        for t in reversed(placed):
+            if over <= 0:
+                break
+            cut = min(ws[t.name] - floor_of(t), over)
+            ws[t.name] -= cut
+            over -= cut
+        leftover = total_cols - sum(ws.values())
+        # grow under-served tenants (demand order) up to their width demand
+        changed = True
+        while leftover > 0 and changed:
+            changed = False
+            for t in placed:
+                if leftover <= 0:
+                    break
+                wd = t.width_demand or total_cols
+                if ws[t.name] < wd:
+                    grow = min(leftover, wd - ws[t.name])
+                    ws[t.name] += grow
+                    leftover -= grow
+                    changed = True
+        return ws
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        layers = sorted(ready, key=lambda t: t[2].opr, reverse=True)
+        avail = sorted(partitions, key=lambda p: (p.n_pes, p.col_start))
+        out: list[Assignment] = []
+        for tenant, idx, layer in layers:
+            if not avail:
+                break
+            demand = self._demand_cols(layer, ctx)
+            pick = next((p for p in avail if p.cols >= demand), None)
+            if pick is None:
+                pick = max(avail, key=lambda p: p.n_pes)
+            avail.remove(pick)
+            got = Partition(rows=pick.rows, col_start=pick.col_start,
+                            cols=min(pick.cols, demand))
+            out.append(Assignment(tenant=tenant, layer_index=idx,
+                                  layer=layer, partition=got))
+        return out
+
+
+@register_policy("priority")
+class PriorityPolicy(PartitionPolicy):
+    """SLA tiers with preemption-free reservation floors.
+
+    Tenants are served tier-by-tier (smaller tier = more important, demand
+    breaks ties).  Every placed tenant is guaranteed its ``min_cols`` floor
+    — admitted in tier order until floors no longer fit — and leftover
+    columns are split equally across the placed set, extras to the highest
+    tiers.  ``assign`` offers the largest slices to the highest tiers.
+
+    ``tiers``/``floors`` override per-tenant metadata by name, so the same
+    policy instance can drive both layer-level scheduling (where DNNGs carry
+    no tier) and serving tenancy.
+    """
+
+    def __init__(self, tiers: Mapping[str, int] | None = None,
+                 floors: Mapping[str, int] | None = None):
+        self.tiers = dict(tiers or {})
+        self.floors = dict(floors or {})
+
+    def _tier(self, name: str, default: int = 0) -> int:
+        return self.tiers.get(name, default)
+
+    def _floor(self, t: TenantDemand) -> int:
+        return max(1, self.floors.get(t.name, t.min_cols))
+
+    def order(self, tenants: Sequence[TenantDemand]) -> list[TenantDemand]:
+        return sorted(tenants,
+                      key=lambda t: (self._tier(t.name, t.tier), -t.demand))
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        order = self.order(tenants)
+        placed: list[TenantDemand] = []
+        floor_sum = 0
+        for t in order:
+            f = self._floor(t)
+            if floor_sum + f > total_cols:
+                continue  # floor unsatisfiable this round: tenant waits
+            placed.append(t)
+            floor_sum += f
+        if not placed:
+            return {}
+        spare = total_cols - floor_sum
+        per, extra = divmod(spare, len(placed))
+        ws = {}
+        for i, t in enumerate(placed):
+            ws[t.name] = self._floor(t) + per + (1 if i < extra else 0)
+        return ws
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        layers = sorted(ready,
+                        key=lambda t: (self._tier(t[0]), -t[2].opr))
+        parts = sorted(partitions, key=lambda p: p.n_pes, reverse=True)
+        return [Assignment(tenant=tenant, layer_index=idx, layer=layer,
+                           partition=part)
+                for (tenant, idx, layer), part in zip(layers, parts)]
+
+
+@register_policy("width_aware")
+class WidthAwarePolicy(EqualPolicy):
+    """The seed scheduler's beyond-paper refinement, now expressed as a
+    policy: equal splits, but (i) a grant is trimmed to the layer's usable
+    width ``min(gemm_n, cols)``, and (ii) *hold-for-width* — a layer
+    declines a sliver under half its demand whose runtime would exceed 2×
+    the demand-width runtime, as long as another tenant is computing (a
+    future merge event is then guaranteed, so no deadlock)."""
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        out: list[Assignment] = []
+        for a in task_assignment(ready, partitions):
+            if self._declines(a.layer, a.partition.cols, ctx):
+                continue
+            w = min(a.partition.cols, self._demand_cols(a.layer, ctx))
+            out.append(dataclasses.replace(
+                a, partition=Partition(rows=a.partition.rows,
+                                       col_start=a.partition.col_start,
+                                       cols=w)))
+        return out
+
+    def _declines(self, layer: LayerShape, slice_cols: int,
+                  ctx: AssignContext | None) -> bool:
+        if ctx is None or ctx.time_fn is None or not ctx.busy:
+            return False
+        demand = self._demand_cols(layer, ctx)
+        if slice_cols * 2 >= demand:
+            return False
+        rows = ctx.array.rows
+        t_here = ctx.time_fn(layer, Partition(rows=rows, col_start=0,
+                                              cols=slice_cols))
+        t_want = ctx.time_fn(layer, Partition(rows=rows, col_start=0,
+                                              cols=demand))
+        return t_here > 2.0 * t_want

@@ -1,0 +1,149 @@
+"""`Session` — the single front door to the reproduction.
+
+    from repro.api import Session
+
+    res = Session(policy="proportional", backend="sim").run("heavy")
+    print(res.time_saving, res.energy_saving, res.partition_histogram())
+
+A Session binds one :class:`~repro.api.policy.PartitionPolicy` to one
+:class:`~repro.api.backend.Accelerator` backend, runs a workload (a name
+from ``repro.sim.workloads.WORKLOADS`` or an explicit ``Sequence[DNNG]``)
+under dynamic partitioning, and — unless ``compare_baseline=False`` — also
+runs the sequential single-tenancy baseline so savings can be reported.
+
+Benchmarks, examples and the serving engine all select policy and backend
+by registry name, so a new policy plugin is immediately runnable everywhere.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter
+from typing import Optional, Sequence
+
+from repro.api.backend import Accelerator, resolve_backend
+from repro.api.policy import PartitionPolicy, resolve_policy
+from repro.core.dnng import DNNG, LayerShape
+from repro.core.scheduler import (
+    ScheduleResult,
+    schedule_dynamic,
+    schedule_sequential,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class SessionResult:
+    """One workload run: dynamic-partitioned schedule vs (optionally) the
+    sequential baseline, with backend energy accounting when available."""
+
+    workload: str
+    policy: str
+    backend: str
+    partitioned: ScheduleResult
+    baseline: Optional[ScheduleResult] = None
+    partitioned_energy: Optional[object] = None
+    baseline_energy: Optional[object] = None
+
+    # -- headline metrics (Fig. 9) ----------------------------------------
+    @property
+    def time_saving(self) -> float:
+        """Fractional makespan reduction vs the sequential baseline."""
+        if self.baseline is None or self.baseline.makespan == 0:
+            return 0.0
+        return 1.0 - self.partitioned.makespan / self.baseline.makespan
+
+    @property
+    def turnaround_saving(self) -> float:
+        """Fractional mean per-DNN completion-time reduction."""
+        if self.baseline is None:
+            return 0.0
+        bsum = sum(self.baseline.completion.values())
+        psum = sum(self.partitioned.completion.values())
+        return 1.0 - psum / bsum if bsum else 0.0
+
+    @property
+    def energy_saving(self) -> float:
+        if self.baseline_energy is None or self.partitioned_energy is None:
+            return 0.0
+        return 1.0 - self.partitioned_energy.total / self.baseline_energy.total
+
+    @property
+    def utilization(self) -> float:
+        return self.partitioned.utilization
+
+    def partition_histogram(self) -> dict[str, int]:
+        """How many layers ran on each partition width (Fig. 9 c,d)."""
+        c = Counter(f"{e.partition.rows}x{e.partition.cols}"
+                    for e in self.partitioned.trace)
+        return dict(sorted(c.items()))
+
+    def as_dict(self) -> dict:
+        """Machine-readable summary (the BENCH_fig9.json row format)."""
+        return {
+            "workload": self.workload,
+            "policy": self.policy,
+            "backend": self.backend,
+            "makespan_s": self.partitioned.makespan,
+            "baseline_makespan_s":
+                self.baseline.makespan if self.baseline else None,
+            "time_saving": self.time_saving,
+            "turnaround_saving": self.turnaround_saving,
+            "energy_saving": self.energy_saving,
+            "utilization": self.utilization,
+            "partition_histogram": self.partition_histogram(),
+        }
+
+
+class Session:
+    """Bind a policy to a backend; run workloads by name or as DNNG lists."""
+
+    def __init__(self, policy: "str | PartitionPolicy" = "equal",
+                 backend: "str | Accelerator" = "sim", **backend_kwargs):
+        self.policy = resolve_policy(policy)
+        self.backend = resolve_backend(backend, **backend_kwargs)
+
+    # -- workload resolution ------------------------------------------------
+    @staticmethod
+    def _resolve_workload(workload) -> tuple[str, list[DNNG]]:
+        if isinstance(workload, str):
+            from repro.sim import workloads as _w  # read at call time so
+            if workload not in _w.WORKLOADS:       # ablations may patch it
+                raise ValueError(f"unknown workload {workload!r}; known: "
+                                 f"{sorted(_w.WORKLOADS)}")
+            return workload, list(_w.WORKLOADS[workload]())
+        dnngs = list(workload)
+        if not all(isinstance(g, DNNG) for g in dnngs):
+            raise ValueError("workload must be a name or a sequence of DNNGs")
+        return "custom", dnngs
+
+    # -- execution ----------------------------------------------------------
+    def run(self, workload, *, compare_baseline: bool = True) -> SessionResult:
+        name, dnngs = self._resolve_workload(workload)
+        time_fn = self.backend.time_fn()
+        stage = self.backend.stage_model()
+        layers: dict[tuple[str, int], LayerShape] = {
+            (g.name, i): layer
+            for g in dnngs for i, layer in enumerate(g.layers)}
+
+        part = schedule_dynamic(dnngs, self.backend.array, time_fn,
+                                stage=stage, policy=self.policy)
+        e_part = self.backend.energy(part, layers, baseline_pe=False)
+        base = e_base = None
+        if compare_baseline:
+            base = schedule_sequential(dnngs, self.backend.array, time_fn,
+                                       stage=stage)
+            e_base = self.backend.energy(base, layers, baseline_pe=True)
+        return SessionResult(
+            workload=name,
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            backend=getattr(self.backend, "name", type(self.backend).__name__),
+            partitioned=part, baseline=base,
+            partitioned_energy=e_part, baseline_energy=e_base)
+
+    def run_all(self, workloads: Sequence[str] | None = None
+                ) -> dict[str, SessionResult]:
+        """Run every named workload (default: all of ``WORKLOADS``)."""
+        if workloads is None:
+            from repro.sim import workloads as _w
+            workloads = sorted(_w.WORKLOADS)
+        return {wl: self.run(wl) for wl in workloads}

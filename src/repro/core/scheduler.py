@@ -29,6 +29,13 @@ partition) -> seconds`` compute oracle and an optional :class:`StageModel`.
 `repro.sim` supplies the Scale-Sim-style analytic models;
 `repro.distributed.tenancy` reuses the same scheduler with a mesh-slice
 latency estimator at cluster scale.
+
+The *grant rule* itself — how a free array is split and which ready layer
+takes which slice — is delegated to a :class:`repro.api.policy
+.PartitionPolicy`.  ``policy`` may be a policy object or a registry name
+(``"equal"``, ``"proportional"``, ``"best_fit"``, ``"priority"``,
+``"width_aware"``); the legacy string ``"paper"`` is an alias for
+``"equal"``, which is Algorithm 1 verbatim.
 """
 
 from __future__ import annotations
@@ -43,8 +50,6 @@ from repro.core.partition import (
     ArrayShape,
     Partition,
     PartitionSet,
-    partition_calculation,
-    task_assignment,
 )
 
 TimeFn = Callable[[LayerShape, Partition], float]
@@ -156,24 +161,21 @@ def schedule_dynamic(
     array: ArrayShape,
     time_fn: TimeFn,
     stage: StageModel | None = None,
-    policy: str = "paper",
+    policy="paper",
 ) -> ScheduleResult:
-    """Run Algorithm 1 end-to-end over ``dnngs`` and return the full trace.
+    """Run Algorithm 1's runtime dynamics end-to-end and return the trace.
 
-    ``policy`` selects the grant rule at each Task_Assignment round:
-
-    * ``"paper"`` — Algorithm 1 verbatim: heaviest-``Opr`` ready layer takes
-      the largest free slice, whole.
-    * ``"width_aware"`` — beyond-paper refinement (EXPERIMENTS.md §Perf):
-      (i) a layer is never granted more columns than ``min(N, cols)`` needs
-      (leftover stays free for other tenants); (ii) *hold-for-width*: a layer
-      declines a slice narrower than half its fair-share/demand width while
-      other tenants are still computing — avoiding the straggler pathology
-      where a width-critical layer (e.g. a T=1 FC) gets pinned to a sliver
-      for its whole (long) execution.
+    ``policy`` is a :class:`repro.api.policy.PartitionPolicy` instance or a
+    registry name (see :func:`repro.api.policy.list_policies`).  The default
+    ``"paper"`` is an alias for ``"equal"`` — Algorithm 1 verbatim: the
+    heaviest-``Opr`` ready layer takes the largest free slice, whole.  The
+    pre-API string ``"width_aware"`` also still resolves: grants trimmed to
+    ``min(N, cols)`` plus the hold-for-width decline rule (EXPERIMENTS.md
+    §Perf) that keeps width-critical layers off slivers.
     """
-    if policy not in ("paper", "width_aware"):
-        raise ValueError(f"unknown policy {policy!r}")
+    # lazy import: repro.api builds on this module (no import cycle)
+    from repro.api.policy import AssignContext, TenantDemand, resolve_policy
+    pol = resolve_policy(policy)
     if not dnngs:
         return ScheduleResult(trace=(), completion={}, makespan=0.0, array=array)
     names = [g.name for g in dnngs]
@@ -193,8 +195,6 @@ def schedule_dynamic(
     events: list[tuple[float, int, str, str]] = []
     for g in dnngs:
         heapq.heappush(events, (g.arrival_time, next(seq), "arrive", g.name))
-
-    first_layer_done = False  # Fig. 5 line 5: very first layer gets all PEs
 
     def ready_tenants(now: float) -> list[tuple[str, int, LayerShape]]:
         out = []
@@ -223,68 +223,36 @@ def schedule_dynamic(
         inflight[tenant] = (layer_idx, layer, part, now, si_end, c_end)
         heapq.heappush(events, (c_end, next(seq), "cdone", tenant))
 
-    def n_live() -> int:
-        return sum(1 for t in tenants.values() if not t.finished)
-
-    def demand_cols(layer: LayerShape) -> int:
-        return max(1, min(layer.gemm_n, array.cols))
-
-    def grant_width(layer: LayerShape, slice_cols: int) -> int:
-        if policy == "paper":
-            return slice_cols
-        return min(slice_cols, demand_cols(layer))
-
-    def declines(layer: LayerShape, slice_cols: int) -> bool:
-        """width_aware hold-for-width: wait for a merge instead of accepting
-        a sliver, but only while another tenant is computing (so a future
-        completion event is guaranteed — no deadlock).
-
-        Decline iff the offered width is under half the layer's demand AND
-        running here would take >2x the demand-width runtime — i.e. the
-        opportunity cost of being pinned to a sliver is material.  This is
-        what prevents a width-critical layer (T=1 FC: runtime ~ 1/cols) from
-        being trapped the way AlexNet/fc6 is under the verbatim policy.
-        """
-        if policy == "paper" or not pset.busy_partitions:
-            return False
-        demand = demand_cols(layer)
-        if slice_cols * 2 >= demand:
-            return False
-        t_here = time_fn(layer, Partition(rows=array.rows, col_start=0,
-                                          cols=slice_cols))
-        t_want = time_fn(layer, Partition(rows=array.rows, col_start=0,
-                                          cols=demand))
-        return t_here > 2.0 * t_want
+    def demands(ready: Sequence[tuple[str, int, LayerShape]]
+                ) -> list[TenantDemand]:
+        return [TenantDemand(name=tenant, demand=float(layer.opr),
+                             width_demand=max(1, min(layer.gemm_n,
+                                                     array.cols)))
+                for tenant, _idx, layer in ready]
 
     def assign(now: float) -> None:
-        """(Re-)run Partition_Calculation + Task_Assignment at time ``now``."""
-        nonlocal first_layer_done
+        """(Re-)run the policy's split + assign steps at time ``now``."""
         ready = ready_tenants(now)
         if not ready:
             return
         whole_array_free = (not pset.busy_partitions
                             and len(pset.free_partitions) == 1)
-        if whole_array_free and len(ready) == 1:
-            # Fig. 5 lines 5–6: single available task -> all PEs, no split.
-            tenant, idx, layer = ready[0]
-            part = pset.allocate(tenant, grant_width(layer, array.cols))
-            launch(now, tenant, idx, layer, part)
-            first_layer_done = True
-            return
         if whole_array_free:
-            # fresh equal split among all available layers (lines 8–10)
-            parts = partition_calculation(array, len(ready))
-            for a in task_assignment(ready, parts):
-                w = grant_width(a.layer, a.partition.cols)
-                got = pset.allocate_exact(
-                    a.tenant, Partition(rows=a.partition.rows,
-                                        col_start=a.partition.col_start,
-                                        cols=w))
+            ctx = AssignContext(array=array, time_fn=time_fn, busy={})
+            if len(ready) == 1:
+                # Fig. 5 lines 5–6: single available task -> offer all PEs.
+                offered = [Partition(rows=array.rows, col_start=0,
+                                     cols=array.cols)]
+            else:
+                # fresh split among all available layers (lines 8–10)
+                offered = pol.split(array, demands(ready))
+            for a in pol.assign(ready, offered, ctx):
+                got = pset.allocate_exact(a.tenant, a.partition)
                 launch(now, a.tenant, a.layer_index, a.layer, got)
-            first_layer_done = True
             return
-        # steady state: heaviest ready layer -> largest merged free slice,
-        # re-matching after every grant (width_aware grants leave remainders).
+        # steady state: policy matches ready layers to merged free slices,
+        # one grant at a time (trimmed grants change the free list, so
+        # re-offer after every allocation).
         progressed = True
         while progressed:
             progressed = False
@@ -292,17 +260,12 @@ def schedule_dynamic(
             ready = ready_tenants(now)
             if not free or not ready:
                 break
-            for a in task_assignment(ready, free):
-                if declines(a.layer, a.partition.cols):
-                    continue
-                w = grant_width(a.layer, a.partition.cols)
-                got = pset.allocate_exact(
-                    a.tenant, Partition(rows=a.partition.rows,
-                                        col_start=a.partition.col_start,
-                                        cols=w))
+            ctx = AssignContext(array=array, time_fn=time_fn,
+                                busy=pset.busy_partitions)
+            for a in pol.assign(ready, free, ctx):
+                got = pset.allocate_exact(a.tenant, a.partition)
                 launch(now, a.tenant, a.layer_index, a.layer, got)
                 progressed = True
-                first_layer_done = True
                 break  # free list changed; re-sort and re-match
 
     def compute_done(tenant: str, now: float) -> None:

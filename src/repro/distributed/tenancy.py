@@ -13,8 +13,12 @@ Mapping (DESIGN.md §2):
                              tenant's step inside its sub-mesh means GSPMD
                              can never emit a collective that crosses a
                              partition edge (isolation is structural)
-    Partition_Calculation →  ``TenantMeshManager.rebalance`` (⌊Y/n⌋ widths)
-    Task_Assignment       →  heaviest-demand tenant → widest free slice
+    Partition_Calculation →  ``TenantMeshManager.rebalance`` — widths come
+                             from a pluggable ``repro.api.policy``
+                             :class:`PartitionPolicy` (default ``equal``:
+                             the paper's ⌊Y/n⌋)
+    Task_Assignment       →  policy order (equal: heaviest demand) →
+                             widest free slice
     merge on free         →  inherited verbatim from core.partition
 
 Fault tolerance: ``mark_unhealthy(col)`` removes a device column from
@@ -33,7 +37,39 @@ import jax
 import numpy as np
 from jax.sharding import Mesh
 
+from repro.core.dnng import LayerShape
 from repro.core.partition import ArrayShape, Partition, PartitionSet
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshLatencyModel:
+    """Analytic per-layer latency of a GEMM on a mesh column slice.
+
+    The cluster-scale analogue of `repro.sim.systolic`: a layer sharded
+    over a ``w``-device slice pays per-device compute, a ring collective
+    over its output activations (weights are column-sharded along the
+    ``model`` axis, so each step all-gathers/reduce-scatters the OFMap),
+    and a fixed dispatch overhead.  Used by the ``mesh`` backend of
+    `repro.api` to drive the same event scheduler at cluster scale.
+    """
+
+    device_flops: float = 90e12      # bf16 sustained per device
+    ici_bw_bytes: float = 45e9       # per-link interconnect bandwidth
+    host_bw_bytes: float = 50e9      # host→HBM staging (shared bus)
+    launch_overhead_s: float = 5e-6  # per-layer dispatch latency
+
+    def layer_time_s(self, layer: LayerShape, part: Partition) -> float:
+        flops = 2.0 * layer.macs
+        compute = flops / (self.device_flops * part.n_pes)
+        comm = 0.0
+        if part.cols > 1:
+            out_bytes = 2.0 * layer.gemm_m * layer.gemm_n
+            comm = (2.0 * (part.cols - 1) / part.cols
+                    * out_bytes / self.ici_bw_bytes)
+        return self.launch_overhead_s + compute + comm
+
+    def time_fn(self):
+        return self.layer_time_s
 
 
 @dataclasses.dataclass
@@ -43,13 +79,21 @@ class Tenant:
     name: str
     demand: float                  # load estimate (≙ Opr of Algorithm 1)
     min_cols: int = 1              # e.g. memory floor: params must fit
+    tier: int = 0                  # SLA class (policy="priority"; 0 = top)
     partition: Partition | None = None
 
 
 class TenantMeshManager:
-    """Dynamic vertical partitioning of a device mesh among tenants."""
+    """Dynamic vertical partitioning of a device mesh among tenants.
 
-    def __init__(self, mesh: Mesh, column_axis: str = "model"):
+    ``policy`` (a `repro.api.policy` registry name or instance, default
+    ``"equal"``) decides target widths and grant order at every
+    :meth:`rebalance`; the free-slice carving, unhealthy-column fencing and
+    merge-on-free mechanics are policy-independent.
+    """
+
+    def __init__(self, mesh: Mesh, column_axis: str = "model",
+                 policy="equal"):
         if column_axis not in mesh.axis_names:
             raise ValueError(f"mesh has no {column_axis!r} axis: "
                              f"{mesh.axis_names}")
@@ -63,6 +107,7 @@ class TenantMeshManager:
                                              cols=n_cols))
         self._tenants: dict[str, Tenant] = {}
         self._unhealthy: set[int] = set()
+        self.policy = policy  # resolved lazily (str | PartitionPolicy)
 
     # -- queries -----------------------------------------------------------
     @property
@@ -88,14 +133,15 @@ class TenantMeshManager:
         return Mesh(self.mesh.devices[tuple(sl)], self.mesh.axis_names)
 
     # -- admission / release ------------------------------------------------
-    def admit(self, name: str, demand: float, min_cols: int = 1) -> Tenant:
+    def admit(self, name: str, demand: float, min_cols: int = 1,
+              tier: int = 0) -> Tenant:
         """Queue a tenant; slices are handed out by :meth:`rebalance`."""
         if name in self._tenants:
             raise ValueError(f"tenant {name!r} already admitted")
         if min_cols > self.n_cols:
             raise ValueError(f"min_cols {min_cols} exceeds mesh width "
                              f"{self.n_cols}")
-        t = Tenant(name=name, demand=demand, min_cols=min_cols)
+        t = Tenant(name=name, demand=demand, min_cols=min_cols, tier=tier)
         self._tenants[name] = t
         return t
 
@@ -122,15 +168,20 @@ class TenantMeshManager:
     def mark_healthy(self, col: int) -> None:
         self._unhealthy.discard(col)
 
-    # -- Algorithm 1 --------------------------------------------------------
-    def rebalance(self) -> dict[str, Partition]:
-        """(Re-)run Partition_Calculation + Task_Assignment over all tenants.
+    # -- Algorithm 1, policy-generalised ------------------------------------
+    def rebalance(self, policy=None) -> dict[str, Partition]:
+        """(Re-)run the policy's Partition_Calculation + Task_Assignment.
 
         All slices are dropped and re-cut (tenancy rebalance happens at step
         boundaries — tenants re-jit onto their new sub-mesh; checkpointed
         state is resharded by ``training.checkpoint.reshard``).
         Unhealthy columns are fenced off as permanently-busy pseudo-tenants.
+        ``policy`` overrides the manager's default for this round.
         """
+        # lazy import: repro.api builds on repro.core, not the reverse
+        from repro.api.policy import TenantDemand, resolve_policy
+        pol = resolve_policy(policy if policy is not None else self.policy)
+
         # reset: drop every grant, rebuild the interval state from scratch
         for t in self._tenants.values():
             t.partition = None
@@ -141,20 +192,22 @@ class TenantMeshManager:
                 f"__dead{col}",
                 Partition(rows=self._pset.array.rows, col_start=col, cols=1))
 
-        live = sorted(self._tenants.values(), key=lambda t: t.demand,
-                      reverse=True)
-        if not live:
+        if not self._tenants:
             return {}
         avail = self.n_cols - len(self._unhealthy)
-        n = min(len(live), avail)
-        base = avail // n if n else 0
+        demands = [TenantDemand(name=t.name, demand=t.demand,
+                                min_cols=t.min_cols, tier=t.tier)
+                   for t in self._tenants.values()]
+        widths = pol.widths(avail, demands) if avail >= 1 else {}
 
         out: dict[str, Partition] = {}
-        for i, t in enumerate(live):
-            if i >= n or base < 1:
+        for d in pol.order(demands):
+            width = widths.get(d.name, 0)
+            if width < 1:
                 continue  # over-subscribed: tenant waits for a free round
-            width = max(base, t.min_cols)
-            # heaviest-first: grant from the largest free slice, verbatim
+            t = self._tenants[d.name]
+            width = max(width, t.min_cols)
+            # policy order: grant from the largest free slice, verbatim
             # Task_Assignment; clamp to what is actually free.
             free = self._pset.largest_free()
             if free is None:

@@ -42,6 +42,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# renamed TPUCompilerParams -> CompilerParams across jax releases
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+if _CompilerParams is None:  # pragma: no cover - depends on jax version
+    raise ImportError(
+        "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+        "TPUCompilerParams; this jax version is unsupported by "
+        "repro.kernels.partitioned_matmul")
+
 # MXU/VREG-aligned defaults: 128-multiples on the matmul dims; the f32
 # accumulator tile (block_t × block_n) plus the two operand tiles must fit
 # VMEM (~16 MiB/core): 128·512·4 B + 128·512·2 B·2 ≈ 0.5 MiB per buffer set,
@@ -140,7 +149,7 @@ def partitioned_matmul(xs: jax.Array, w: jax.Array, owner: jax.Array,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((T, N), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(owner.astype(jnp.int32), valid_t.astype(jnp.int32),

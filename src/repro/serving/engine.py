@@ -4,8 +4,10 @@ The engine is the cluster-scale version of the paper's Fig. 4 timeline:
 
 * tenants (models) arrive with a request queue; ``demand`` ≙ Opr — here the
   total outstanding decode work (tokens × per-token FLOPs);
-* ``TenantMeshManager.rebalance`` is Partition_Calculation+Task_Assignment:
-  contiguous ``model``-axis column slices, heaviest demand → widest slice;
+* ``TenantMeshManager.rebalance`` is Partition_Calculation+Task_Assignment,
+  generalised: the engine's ``policy`` (a `repro.api` registry name such as
+  ``"equal"``, ``"proportional"`` or ``"priority"``, or a policy instance)
+  splits the ``model``-axis columns over live tenant demands every round;
 * when a tenant's queue drains it releases its slice; adjacent free slices
   merge and ``grow_into_free`` widens the survivors (merge-accelerate);
 * a failed device column evicts its tenants, which simply re-enter the
@@ -56,10 +58,16 @@ class TenantService:
 
 
 class MultiTenantEngine:
-    """Round-based multi-tenant decode executor over a device mesh."""
+    """Round-based multi-tenant decode executor over a device mesh.
 
-    def __init__(self, manager: TenantMeshManager):
+    ``policy`` selects the partition policy used at every rebalance; it is
+    forwarded to :meth:`TenantMeshManager.rebalance` (default ``"equal"``,
+    the paper's Algorithm 1).
+    """
+
+    def __init__(self, manager: TenantMeshManager, policy="equal"):
         self.manager = manager
+        self.policy = policy
         self.tenants: dict[str, TenantService] = {}
         self.width_history: list[tuple[int, str, int]] = []
         self.round = 0
@@ -67,11 +75,15 @@ class MultiTenantEngine:
 
     # -- tenancy ------------------------------------------------------------
     def add_tenant(self, name: str, session: DecodeSession,
-                   flops_per_token: float, min_cols: int = 1) -> TenantService:
+                   flops_per_token: float, min_cols: int = 1,
+                   tier: int = 0) -> TenantService:
+        """Admit a model; ``min_cols``/``tier`` feed policies that use
+        reservation floors and SLA classes (``priority``)."""
         svc = TenantService(name=name, session=session,
                             flops_per_token=flops_per_token)
         self.tenants[name] = svc
-        self.manager.admit(name, demand=svc.demand, min_cols=min_cols)
+        self.manager.admit(name, demand=svc.demand, min_cols=min_cols,
+                           tier=tier)
         self._rebalance()
         return svc
 
@@ -81,9 +93,10 @@ class MultiTenantEngine:
         return req
 
     def _rebalance(self) -> None:
+        # policy.split over live tenant demands (via the mesh manager)
         for name, svc in self.tenants.items():
             self.manager.tenant(name).demand = svc.demand
-        grants = self.manager.rebalance()
+        grants = self.manager.rebalance(policy=self.policy)
         for name, part in grants.items():
             self.tenants[name].width = part.cols
             self.width_history.append((self.round, name, part.cols))

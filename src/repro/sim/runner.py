@@ -1,10 +1,20 @@
 """Baseline-vs-partitioned experiment driver — reproduces paper Fig. 9.
 
-For each workload group the driver runs:
+Since the `repro.api` redesign this module is a thin compatibility shim over
+:class:`repro.api.Session` with the ``sim`` backend: ``run_experiment`` binds
+a policy (default ``"paper"`` = the paper's ``equal``) to the Scale-Sim-style
+analytic backend and returns the Session's result.  New code should use
+`repro.api` directly:
+
+    from repro.api import Session
+    res = Session(policy="equal", backend="sim").run("heavy")
+
+For each workload the driver runs:
 
 * **baseline**   — sequential single-tenancy, every layer on the full array,
   unmodified PE (no ``Mul_En``; all PEs toggle every cycle);
-* **partitioned** — Algorithm 1 dynamic partitioning with the ``Mul_En`` PE.
+* **partitioned** — dynamic partitioning under the selected policy with the
+  ``Mul_En`` PE.
 
 and reports per-DNN completion times (Fig. 9 a–d), partition-size usage
 histograms (Fig. 9 c,d) and the energy breakdown (Fig. 9 e,f).
@@ -12,95 +22,28 @@ histograms (Fig. 9 c,d) and the energy breakdown (Fig. 9 e,f).
 
 from __future__ import annotations
 
-import dataclasses
-from collections import Counter
+from repro.api.backend import SimBackend
+from repro.api.session import Session, SessionResult
+from repro.sim.energy import EnergyModel
+from repro.sim.systolic import SystolicConfig
 
-from repro.core.dnng import DNNG
-from repro.core.scheduler import (
-    ScheduleResult,
-    StageModel,
-    schedule_dynamic,
-    schedule_sequential,
-)
-from repro.sim.energy import (
-    EnergyBreakdown,
-    EnergyModel,
-    schedule_energy_with_layers,
-)
-from repro.sim.systolic import SystolicConfig, layer_time_fn
-from repro.sim.workloads import WORKLOADS
-
-
-@dataclasses.dataclass(frozen=True)
-class ExperimentResult:
-    workload: str
-    baseline: ScheduleResult
-    partitioned: ScheduleResult
-    baseline_energy: EnergyBreakdown
-    partitioned_energy: EnergyBreakdown
-
-    @property
-    def time_saving(self) -> float:
-        """Fractional makespan reduction (paper: 56 % heavy / 44 % light)."""
-        return 1.0 - self.partitioned.makespan / self.baseline.makespan
-
-    @property
-    def turnaround_saving(self) -> float:
-        """Fractional mean per-DNN completion-time reduction.
-
-        Fig. 9(a,b) plots per-DNN completion times; multi-tenancy's headline
-        win is that small DNNs no longer queue behind large ones, so mean
-        turnaround drops much more than the makespan.
-        """
-        bsum = sum(self.baseline.completion.values())
-        psum = sum(self.partitioned.completion.values())
-        return 1.0 - psum / bsum
-
-    @property
-    def energy_saving(self) -> float:
-        """Fractional energy reduction (paper: 35 % heavy / 62 % light)."""
-        return 1.0 - self.partitioned_energy.total / self.baseline_energy.total
-
-    def partition_histogram(self) -> dict[str, int]:
-        """How many layers ran on each partition width (Fig. 9 c,d)."""
-        c = Counter(f"{e.partition.rows}x{e.partition.cols}"
-                    for e in self.partitioned.trace)
-        return dict(sorted(c.items()))
-
-
-def _layers_by_key(dnngs: list[DNNG]) -> dict[tuple[str, int], object]:
-    return {(g.name, i): layer for g in dnngs for i, layer in
-            enumerate(g.layers)}
+# deprecated alias — the experiment result IS the Session result now
+ExperimentResult = SessionResult
 
 
 def run_experiment(
     workload: str,
     cfg: SystolicConfig | None = None,
     energy: EnergyModel | None = None,
-    policy: str = "paper",
-) -> ExperimentResult:
-    cfg = cfg or SystolicConfig()
-    energy = energy or EnergyModel()
-    dnngs = WORKLOADS[workload]()
-    time_fn = layer_time_fn(cfg)
-    stage = StageModel(dram_bw_bytes=cfg.dram_bw_bytes)
-    layers = _layers_by_key(dnngs)
-
-    base = schedule_sequential(dnngs, cfg.array, time_fn, stage=stage)
-    part = schedule_dynamic(dnngs, cfg.array, time_fn, stage=stage,
-                            policy=policy)
-
-    e_base = schedule_energy_with_layers(base, layers, cfg, energy,
-                                         baseline_pe=True)
-    e_part = schedule_energy_with_layers(part, layers, cfg, energy,
-                                         baseline_pe=False)
-    return ExperimentResult(workload=workload, baseline=base,
-                            partitioned=part, baseline_energy=e_base,
-                            partitioned_energy=e_part)
+    policy="paper",
+) -> SessionResult:
+    """Deprecated shim: ``Session(policy, backend="sim").run(workload)``."""
+    backend = SimBackend(config=cfg, energy=energy)
+    return Session(policy=policy, backend=backend).run(workload)
 
 
-def format_report(res: ExperimentResult) -> str:
-    lines = [f"== workload: {res.workload} =="]
+def format_report(res: SessionResult) -> str:
+    lines = [f"== workload: {res.workload} (policy: {res.policy}) =="]
     lines.append(f"baseline makespan:     {res.baseline.makespan * 1e3:10.3f} ms")
     lines.append(f"partitioned makespan:  {res.partitioned.makespan * 1e3:10.3f} ms")
     lines.append(f"time saving (makespan):{res.time_saving * 100:10.1f} %")

@@ -1,0 +1,218 @@
+"""`repro.api` tests: registries, policy invariants, cross-policy ablation.
+
+Runs without hypothesis — plain parametrised cases — so this module is part
+of the hypothesis-optional tier-1 path.
+"""
+
+import json
+import os
+
+import pytest
+
+from repro.api import (
+    EqualPolicy,
+    PartitionPolicy,
+    Session,
+    TenantDemand,
+    get_backend,
+    get_policy,
+    list_backends,
+    list_policies,
+    register_policy,
+    resolve_policy,
+)
+from repro.api.policy import _POLICIES
+from repro.core.dnng import LayerShape, chain
+from repro.core.partition import ArrayShape, PartitionSet
+from repro.core.scheduler import schedule_dynamic
+from repro.sim.systolic import SystolicConfig, layer_time_fn
+
+DATA = os.path.join(os.path.dirname(__file__), "data")
+ALL_POLICIES = ("equal", "proportional", "best_fit", "priority",
+                "width_aware")
+
+TENANT_SETS = [
+    [TenantDemand("a", demand=100.0)],
+    [TenantDemand("a", demand=100.0), TenantDemand("b", demand=1.0)],
+    [TenantDemand("a", demand=5.0, min_cols=16),
+     TenantDemand("b", demand=50.0, width_demand=8),
+     TenantDemand("c", demand=5.0, tier=1),
+     TenantDemand("d", demand=0.0)],
+    [TenantDemand(f"t{i}", demand=float(i + 1)) for i in range(9)],
+    # over-subscribed: more tenants than columns
+    [TenantDemand(f"t{i}", demand=1.0) for i in range(40)],
+]
+
+
+class TestRegistry:
+    def test_four_required_policies_registered(self):
+        for name in ("equal", "proportional", "best_fit", "priority"):
+            assert name in list_policies()
+
+    def test_round_trip(self):
+        for name in list_policies():
+            pol = get_policy(name)
+            assert pol.name == name
+            assert resolve_policy(name) is not pol  # fresh instance
+            assert resolve_policy(pol) is pol       # passthrough
+
+    def test_paper_alias(self):
+        assert isinstance(get_policy("paper"), EqualPolicy)
+
+    def test_unknown_rejected(self):
+        with pytest.raises(ValueError):
+            get_policy("bogus")
+        with pytest.raises(ValueError):
+            get_backend("bogus")
+        with pytest.raises(ValueError):
+            resolve_policy(object())
+
+    def test_backends_registered(self):
+        assert {"sim", "mesh"} <= set(list_backends())
+
+    def test_register_plugin_policy(self):
+        @register_policy("test_only_plugin")
+        class Plugin(EqualPolicy):
+            pass
+
+        try:
+            assert "test_only_plugin" in list_policies()
+            assert isinstance(get_policy("test_only_plugin"), Plugin)
+            with pytest.raises(ValueError):  # duplicate names rejected
+                register_policy("test_only_plugin")(Plugin)
+        finally:
+            del _POLICIES["test_only_plugin"]
+
+
+@pytest.mark.parametrize("name", ALL_POLICIES)
+@pytest.mark.parametrize("cols", [1, 7, 64, 128])
+@pytest.mark.parametrize("tenants", TENANT_SETS,
+                         ids=lambda ts: f"n{len(ts)}")
+class TestSplitInvariants:
+    def test_split_tiles_and_checks(self, name, cols, tenants):
+        """Split slices tile [0, cols) with no overlap: allocating each into
+        a fresh PartitionSet leaves exactly zero free columns and passes
+        the interval invariant after every allocation."""
+        array = ArrayShape(rows=16, cols=cols)
+        parts = get_policy(name).split(array, tenants)
+        if not parts:
+            return  # nothing placeable (e.g. floors exceed columns)
+        assert sum(p.cols for p in parts) == cols
+        ps = PartitionSet(array)
+        for i, p in enumerate(sorted(parts, key=lambda p: p.col_start)):
+            ps.allocate_exact(f"p{i}", p)
+            ps.check()
+        assert ps.utilization == 1.0
+
+    def test_widths_respect_floors(self, name, cols, tenants):
+        pol = get_policy(name)
+        ws = pol.widths(cols, tenants)
+        assert sum(ws.values()) <= cols
+        floors = {t.name: t.min_cols for t in tenants}
+        for tname, w in ws.items():
+            assert w >= 1
+            if name in ("proportional", "priority", "best_fit"):
+                assert w >= floors[tname], (tname, w)
+
+
+class TestPolicyBehaviour:
+    def test_proportional_weights_by_demand(self):
+        pol = get_policy("proportional")
+        ws = pol.widths(100, [TenantDemand("big", demand=90.0),
+                              TenantDemand("small", demand=10.0)])
+        assert ws["big"] == 90 and ws["small"] == 10
+
+    def test_priority_floor_and_tier(self):
+        pol = get_policy("priority", tiers={"premium": 0, "batch": 2},
+                         floors={"premium": 24})
+        ws = pol.widths(32, [TenantDemand("batch", demand=1000.0),
+                             TenantDemand("premium", demand=1.0)])
+        assert ws["premium"] >= 24
+        order = pol.order([TenantDemand("batch", demand=1000.0),
+                           TenantDemand("premium", demand=1.0)])
+        assert order[0].name == "premium"  # tier beats demand
+
+    def test_best_fit_trims_to_gemm_n(self):
+        """A narrow FC (gemm_n=16) must never occupy more than 16 columns."""
+        gs = [chain("narrow", [LayerShape.fc("l0", 64, 16, batch=64),
+                               LayerShape.fc("l1", 16, 16, batch=64)]),
+              chain("wide", [LayerShape.fc("l0", 512, 4096, batch=512),
+                             LayerShape.fc("l1", 4096, 4096, batch=512)],
+                    arrival_time=1e-9)]
+        array = ArrayShape(128, 128)
+        res = schedule_dynamic(gs, array, layer_time_fn(SystolicConfig()),
+                               policy="best_fit")
+        for e in res.tenant_trace("narrow"):
+            assert e.partition.cols <= 16
+
+    def test_place_matches_priority_order(self):
+        pol = get_policy("equal")
+        grants = pol.place(ArrayShape(8, 8),
+                           [TenantDemand("light", demand=1.0),
+                            TenantDemand("heavy", demand=9.0)])
+        assert set(grants) == {"light", "heavy"}
+        # heaviest takes the widest (here: the remainder-padded first slice)
+        assert grants["heavy"].n_pes >= grants["light"].n_pes
+
+
+@pytest.mark.parametrize("workload", ["heavy", "light"])
+class TestSessionAcceptance:
+    def test_all_policies_run_all_workloads(self, workload):
+        for pol in ALL_POLICIES:
+            res = Session(policy=pol, backend="sim").run(workload)
+            assert res.policy == pol
+            assert res.partitioned.makespan > 0
+            assert set(res.partitioned.completion) == \
+                set(res.baseline.completion)
+            # every policy must still beat sequential on mean turnaround
+            assert res.turnaround_saving > 0 or res.time_saving > 0
+
+    def test_equal_reproduces_seed_trace_byte_for_byte(self, workload):
+        """Cross-policy ablation anchor: `equal` IS the seed scheduler.
+
+        The golden file was captured from the pre-API scheduler (hex floats
+        — exact bit patterns, not approximations).
+        """
+        with open(os.path.join(DATA, f"seed_trace_{workload}.json")) as f:
+            golden = json.load(f)
+        res = Session(policy="equal", backend="sim").run(workload)
+        dyn = res.partitioned
+        assert dyn.makespan.hex() == golden["makespan"]
+        assert {k: v.hex() for k, v in dyn.completion.items()} == \
+            golden["completion"]
+        assert len(dyn.trace) == len(golden["trace"])
+        for e, g in zip(dyn.trace, golden["trace"]):
+            got = (e.tenant, e.layer_index, e.partition.rows,
+                   e.partition.col_start, e.partition.cols,
+                   e.start.hex(), e.end.hex(),
+                   e.compute_start.hex(), e.compute_end.hex())
+            want = (g["tenant"], g["layer_index"], g["rows"], g["col_start"],
+                    g["cols"], g["start"], g["end"], g["compute_start"],
+                    g["compute_end"])
+            assert got == want
+
+
+class TestSessionMisc:
+    def test_mesh_backend_runs(self):
+        res = Session(policy="proportional", backend="mesh",
+                      n_cols=8).run("light")
+        assert res.backend == "mesh"
+        assert res.partitioned.makespan > 0
+        assert res.energy_saving == 0.0  # mesh backend has no energy model
+        assert max(e.partition.col_end for e in res.partitioned.trace) <= 8
+
+    def test_explicit_dnng_workload(self):
+        gs = [chain("a", [LayerShape.fc("l", 64, 64, batch=8)])]
+        res = Session(policy="equal", backend="sim").run(gs)
+        assert res.workload == "custom"
+        assert len(res.partitioned.trace) == 1
+
+    def test_unknown_workload_rejected(self):
+        with pytest.raises(ValueError):
+            Session().run("nonesuch")
+
+    def test_as_dict_is_json_serialisable(self):
+        d = Session(policy="equal").run("light").as_dict()
+        blob = json.loads(json.dumps(d))
+        assert blob["policy"] == "equal"
+        assert 0 <= blob["utilization"] <= 1

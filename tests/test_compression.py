@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.compression import (

@@ -1,5 +1,8 @@
 """Partitioned-WS dataflow model tests (core/dataflow.py)."""
 
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dataflow import GEMM, partitioned_ws_loopnest, utilization, ws_cost

@@ -1,6 +1,7 @@
 """Algorithm 1 unit + property tests (core/partition.py)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dnng import LayerShape

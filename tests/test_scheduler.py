@@ -1,6 +1,7 @@
 """Event-driven scheduler tests (core/scheduler.py)."""
 
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dnng import DNNG, LayerShape, chain

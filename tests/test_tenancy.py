@@ -2,6 +2,7 @@
 
 import jax
 import pytest
+pytest.importorskip("hypothesis")  # property tests skip cleanly without it
 from hypothesis import given, settings, strategies as st
 
 from repro.distributed.tenancy import TenantMeshManager
