@@ -1,0 +1,123 @@
+"""Open-loop serving benchmark — BENCH_traffic.json.
+
+    PYTHONPATH=src python benchmarks/traffic_bench.py
+
+The serving-side complement of BENCH_fig9.json: instead of draining a fixed
+batch, each cell drives a seeded arrival process (`repro.traffic`) through
+one partition policy and records SLA metrics — p50/p95/p99 latency,
+deadline-miss rate, goodput, rejection rate, utilization.
+
+Matrix: arrival process × policy × offered load.  *Offered load* ρ is the
+arrival rate normalised by the pool's mean sequential service time (ρ=1 ≈
+one array's worth of work arriving per unit time), so the load levels mean
+the same thing regardless of model-mix calibration.  All cells at the same
+(process, load) share the identical arrival stream — policies are compared
+on the same jobs.  A second small block compares cluster dispatchers (jsq
+vs p2c) on a 4-array fleet.
+
+Everything is seeded; two runs of this script are byte-identical.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "BENCH_traffic.json")
+
+PROCESSES = ("poisson", "mmpp", "diurnal")
+POLICIES = ("equal", "proportional", "best_fit", "width_aware")
+LOADS = (0.4, 0.9, 1.5)   # ρ: fraction of one array's service capacity
+JOBS_PER_CELL = 40
+SEED = 0
+
+
+def mean_service_s(pool: str) -> float:
+    """Mean full-array sequential time of one job from ``pool`` (the load
+    normaliser: rate = ρ / mean_service_s)."""
+    from repro.api import resolve_backend
+    from repro.core.partition import Partition
+    from repro.sim.workloads import MODEL_POOLS, MODELS
+
+    b = resolve_backend("sim")
+    time_fn, stage = b.time_fn(), b.stage_model()
+    full = Partition(rows=b.array.rows, col_start=0, cols=b.array.cols)
+    times = []
+    for name in MODEL_POOLS[pool]:
+        g = MODELS[name]()
+        times.append(sum(stage.stage_in_s(l) + time_fn(l, full)
+                         + stage.stage_out_s(l) for l in g.layers))
+    return sum(times) / len(times)
+
+
+def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
+    from repro.traffic import TrafficSimulator, get_arrival_process
+
+    svc = mean_service_s(pool)
+    slo = 4.0 * svc
+    rows = []
+    print(f"pool={pool}  mean_service={svc*1e3:.3f} ms  slo={slo*1e3:.3f} ms")
+    print(f"{'process':>8}{'policy':>14}{'load':>6}{'jobs':>6}{'rej%':>6}"
+          f"{'p50ms':>8}{'p95ms':>8}{'p99ms':>8}{'miss%':>7}{'goodput':>9}"
+          f"{'util%':>7}")
+    for proc in PROCESSES:
+        for load in LOADS:
+            rate = load / svc
+            horizon = JOBS_PER_CELL / rate
+            for pol in POLICIES:
+                arr = get_arrival_process(
+                    proc, rate=rate, horizon=horizon, seed=SEED,
+                    pool=pool, slo_s=slo)
+                res = TrafficSimulator(
+                    arr, policy=pol, backend="sim",
+                    max_concurrent=4, queue_cap=8, seed=SEED).run()
+                m = res.metrics
+                rows.append({"load": load, "rate_jobs_per_s": rate,
+                             "slo_s": slo, **res.as_dict()})
+                print(f"{proc:>8}{pol:>14}{load:>6.1f}{m.jobs_arrived:>6}"
+                      f"{m.rejection_rate*100:>6.1f}"
+                      f"{m.p50_latency_s*1e3:>8.2f}"
+                      f"{m.p95_latency_s*1e3:>8.2f}"
+                      f"{m.p99_latency_s*1e3:>8.2f}"
+                      f"{m.deadline_miss_rate*100:>7.1f}"
+                      f"{m.goodput_jobs_per_s:>9.1f}"
+                      f"{m.utilization*100:>7.1f}")
+
+    # cluster block: 4 arrays, offered load 4×ρ=0.9, jsq vs p2c dispatch
+    cluster_rows = []
+    n_arrays = 4
+    rate = n_arrays * 0.9 / svc
+    horizon = n_arrays * JOBS_PER_CELL / rate
+    for dispatch in ("jsq", "p2c"):
+        arr = get_arrival_process("poisson", rate=rate, horizon=horizon,
+                                  seed=SEED, pool=pool, slo_s=slo)
+        res = TrafficSimulator(arr, policy="equal", backend="sim",
+                               n_arrays=n_arrays, dispatch=dispatch,
+                               max_concurrent=4, queue_cap=8,
+                               seed=SEED).run()
+        m = res.metrics
+        cluster_rows.append({"load": 0.9, "rate_jobs_per_s": rate,
+                             "slo_s": slo, **res.as_dict()})
+        print(f"{'poisson':>8}{'equal/' + dispatch:>14}{0.9:>6.1f}"
+              f"{m.jobs_arrived:>6}{m.rejection_rate*100:>6.1f}"
+              f"{m.p50_latency_s*1e3:>8.2f}{m.p95_latency_s*1e3:>8.2f}"
+              f"{m.p99_latency_s*1e3:>8.2f}"
+              f"{m.deadline_miss_rate*100:>7.1f}"
+              f"{m.goodput_jobs_per_s:>9.1f}{m.utilization*100:>7.1f}"
+              f"  [{n_arrays} arrays]")
+
+    blob = {"benchmark": "traffic", "backend": "sim", "pool": pool,
+            "seed": SEED, "mean_service_s": svc, "slo_s": slo,
+            "results": rows, "cluster_results": cluster_rows}
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    return blob
+
+
+if __name__ == "__main__":
+    run()
+    sys.exit(0)

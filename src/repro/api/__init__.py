@@ -33,6 +33,7 @@ from repro.api.policy import (
 )
 from repro.api.backend import (
     Accelerator,
+    EnergyReport,
     MeshBackend,
     SimBackend,
     get_backend,
@@ -40,7 +41,7 @@ from repro.api.backend import (
     register_backend,
     resolve_backend,
 )
-from repro.api.session import Session, SessionResult
+from repro.api.session import BaselineRun, Session, SessionResult
 
 __all__ = [
     # policies
@@ -49,8 +50,8 @@ __all__ = [
     "WidthAwarePolicy",
     "register_policy", "get_policy", "list_policies", "resolve_policy",
     # backends
-    "Accelerator", "SimBackend", "MeshBackend",
+    "Accelerator", "EnergyReport", "SimBackend", "MeshBackend",
     "register_backend", "get_backend", "list_backends", "resolve_backend",
     # session
-    "Session", "SessionResult",
+    "Session", "SessionResult", "BaselineRun",
 ]

@@ -27,7 +27,24 @@ from typing import Optional, Protocol, runtime_checkable
 
 from repro.core.dnng import LayerShape
 from repro.core.partition import ArrayShape
+from repro.core.registry import Registry
 from repro.core.scheduler import ScheduleResult, StageModel, TimeFn
+
+
+@runtime_checkable
+class EnergyReport(Protocol):
+    """Structural type of a backend's energy accounting result.
+
+    ``repro.sim.energy.EnergyBreakdown`` is the canonical implementation;
+    any object exposing a joule ``total`` and a serializable ``as_dict``
+    satisfies the consumers (`SessionResult.energy_saving`, the Fig. 9(e,f)
+    benches).  ``dynamic`` (total minus leakage) is optional extra surface.
+    """
+
+    @property
+    def total(self) -> float: ...
+
+    def as_dict(self) -> dict: ...
 
 
 @runtime_checkable
@@ -45,46 +62,31 @@ class Accelerator(Protocol):
 
     def energy(self, result: ScheduleResult,
                layers_by_key: dict[tuple[str, int], LayerShape],
-               baseline_pe: bool) -> Optional[object]: ...
+               baseline_pe: bool) -> Optional[EnergyReport]: ...
 
 
 # ---------------------------------------------------------------------------
 # registry
 # ---------------------------------------------------------------------------
 
-_BACKENDS: dict[str, type] = {}
+_REGISTRY = Registry("backend")
+_BACKENDS = _REGISTRY.items
 
 
 def register_backend(name: str):
-    def deco(cls):
-        if name in _BACKENDS:
-            raise ValueError(f"backend {name!r} already registered")
-        cls.name = name
-        _BACKENDS[name] = cls
-        return cls
-
-    return deco
+    return _REGISTRY.register(name)
 
 
 def list_backends() -> list[str]:
-    return sorted(_BACKENDS)
+    return _REGISTRY.names()
 
 
 def get_backend(name: str, **kwargs) -> Accelerator:
-    if name not in _BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; registered: "
-                         f"{list_backends()}")
-    return _BACKENDS[name](**kwargs)
+    return _REGISTRY.get(name, **kwargs)
 
 
 def resolve_backend(backend: "str | Accelerator", **kwargs) -> Accelerator:
-    if isinstance(backend, str):
-        return get_backend(backend, **kwargs)
-    if kwargs:
-        raise ValueError("backend kwargs only apply to string-keyed backends")
-    if isinstance(backend, Accelerator):
-        return backend
-    raise ValueError(f"not an Accelerator backend: {backend!r}")
+    return _REGISTRY.resolve(backend, Accelerator, **kwargs)
 
 
 # ---------------------------------------------------------------------------

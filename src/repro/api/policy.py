@@ -55,6 +55,7 @@ from repro.core.partition import (
     partition_calculation,
     task_assignment,
 )
+from repro.core.registry import Registry
 
 ReadyLayer = tuple[str, int, LayerShape]  # (tenant, layer_index, layer)
 
@@ -176,33 +177,22 @@ class PartitionPolicy(abc.ABC):
 # registry
 # ---------------------------------------------------------------------------
 
-_POLICIES: dict[str, type[PartitionPolicy]] = {}
-_ALIASES = {"paper": "equal"}  # legacy scheduler policy strings
+# "paper" is the legacy scheduler string for Algorithm 1 verbatim
+_REGISTRY = Registry("policy", aliases={"paper": "equal"})
+_POLICIES = _REGISTRY.items  # live dict (tests remove throwaway plugins)
 
 
 def register_policy(name: str):
     """Class decorator: make a policy constructible by name."""
-
-    def deco(cls: type[PartitionPolicy]) -> type[PartitionPolicy]:
-        if name in _POLICIES:
-            raise ValueError(f"policy {name!r} already registered")
-        cls.name = name
-        _POLICIES[name] = cls
-        return cls
-
-    return deco
+    return _REGISTRY.register(name)
 
 
 def list_policies() -> list[str]:
-    return sorted(_POLICIES)
+    return _REGISTRY.names()
 
 
 def get_policy(name: str, **kwargs) -> PartitionPolicy:
-    key = _ALIASES.get(name, name)
-    if key not in _POLICIES:
-        raise ValueError(f"unknown policy {name!r}; registered: "
-                         f"{list_policies()}")
-    return _POLICIES[key](**kwargs)
+    return _REGISTRY.get(name, **kwargs)
 
 
 def resolve_policy(policy: "str | PartitionPolicy") -> PartitionPolicy:

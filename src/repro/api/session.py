@@ -21,7 +21,7 @@ import dataclasses
 from collections import Counter
 from typing import Optional, Sequence
 
-from repro.api.backend import Accelerator, resolve_backend
+from repro.api.backend import Accelerator, EnergyReport, resolve_backend
 from repro.api.policy import PartitionPolicy, resolve_policy
 from repro.core.dnng import DNNG, LayerShape
 from repro.core.scheduler import (
@@ -29,6 +29,25 @@ from repro.core.scheduler import (
     schedule_dynamic,
     schedule_sequential,
 )
+
+
+@dataclasses.dataclass(frozen=True)
+class BaselineRun:
+    """A sequential single-tenancy run of one workload on one backend.
+
+    Policy-independent (the baseline never partitions), so one instance can
+    be shared across every policy's :meth:`Session.run` on the same
+    workload — see ``benchmarks/run.py``.  Sharing is validated by workload
+    name, DNNG set, array geometry and backend name; two backends with the
+    same name but different model constants (e.g. custom ``SystolicConfig``
+    clocks) are indistinguishable here — reusing across those is on the
+    caller.
+    """
+
+    workload: str
+    schedule: ScheduleResult
+    energy: Optional[EnergyReport] = None
+    backend: str = ""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -41,8 +60,8 @@ class SessionResult:
     backend: str
     partitioned: ScheduleResult
     baseline: Optional[ScheduleResult] = None
-    partitioned_energy: Optional[object] = None
-    baseline_energy: Optional[object] = None
+    partitioned_energy: Optional[EnergyReport] = None
+    baseline_energy: Optional[EnergyReport] = None
 
     # -- headline metrics (Fig. 9) ----------------------------------------
     @property
@@ -116,20 +135,60 @@ class Session:
             raise ValueError("workload must be a name or a sequence of DNNGs")
         return "custom", dnngs
 
+    @staticmethod
+    def _layers_by_key(dnngs: Sequence[DNNG]
+                       ) -> dict[tuple[str, int], LayerShape]:
+        return {(g.name, i): layer
+                for g in dnngs for i, layer in enumerate(g.layers)}
+
     # -- execution ----------------------------------------------------------
-    def run(self, workload, *, compare_baseline: bool = True) -> SessionResult:
+    def run_baseline(self, workload) -> BaselineRun:
+        """Sequential single-tenancy run only — policy-independent, so the
+        result can be passed as ``baseline=`` to several :meth:`run` calls
+        on the same workload (the benchmark matrix computes it once)."""
+        name, dnngs = self._resolve_workload(workload)
+        base = schedule_sequential(dnngs, self.backend.array,
+                                   self.backend.time_fn(),
+                                   stage=self.backend.stage_model())
+        e_base = self.backend.energy(base, self._layers_by_key(dnngs),
+                                     baseline_pe=True)
+        return BaselineRun(workload=name, schedule=base, energy=e_base,
+                           backend=getattr(self.backend, "name",
+                                           type(self.backend).__name__))
+
+    def run(self, workload, *, compare_baseline: bool = True,
+            baseline: Optional[BaselineRun] = None) -> SessionResult:
         name, dnngs = self._resolve_workload(workload)
         time_fn = self.backend.time_fn()
         stage = self.backend.stage_model()
-        layers: dict[tuple[str, int], LayerShape] = {
-            (g.name, i): layer
-            for g in dnngs for i, layer in enumerate(g.layers)}
+        layers = self._layers_by_key(dnngs)
 
         part = schedule_dynamic(dnngs, self.backend.array, time_fn,
                                 stage=stage, policy=self.policy)
         e_part = self.backend.energy(part, layers, baseline_pe=False)
         base = e_base = None
-        if compare_baseline:
+        if baseline is not None:
+            if baseline.workload != name:
+                raise ValueError(f"baseline is for workload "
+                                 f"{baseline.workload!r}, not {name!r}")
+            # name equality is not enough: every explicit DNNG sequence is
+            # "custom", and a baseline from another backend geometry would
+            # silently corrupt the savings numbers
+            if set(baseline.schedule.completion) != {g.name for g in dnngs}:
+                raise ValueError(
+                    f"baseline covers DNNGs "
+                    f"{sorted(baseline.schedule.completion)}, workload has "
+                    f"{sorted(g.name for g in dnngs)}")
+            if baseline.schedule.array != self.backend.array:
+                raise ValueError(
+                    f"baseline ran on array {baseline.schedule.array}, "
+                    f"backend has {self.backend.array}")
+            mine = getattr(self.backend, "name", type(self.backend).__name__)
+            if baseline.backend and baseline.backend != mine:
+                raise ValueError(f"baseline ran on backend "
+                                 f"{baseline.backend!r}, not {mine!r}")
+            base, e_base = baseline.schedule, baseline.energy
+        elif compare_baseline:
             base = schedule_sequential(dnngs, self.backend.array, time_fn,
                                        stage=stage)
             e_base = self.backend.energy(base, layers, baseline_pe=True)
@@ -139,6 +198,29 @@ class Session:
             backend=getattr(self.backend, "name", type(self.backend).__name__),
             partitioned=part, baseline=base,
             partitioned_energy=e_part, baseline_energy=e_base)
+
+    def serve(self, arrivals, *, n_arrays: int = 1, dispatch: str = "jsq",
+              max_concurrent: int = 4, queue_cap: int = 16, seed: int = 0,
+              keep_trace: bool = False, **arrival_kwargs):
+        """Open-loop serving: drive an arrival process through this
+        session's policy × backend and return a
+        :class:`repro.traffic.ServeResult` (latency percentiles,
+        deadline-miss rate, goodput — the serving-side complement of
+        :meth:`run`'s makespan numbers).
+
+        ``arrivals`` is a `repro.traffic.arrivals` process instance, a
+        registry name (``"poisson"``, ``"mmpp"``, ``"diurnal"``,
+        ``"trace"`` — constructor kwargs such as ``rate=``/``horizon=``
+        forwarded), or any time-ordered iterable of
+        :class:`~repro.traffic.arrivals.Job`.
+        """
+        # local import: repro.api must stay importable without repro.traffic
+        from repro.traffic.simulator import TrafficSimulator
+        return TrafficSimulator(
+            arrivals, policy=self.policy, backend=self.backend,
+            n_arrays=n_arrays, dispatch=dispatch,
+            max_concurrent=max_concurrent, queue_cap=queue_cap, seed=seed,
+            keep_trace=keep_trace, **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

@@ -10,6 +10,7 @@ from repro.core.partition import (
     task_assignment,
 )
 from repro.core.scheduler import (
+    DynamicScheduler,
     ScheduleResult,
     TraceEvent,
     schedule_dynamic,
@@ -21,6 +22,7 @@ __all__ = [
     "DNNG", "LayerShape", "chain",
     "ArrayShape", "Assignment", "Partition", "PartitionSet",
     "partition_calculation", "task_assignment",
+    "DynamicScheduler",
     "ScheduleResult", "TraceEvent", "schedule_dynamic", "schedule_sequential",
     "GEMM", "DataflowCost", "ws_cost", "utilization",
 ]

@@ -103,12 +103,18 @@ class ScheduleResult:
     completion: dict[str, float]   # per-DNNG completion time (Fig. 9(a,b))
     makespan: float
     array: ArrayShape
+    # exact compute-busy accumulator from the event loop; None = derive from
+    # the trace.  Keeps utilization correct when the trace was dropped
+    # (DynamicScheduler(keep_trace=False) over long open-loop horizons).
+    busy_pe_seconds: float | None = None
 
     def tenant_trace(self, tenant: str) -> list[TraceEvent]:
         return [e for e in self.trace if e.tenant == tenant]
 
     @property
     def pe_seconds_busy(self) -> float:
+        if self.busy_pe_seconds is not None:
+            return self.busy_pe_seconds
         return sum(e.compute_duration * e.partition.n_pes for e in self.trace)
 
     @property
@@ -156,6 +162,241 @@ class _Tenant:
         return None
 
 
+class DynamicScheduler:
+    """Incremental, resumable form of Algorithm 1's event loop.
+
+    The closed-workload entry point :func:`schedule_dynamic` submits every
+    DNNG up front and drains; the open-loop traffic simulator
+    (`repro.traffic`) instead interleaves :meth:`submit` calls with
+    :meth:`run_until` so DNNGs arrive *while* others execute, and the policy
+    re-runs its split+assign at every arrival and completion event — the
+    paper's Fig. 4 timeline under live load.
+
+    * :meth:`submit`      — admit one DNNG (its ``arrival_time`` is the event
+      timestamp; must be >= the current clock).
+    * :meth:`run_until`   — process every event with timestamp <= ``t``.
+    * :meth:`run`         — drain all pending events (closed-workload mode).
+    * ``on_complete``     — optional ``(tenant, time)`` callback fired when a
+      DNNG finishes its last layer (the traffic simulator's queue-pop hook).
+    * ``keep_trace=False``— bounded-memory mode for long open-loop runs:
+      per-layer :class:`TraceEvent` records AND the per-tenant completion
+      dict are dropped (each would grow O(total jobs served)); busy
+      PE-seconds, completion count and last completion time are still
+      accumulated, and per-job completion instants flow through
+      ``on_complete``.
+    """
+
+    def __init__(self, array: ArrayShape, time_fn: TimeFn,
+                 stage: StageModel | None = None, policy="paper",
+                 on_complete: Callable[[str, float], None] | None = None,
+                 keep_trace: bool = True, start_time: float = 0.0):
+        # lazy import: repro.api builds on this module (no import cycle)
+        from repro.api.policy import resolve_policy
+        self.array = array
+        self.time_fn = time_fn
+        self.stage = stage
+        self.pol = resolve_policy(policy)
+        self.on_complete = on_complete
+        self.keep_trace = keep_trace
+        self.tenants: dict[str, _Tenant] = {}
+        self.pset = PartitionSet(array)
+        self.bus = _Bus()
+        self.trace: list[TraceEvent] = []
+        self.completion: dict[str, float] = {}
+        self.now = start_time
+        self.pe_seconds_busy = 0.0
+        self.n_completed = 0
+        self.last_completion = start_time
+        # in-flight state: tenant -> (idx, layer, part, t_assign, t_cstart, t_cend)
+        self._inflight: dict[str, tuple] = {}
+        # event heap: (time, seq, kind, tenant); kinds: "arrive", "cdone", "done"
+        self._seq = itertools.count()
+        self._events: list[tuple[float, int, str, str]] = []
+
+    # -- queries ------------------------------------------------------------
+    @property
+    def n_active(self) -> int:
+        """DNNGs submitted but not yet complete (the in-system count)."""
+        return len(self.tenants)
+
+    def pending(self) -> bool:
+        return bool(self._events)
+
+    def next_event_time(self) -> float | None:
+        return self._events[0][0] if self._events else None
+
+    # -- admission ----------------------------------------------------------
+    def submit(self, dnng: DNNG) -> None:
+        """Admit one DNNG; its layers become schedulable at ``arrival_time``.
+
+        Names must be unique per scheduler.  In ``keep_trace=False`` mode
+        completed names are not remembered (bounded memory), so collisions
+        with *retired* tenants are only caught by the caller — the traffic
+        simulator enforces uniqueness across the whole arrival stream.
+        """
+        if dnng.name in self.tenants or dnng.name in self.completion:
+            raise ValueError(f"duplicate DNNG name: {dnng.name!r}")
+        if dnng.arrival_time < self.now:
+            raise ValueError(
+                f"cannot submit {dnng.name!r} at t={dnng.arrival_time} in "
+                f"the past (clock is at {self.now})")
+        self.tenants[dnng.name] = _Tenant(dnng)
+        heapq.heappush(self._events, (dnng.arrival_time, next(self._seq),
+                                      "arrive", dnng.name))
+
+    # -- event loop ---------------------------------------------------------
+    def _ready_tenants(self, now: float) -> list[tuple[str, int, LayerShape]]:
+        out = []
+        for name, t in self.tenants.items():
+            if t.dnng.arrival_time > now:
+                continue
+            rl = t.ready_layer()
+            if rl is not None:
+                out.append((name, rl[0], rl[1]))
+        return out
+
+    def _launch(self, now: float, tenant: str, layer_idx: int,
+                layer: LayerShape, part: Partition) -> None:
+        t = self.tenants[tenant]
+        t.running = True
+        # stage-in on the shared bus, then compute; stage-out acquires the
+        # bus only when compute actually completes (see "cdone" handler).
+        if self.stage is not None:
+            _, si_end = self.bus.acquire(now, self.stage.stage_in_s(layer))
+        else:
+            si_end = now
+        c_dur = self.time_fn(layer, part)
+        if c_dur <= 0:
+            raise ValueError(f"time_fn returned non-positive duration {c_dur}")
+        c_end = si_end + c_dur
+        self._inflight[tenant] = (layer_idx, layer, part, now, si_end, c_end)
+        heapq.heappush(self._events, (c_end, next(self._seq), "cdone", tenant))
+
+    def _demands(self, ready: Sequence[tuple[str, int, LayerShape]]):
+        from repro.api.policy import TenantDemand
+        return [TenantDemand(name=tenant, demand=float(layer.opr),
+                             width_demand=max(1, min(layer.gemm_n,
+                                                     self.array.cols)))
+                for tenant, _idx, layer in ready]
+
+    def _assign(self, now: float) -> None:
+        """(Re-)run the policy's split + assign steps at time ``now``."""
+        from repro.api.policy import AssignContext
+        array, pset, pol = self.array, self.pset, self.pol
+        ready = self._ready_tenants(now)
+        if not ready:
+            return
+        whole_array_free = (not pset.busy_partitions
+                            and len(pset.free_partitions) == 1)
+        if whole_array_free:
+            ctx = AssignContext(array=array, time_fn=self.time_fn, busy={})
+            if len(ready) == 1:
+                # Fig. 5 lines 5–6: single available task -> offer all PEs.
+                offered = [Partition(rows=array.rows, col_start=0,
+                                     cols=array.cols)]
+            else:
+                # fresh split among all available layers (lines 8–10)
+                offered = pol.split(array, self._demands(ready))
+            for a in pol.assign(ready, offered, ctx):
+                got = pset.allocate_exact(a.tenant, a.partition)
+                self._launch(now, a.tenant, a.layer_index, a.layer, got)
+            return
+        # steady state: policy matches ready layers to merged free slices,
+        # one grant at a time (trimmed grants change the free list, so
+        # re-offer after every allocation).
+        progressed = True
+        while progressed:
+            progressed = False
+            free = pset.free_partitions
+            ready = self._ready_tenants(now)
+            if not free or not ready:
+                break
+            ctx = AssignContext(array=array, time_fn=self.time_fn,
+                                busy=pset.busy_partitions)
+            for a in pol.assign(ready, free, ctx):
+                got = pset.allocate_exact(a.tenant, a.partition)
+                self._launch(now, a.tenant, a.layer_index, a.layer, got)
+                progressed = True
+                break  # free list changed; re-sort and re-match
+
+    def _compute_done(self, tenant: str, now: float) -> None:
+        idx, layer, part, t_assign, t_cstart, t_cend = self._inflight[tenant]
+        if self.stage is not None:
+            _, so_end = self.bus.acquire(now, self.stage.stage_out_s(layer))
+        else:
+            so_end = now
+        self.pe_seconds_busy += (t_cend - t_cstart) * part.n_pes
+        if self.keep_trace:
+            self.trace.append(TraceEvent(
+                tenant=tenant, layer_index=idx,
+                layer_name=layer.name or f"L{idx}",
+                partition=part, start=t_assign, end=so_end,
+                compute_start=t_cstart, compute_end=t_cend))
+        heapq.heappush(self._events, (so_end, next(self._seq), "done", tenant))
+
+    def _finish(self, tenant: str, now: float) -> None:
+        t = self.tenants[tenant]
+        t.running = False
+        t.done_layers.add(t.next_layer)
+        t.next_layer += 1
+        self._inflight.pop(tenant, None)
+        self.pset.free(tenant)  # eager merge (§3.3)
+        if t.finished:
+            if self.keep_trace:
+                self.completion[tenant] = now
+            self.n_completed += 1
+            self.last_completion = now
+            # retired tenants never become ready again; drop them so the
+            # ready scan stays O(live tenants) over open-loop horizons
+            del self.tenants[tenant]
+            if self.on_complete is not None:
+                self.on_complete(tenant, now)
+
+    def _dispatch(self, kind: str, name: str, now: float) -> None:
+        if kind == "done":
+            self._finish(name, now)
+        elif kind == "cdone":
+            self._compute_done(name, now)
+        # "arrive" has no state change — it exists to trigger _assign(now)
+
+    def _step(self) -> None:
+        """Pop one event timestamp: handle every event at that instant, then
+        re-run the policy (the rebalance-on-arrival/-completion point)."""
+        now, _, kind, name = heapq.heappop(self._events)
+        self.now = now
+        self._dispatch(kind, name, now)
+        # drain all events at the same timestamp before re-assigning
+        while self._events and self._events[0][0] == now:
+            _, _, k2, n2 = heapq.heappop(self._events)
+            self._dispatch(k2, n2, now)
+        self._assign(now)
+        self.pset.check()
+
+    def run_until(self, t: float) -> None:
+        """Process every pending event with timestamp <= ``t``."""
+        while self._events and self._events[0][0] <= t:
+            self._step()
+        self.now = max(self.now, t)
+
+    def run(self) -> None:
+        """Drain every pending event (closed-workload mode)."""
+        while self._events:
+            self._step()
+
+    # -- results ------------------------------------------------------------
+    def result(self) -> ScheduleResult:
+        if self.completion:
+            makespan = max(self.completion.values())
+        elif self.n_completed:
+            makespan = self.last_completion  # lean mode: dict not retained
+        else:
+            makespan = self.now
+        return ScheduleResult(trace=tuple(self.trace),
+                              completion=dict(self.completion),
+                              makespan=makespan, array=self.array,
+                              busy_pe_seconds=self.pe_seconds_busy)
+
+
 def schedule_dynamic(
     dnngs: Sequence[DNNG],
     array: ArrayShape,
@@ -172,146 +413,26 @@ def schedule_dynamic(
     pre-API string ``"width_aware"`` also still resolves: grants trimmed to
     ``min(N, cols)`` plus the hold-for-width decline rule (EXPERIMENTS.md
     §Perf) that keeps width-critical layers off slivers.
+
+    This is the closed-workload wrapper over :class:`DynamicScheduler`:
+    submit everything, drain, report.
     """
-    # lazy import: repro.api builds on this module (no import cycle)
-    from repro.api.policy import AssignContext, TenantDemand, resolve_policy
-    pol = resolve_policy(policy)
     if not dnngs:
         return ScheduleResult(trace=(), completion={}, makespan=0.0, array=array)
     names = [g.name for g in dnngs]
     if len(set(names)) != len(names):
         raise ValueError(f"duplicate DNNG names: {names}")
-
-    tenants = {g.name: _Tenant(g) for g in dnngs}
-    pset = PartitionSet(array)
-    bus = _Bus()
-    trace: list[TraceEvent] = []
-    completion: dict[str, float] = {}
-    # in-flight layer state: tenant -> (idx, layer, part, t_assign, t_cstart, t_cend)
-    inflight: dict[str, tuple] = {}
-
-    # event heap: (time, seq, kind, tenant); kinds: "arrive", "cdone", "done"
-    seq = itertools.count()
-    events: list[tuple[float, int, str, str]] = []
+    # negative arrival times are legal in batch mode: start the clock there
+    start = min(0.0, min(g.arrival_time for g in dnngs))
+    sched = DynamicScheduler(array, time_fn, stage=stage, policy=policy,
+                             start_time=start)
     for g in dnngs:
-        heapq.heappush(events, (g.arrival_time, next(seq), "arrive", g.name))
-
-    def ready_tenants(now: float) -> list[tuple[str, int, LayerShape]]:
-        out = []
-        for name, t in tenants.items():
-            if t.dnng.arrival_time > now:
-                continue
-            rl = t.ready_layer()
-            if rl is not None:
-                out.append((name, rl[0], rl[1]))
-        return out
-
-    def launch(now: float, tenant: str, layer_idx: int, layer: LayerShape,
-               part: Partition) -> None:
-        t = tenants[tenant]
-        t.running = True
-        # stage-in on the shared bus, then compute; stage-out acquires the
-        # bus only when compute actually completes (see "cdone" handler).
-        if stage is not None:
-            _, si_end = bus.acquire(now, stage.stage_in_s(layer))
-        else:
-            si_end = now
-        c_dur = time_fn(layer, part)
-        if c_dur <= 0:
-            raise ValueError(f"time_fn returned non-positive duration {c_dur}")
-        c_end = si_end + c_dur
-        inflight[tenant] = (layer_idx, layer, part, now, si_end, c_end)
-        heapq.heappush(events, (c_end, next(seq), "cdone", tenant))
-
-    def demands(ready: Sequence[tuple[str, int, LayerShape]]
-                ) -> list[TenantDemand]:
-        return [TenantDemand(name=tenant, demand=float(layer.opr),
-                             width_demand=max(1, min(layer.gemm_n,
-                                                     array.cols)))
-                for tenant, _idx, layer in ready]
-
-    def assign(now: float) -> None:
-        """(Re-)run the policy's split + assign steps at time ``now``."""
-        ready = ready_tenants(now)
-        if not ready:
-            return
-        whole_array_free = (not pset.busy_partitions
-                            and len(pset.free_partitions) == 1)
-        if whole_array_free:
-            ctx = AssignContext(array=array, time_fn=time_fn, busy={})
-            if len(ready) == 1:
-                # Fig. 5 lines 5–6: single available task -> offer all PEs.
-                offered = [Partition(rows=array.rows, col_start=0,
-                                     cols=array.cols)]
-            else:
-                # fresh split among all available layers (lines 8–10)
-                offered = pol.split(array, demands(ready))
-            for a in pol.assign(ready, offered, ctx):
-                got = pset.allocate_exact(a.tenant, a.partition)
-                launch(now, a.tenant, a.layer_index, a.layer, got)
-            return
-        # steady state: policy matches ready layers to merged free slices,
-        # one grant at a time (trimmed grants change the free list, so
-        # re-offer after every allocation).
-        progressed = True
-        while progressed:
-            progressed = False
-            free = pset.free_partitions
-            ready = ready_tenants(now)
-            if not free or not ready:
-                break
-            ctx = AssignContext(array=array, time_fn=time_fn,
-                                busy=pset.busy_partitions)
-            for a in pol.assign(ready, free, ctx):
-                got = pset.allocate_exact(a.tenant, a.partition)
-                launch(now, a.tenant, a.layer_index, a.layer, got)
-                progressed = True
-                break  # free list changed; re-sort and re-match
-
-    def compute_done(tenant: str, now: float) -> None:
-        idx, layer, part, t_assign, t_cstart, t_cend = inflight[tenant]
-        if stage is not None:
-            _, so_end = bus.acquire(now, stage.stage_out_s(layer))
-        else:
-            so_end = now
-        trace.append(TraceEvent(tenant=tenant, layer_index=idx,
-                                layer_name=layer.name or f"L{idx}",
-                                partition=part, start=t_assign, end=so_end,
-                                compute_start=t_cstart, compute_end=t_cend))
-        heapq.heappush(events, (so_end, next(seq), "done", tenant))
-
-    def finish(tenant: str, now: float) -> None:
-        t = tenants[tenant]
-        t.running = False
-        t.done_layers.add(t.next_layer)
-        t.next_layer += 1
-        inflight.pop(tenant, None)
-        pset.free(tenant)  # eager merge (§3.3)
-        if t.finished:
-            completion[tenant] = now
-
-    now = 0.0
-    while events:
-        now, _, kind, name = heapq.heappop(events)
-        if kind == "done":
-            finish(name, now)
-        elif kind == "cdone":
-            compute_done(name, now)
-        # drain all events at the same timestamp before re-assigning
-        while events and events[0][0] == now:
-            _, _, k2, n2 = heapq.heappop(events)
-            if k2 == "done":
-                finish(n2, now)
-            elif k2 == "cdone":
-                compute_done(n2, now)
-        assign(now)
-        pset.check()
-
-    if len(completion) != len(dnngs):
-        missing = set(names) - set(completion)
+        sched.submit(g)
+    sched.run()
+    if len(sched.completion) != len(dnngs):
+        missing = set(names) - set(sched.completion)
         raise RuntimeError(f"scheduler deadlock: {missing} never completed")
-    return ScheduleResult(trace=tuple(trace), completion=completion,
-                          makespan=max(completion.values()), array=array)
+    return sched.result()
 
 
 def schedule_sequential(

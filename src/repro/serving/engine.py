@@ -72,6 +72,7 @@ class MultiTenantEngine:
         self.width_history: list[tuple[int, str, int]] = []
         self.round = 0
         self._rid = itertools.count()
+        self._dirty = False  # demand changed since the last rebalance
 
     # -- tenancy ------------------------------------------------------------
     def add_tenant(self, name: str, session: DecodeSession,
@@ -88,8 +89,13 @@ class MultiTenantEngine:
         return svc
 
     def submit(self, tenant: str, prompt: list[int], max_new: int) -> Request:
+        """Enqueue a request — this *changes the tenant's demand*, so the
+        partition split is stale: mark dirty and re-run the policy at the
+        next :meth:`step` (batching all submits of a round into one
+        rebalance instead of one re-shard storm per request)."""
         req = Request(rid=next(self._rid), prompt=prompt, max_new=max_new)
         self.tenants[tenant].queue.append(req)
+        self._dirty = True
         return req
 
     def _rebalance(self) -> None:
@@ -100,6 +106,7 @@ class MultiTenantEngine:
         for name, part in grants.items():
             self.tenants[name].width = part.cols
             self.width_history.append((self.round, name, part.cols))
+        self._dirty = False
 
     def _retire_drained(self) -> list[str]:
         done = [n for n, s in self.tenants.items() if s.drained]
@@ -122,6 +129,10 @@ class MultiTenantEngine:
         Returns {tenant: {rid: token}} of this round's emissions.
         """
         self.round += 1
+        if self._dirty:
+            # outstanding demand changed since the last split (submit);
+            # widths must track demand, not just admit/retire/failure
+            self._rebalance()
         out: dict[str, dict[int, int]] = {}
         for name, svc in self.tenants.items():
             while svc.queue and svc.session.can_admit():

@@ -282,3 +282,48 @@ WORKLOADS = {
     "heavy": heavy_workload,
     "light": light_workload,
 }
+
+# Table-1 models individually, for per-job sampling by the open-loop traffic
+# generator (`repro.traffic.arrivals`): each arrival picks ONE model from a
+# pool instead of replaying the whole closed workload at t≈0.
+MODELS = {
+    "AlexNet": alexnet,
+    "ResNet50": resnet50,
+    "GoogleNet": googlenet,
+    "SA_CNN": sa_cnn,
+    "SA_LSTM": sa_lstm,
+    "NCF": ncf,
+    "AlphaGoZero": alphagozero,
+    "Transformer": transformer,
+    "MelodyLSTM": melody_lstm,
+    "GoogleTranslate": google_translate,
+    "DeepVoice": deep_voice,
+    "HandwritingLSTM": handwriting_lstm,
+}
+
+MODEL_POOLS = {
+    "heavy": ("AlexNet", "ResNet50", "GoogleNet", "SA_CNN", "SA_LSTM",
+              "NCF", "AlphaGoZero", "Transformer"),
+    "light": ("MelodyLSTM", "GoogleTranslate", "DeepVoice",
+              "HandwritingLSTM"),
+    "all": tuple(MODELS),
+}
+
+
+def sample_dnng(rng, pool: str = "all", name: str | None = None,
+                arrival_time: float = 0.0) -> DNNG:
+    """One fresh Table-1 DNNG for an arriving job.
+
+    ``rng`` is a seeded ``random.Random`` (determinism lives with the
+    caller); ``pool`` selects the sampling universe (``MODEL_POOLS``);
+    ``name`` overrides the tenant name so concurrent jobs of the same model
+    stay distinct in the scheduler.
+    """
+    import dataclasses as _dc
+    if pool not in MODEL_POOLS:
+        raise ValueError(f"unknown pool {pool!r}; known: "
+                         f"{sorted(MODEL_POOLS)}")
+    model = rng.choice(MODEL_POOLS[pool])
+    g = MODELS[model]()
+    return _dc.replace(g, name=name if name is not None else g.name,
+                       arrival_time=arrival_time)

@@ -1,0 +1,63 @@
+"""`repro.traffic` — open-loop arrival-driven serving simulation.
+
+The closed-workload harness measures makespan on a fixed batch; this
+package measures what a serving system is actually judged on: latency
+percentiles, deadline-miss rate and goodput under a live arrival process,
+with the partition policy re-running on every arrival and completion.
+
+    from repro.traffic import PoissonArrivals, TrafficSimulator
+
+    arr = PoissonArrivals(rate=2000.0, horizon=0.05, seed=0, pool="light")
+    res = TrafficSimulator(arr, policy="proportional").run()
+    print(res.metrics.p99_latency_s, res.metrics.deadline_miss_rate)
+
+``arrivals``  — seeded Poisson / MMPP / diurnal / trace-replay job streams.
+``simulator`` — the discrete-event loop + admission control + ServeResult.
+``metrics``   — p50/p95/p99, miss rate, goodput, queue depth, utilization.
+``cluster``   — N-array fleets with jsq / power-of-two-choices dispatch.
+"""
+
+from repro.traffic.arrivals import (
+    ArrivalProcess,
+    DiurnalArrivals,
+    Job,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    get_arrival_process,
+    list_arrival_processes,
+    register_arrivals,
+    resolve_arrivals,
+)
+from repro.traffic.cluster import (
+    ArrayNode,
+    Dispatcher,
+    JoinShortestQueue,
+    PowerOfTwoChoices,
+    list_dispatchers,
+    register_dispatcher,
+    resolve_dispatcher,
+)
+from repro.traffic.metrics import (
+    JobRecord,
+    TrafficMetrics,
+    percentile,
+    split_by,
+    summarize,
+)
+from repro.traffic.simulator import ServeResult, TrafficSimulator, serve
+
+__all__ = [
+    # arrivals
+    "Job", "ArrivalProcess",
+    "PoissonArrivals", "MMPPArrivals", "DiurnalArrivals", "TraceArrivals",
+    "register_arrivals", "get_arrival_process", "list_arrival_processes",
+    "resolve_arrivals",
+    # cluster
+    "ArrayNode", "Dispatcher", "JoinShortestQueue", "PowerOfTwoChoices",
+    "register_dispatcher", "list_dispatchers", "resolve_dispatcher",
+    # metrics
+    "JobRecord", "TrafficMetrics", "percentile", "summarize", "split_by",
+    # simulator
+    "TrafficSimulator", "ServeResult", "serve",
+]

@@ -1,0 +1,263 @@
+"""Open-loop arrival processes — the load side of the serving problem.
+
+The paper's evaluation (and everything in `repro.sim`) is *closed*: all
+DNNGs are present at t≈0 and the metric is makespan.  Real multi-tenant
+accelerators ("No DNN Left Behind", arXiv 1901.06887) are judged open-loop:
+jobs arrive on their own clock, each with a deadline, and the system is
+measured on latency percentiles and SLO attainment.  This module generates
+those arrivals as timestamped :class:`Job` streams.
+
+Four processes, all seeded and fully deterministic (``random.Random``):
+
+==============  ===========================================================
+``poisson``     memoryless arrivals at a constant ``rate``
+``mmpp``        2-state Markov-modulated Poisson (bursty: calm ↔ burst
+                states with different rates and exponential dwell times)
+``diurnal``     sinusoid-modulated rate (day/night load swing) via
+                Lewis-Shedler thinning
+``trace``       replay of a recorded JSON trace (list of
+                ``{"t", "model", "slo_s", "tier"}`` rows or a file path)
+==============  ===========================================================
+
+Each job samples ONE Table-1 DNNG from a ``pool`` (see
+``repro.sim.workloads.MODEL_POOLS``) and carries an absolute ``deadline``
+(= arrival + per-job SLO) plus an SLA ``tier`` so priority policies have
+something to act on.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import json
+import math
+import random
+from typing import Iterator, Sequence
+
+from repro.core.dnng import DNNG
+from repro.core.registry import Registry
+from repro.sim.workloads import MODEL_POOLS, MODELS, sample_dnng
+
+
+@dataclasses.dataclass(frozen=True)
+class Job:
+    """One arriving inference request: a DNNG with a deadline and a tier."""
+
+    job_id: int
+    arrival: float        # absolute arrival time (s)
+    dnng: DNNG            # arrival_time == arrival; name unique per job
+    deadline: float       # absolute completion deadline (s)
+    tier: int = 0         # SLA class (smaller = more important)
+
+    @property
+    def model(self) -> str:
+        """Base model name (the DNNG name minus the per-job suffix)."""
+        return self.dnng.name.split("#", 1)[0]
+
+    @property
+    def slo_s(self) -> float:
+        return self.deadline - self.arrival
+
+
+class ArrivalProcess(abc.ABC):
+    """Seeded generator of a finite, time-ordered :class:`Job` stream.
+
+    Subclasses implement :meth:`_arrival_times`; job composition (model
+    sampling, deadline, tier) is shared so processes differ *only* in their
+    point process.  Iterating a process always replays the same stream —
+    the rng is re-seeded per iteration.
+    """
+
+    name: str = ""
+
+    def __init__(self, rate: float, horizon: float, seed: int = 0,
+                 pool: str = "light", slo_s: float = 0.05,
+                 tiers: Sequence[int] = (0,)):
+        if rate <= 0 or horizon <= 0:
+            raise ValueError(f"rate and horizon must be positive "
+                             f"(rate={rate}, horizon={horizon})")
+        if pool not in MODEL_POOLS:
+            raise ValueError(f"unknown pool {pool!r}; known: "
+                             f"{sorted(MODEL_POOLS)}")
+        if not tiers:
+            raise ValueError("tiers must be non-empty")
+        self.rate = rate
+        self.horizon = horizon
+        self.seed = seed
+        self.pool = pool
+        self.slo_s = slo_s
+        self.tiers = tuple(tiers)
+
+    @abc.abstractmethod
+    def _arrival_times(self, rng: random.Random) -> Iterator[float]:
+        """Yield strictly increasing arrival instants < ``horizon``."""
+
+    def __iter__(self) -> Iterator[Job]:
+        rng = random.Random(self.seed)
+        for jid, t in enumerate(self._arrival_times(rng)):
+            g = sample_dnng(rng, pool=self.pool, arrival_time=t)
+            g = dataclasses.replace(g, name=f"{g.name}#{jid}")
+            yield Job(job_id=jid, arrival=t, dnng=g,
+                      deadline=t + self.slo_s,
+                      tier=rng.choice(self.tiers))
+
+    def jobs(self) -> list[Job]:
+        return list(self)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+_REGISTRY = Registry("arrival process")
+
+
+def register_arrivals(name: str):
+    return _REGISTRY.register(name)
+
+
+def list_arrival_processes() -> list[str]:
+    return _REGISTRY.names()
+
+
+def get_arrival_process(name: str, **kwargs) -> ArrivalProcess:
+    return _REGISTRY.get(name, **kwargs)
+
+
+def resolve_arrivals(arrivals, **kwargs) -> ArrivalProcess:
+    """Accept a registry name or an :class:`ArrivalProcess` instance."""
+    return _REGISTRY.resolve(arrivals, ArrivalProcess, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# implementations
+# ---------------------------------------------------------------------------
+
+@register_arrivals("poisson")
+class PoissonArrivals(ArrivalProcess):
+    """Homogeneous Poisson process: exponential inter-arrival times."""
+
+    def _arrival_times(self, rng: random.Random) -> Iterator[float]:
+        t = rng.expovariate(self.rate)
+        while t < self.horizon:
+            yield t
+            t += rng.expovariate(self.rate)
+
+
+@register_arrivals("mmpp")
+class MMPPArrivals(ArrivalProcess):
+    """2-state Markov-modulated Poisson process (bursty traffic).
+
+    The process alternates between a *calm* and a *burst* state (rates in
+    ratio ``burst_factor``), each with exponentially distributed dwell time
+    of mean ``dwell_s``.  ``rate`` is the **long-run mean** arrival rate —
+    equal expected dwell in both states means the calm rate is
+    ``2·rate/(1+burst_factor)`` — so a given ``rate`` offers the same load
+    as the other processes.  Memorylessness lets us redraw the
+    inter-arrival after each state switch.
+    """
+
+    def __init__(self, rate: float, horizon: float, seed: int = 0,
+                 burst_factor: float = 4.0, dwell_s: float | None = None,
+                 **kwargs):
+        super().__init__(rate, horizon, seed, **kwargs)
+        if burst_factor <= 0:
+            raise ValueError("burst_factor must be positive")
+        if dwell_s is not None and dwell_s <= 0:
+            raise ValueError("dwell_s must be positive")
+        self.burst_factor = burst_factor
+        self.calm_rate = 2.0 * rate / (1.0 + burst_factor)
+        self.dwell_s = dwell_s if dwell_s is not None else horizon / 8.0
+
+    def _arrival_times(self, rng: random.Random) -> Iterator[float]:
+        t = 0.0
+        burst = False
+        switch_at = rng.expovariate(1.0 / self.dwell_s)
+        while t < self.horizon:
+            lam = self.calm_rate * (self.burst_factor if burst else 1.0)
+            dt = rng.expovariate(lam)
+            if t + dt >= switch_at:
+                # state flips before the tentative arrival: jump to the
+                # switch instant and redraw (exponential = memoryless)
+                t = switch_at
+                burst = not burst
+                switch_at = t + rng.expovariate(1.0 / self.dwell_s)
+                continue
+            t += dt
+            if t < self.horizon:
+                yield t
+
+
+@register_arrivals("diurnal")
+class DiurnalArrivals(ArrivalProcess):
+    """Sinusoid-modulated Poisson: λ(t) = rate·(1 + amp·sin(2πt/period)).
+
+    Generated by Lewis-Shedler thinning against λ_max = rate·(1+amp), so the
+    mean rate over a whole period is exactly ``rate``.
+    """
+
+    def __init__(self, rate: float, horizon: float, seed: int = 0,
+                 amplitude: float = 0.8, period_s: float | None = None,
+                 **kwargs):
+        super().__init__(rate, horizon, seed, **kwargs)
+        if not 0.0 <= amplitude <= 1.0:
+            raise ValueError("amplitude must be in [0, 1]")
+        if period_s is not None and period_s <= 0:
+            raise ValueError("period_s must be positive")
+        self.amplitude = amplitude
+        self.period_s = period_s if period_s is not None else horizon
+
+    def _arrival_times(self, rng: random.Random) -> Iterator[float]:
+        lam_max = self.rate * (1.0 + self.amplitude)
+        t = 0.0
+        while True:
+            t += rng.expovariate(lam_max)
+            if t >= self.horizon:
+                return
+            lam_t = self.rate * (1.0 + self.amplitude
+                                 * math.sin(2.0 * math.pi * t / self.period_s))
+            if rng.random() * lam_max <= lam_t:
+                yield t
+
+
+@register_arrivals("trace")
+class TraceArrivals(ArrivalProcess):
+    """Replay a recorded trace: a JSON file path or a list of row dicts.
+
+    Each row: ``{"t": float, "model": str, "slo_s": float?, "tier": int?}``.
+    ``model`` must be a ``repro.sim.workloads.MODELS`` key.  Rows are sorted
+    by ``t``; ``rate``/``horizon`` are derived from the trace itself.
+    """
+
+    def __init__(self, trace, slo_s: float = 0.05, seed: int = 0, **kwargs):
+        if isinstance(trace, str):
+            with open(trace) as f:
+                rows = json.load(f)
+        else:
+            rows = list(trace)
+        if not rows:
+            raise ValueError("empty arrival trace")
+        for r in rows:
+            if r.get("model") not in MODELS:
+                raise ValueError(f"trace row has unknown model "
+                                 f"{r.get('model')!r}; known: {sorted(MODELS)}")
+        self._rows = sorted(rows, key=lambda r: float(r["t"]))
+        horizon = float(self._rows[-1]["t"]) + 1e-9
+        rate = len(rows) / horizon
+        kwargs.setdefault("pool", "all")
+        super().__init__(rate=rate, horizon=horizon, seed=seed,
+                         slo_s=slo_s, **kwargs)
+
+    def _arrival_times(self, rng: random.Random) -> Iterator[float]:
+        for r in self._rows:  # pragma: no cover — __iter__ is overridden
+            yield float(r["t"])
+
+    def __iter__(self) -> Iterator[Job]:
+        for jid, r in enumerate(self._rows):
+            t = float(r["t"])
+            g = MODELS[r["model"]]()
+            g = dataclasses.replace(g, name=f"{g.name}#{jid}",
+                                    arrival_time=t)
+            yield Job(job_id=jid, arrival=t, dnng=g,
+                      deadline=t + float(r.get("slo_s", self.slo_s)),
+                      tier=int(r.get("tier", 0)))

@@ -1,0 +1,136 @@
+"""Fleet-of-arrays dispatch: many systolic arrays, one arrival stream.
+
+One 128×128 array saturates quickly under open-loop load; a serving fleet
+runs N of them behind a dispatcher.  This module provides the two classic
+randomized-load-balancing dispatchers plus the per-array bookkeeping the
+traffic simulator drives:
+
+* :class:`JoinShortestQueue` (``"jsq"``) — route to the array with the
+  fewest in-system jobs (queued + executing); optimal information, O(N)
+  per decision;
+* :class:`PowerOfTwoChoices` (``"p2c"``) — sample two arrays uniformly,
+  route to the less loaded (Mitzenmacher's exponential-improvement
+  result); O(1) information per decision, the practical choice at fleet
+  scale.
+
+:class:`ArrayNode` wraps one :class:`repro.core.scheduler.DynamicScheduler`
+with admission control (``max_concurrent`` jobs co-resident on the array)
+and a bounded FIFO wait queue (``queue_cap``); overflow is rejected — shed
+load is an SLA miss, not a silent drop.
+"""
+
+from __future__ import annotations
+
+import abc
+import dataclasses
+import random
+from typing import Callable, Sequence
+
+from repro.core.partition import ArrayShape
+from repro.core.registry import Registry
+from repro.core.scheduler import DynamicScheduler, StageModel, TimeFn
+from repro.traffic.arrivals import Job
+
+
+class ArrayNode:
+    """One systolic array in the fleet: scheduler + admission + wait queue."""
+
+    def __init__(self, index: int, array: ArrayShape, time_fn: TimeFn,
+                 stage: StageModel | None, policy,
+                 max_concurrent: int, queue_cap: int,
+                 on_complete: Callable[["ArrayNode", str, float], None],
+                 on_submit: Callable[[Job, float], None] | None = None,
+                 keep_trace: bool = False):
+        if max_concurrent < 1 or queue_cap < 0:
+            raise ValueError(f"need max_concurrent >= 1 (got {max_concurrent})"
+                             f" and queue_cap >= 0 (got {queue_cap})")
+        self.index = index
+        self.max_concurrent = max_concurrent
+        self.queue_cap = queue_cap
+        self.queue: list[Job] = []
+        self._notify_done = on_complete
+        self._notify_submit = on_submit or (lambda job, t: None)
+        self.scheduler = DynamicScheduler(
+            array, time_fn, stage=stage, policy=policy,
+            on_complete=self._job_done, keep_trace=keep_trace)
+
+    @property
+    def in_system(self) -> int:
+        """Jobs on this array: executing + waiting (the dispatch load key)."""
+        return self.scheduler.n_active + len(self.queue)
+
+    def offer(self, job: Job) -> str:
+        """Admission control at ``job.arrival``.
+
+        Returns ``"run"`` (submitted to the array now), ``"queued"``
+        (parked in the bounded FIFO), or ``"rejected"`` (queue full —
+        load shed, counted as a deadline miss)."""
+        if self.scheduler.n_active < self.max_concurrent:
+            self.scheduler.submit(job.dnng)
+            self._notify_submit(job, job.arrival)
+            return "run"
+        if len(self.queue) < self.queue_cap:
+            self.queue.append(job)
+            return "queued"
+        return "rejected"
+
+    def _job_done(self, tenant: str, t: float) -> None:
+        self._notify_done(self, tenant, t)
+        # completion freed a co-residency slot: promote the head-of-line job
+        while self.queue and self.scheduler.n_active < self.max_concurrent:
+            job = self.queue.pop(0)
+            g = dataclasses.replace(job.dnng, arrival_time=t)
+            self.scheduler.submit(g)
+            self._notify_submit(job, t)
+
+
+# ---------------------------------------------------------------------------
+# dispatchers
+# ---------------------------------------------------------------------------
+
+class Dispatcher(abc.ABC):
+    """Pick a target array for an arriving job from in-system loads."""
+
+    name: str = ""
+
+    @abc.abstractmethod
+    def choose(self, loads: Sequence[int], rng: random.Random) -> int:
+        """Index of the array to route to (``loads[i]`` = jobs in system)."""
+
+
+_REGISTRY = Registry("dispatcher")
+
+
+def register_dispatcher(name: str):
+    return _REGISTRY.register(name)
+
+
+def list_dispatchers() -> list[str]:
+    return _REGISTRY.names()
+
+
+def resolve_dispatcher(dispatch) -> Dispatcher:
+    return _REGISTRY.resolve(dispatch, Dispatcher)
+
+
+@register_dispatcher("jsq")
+class JoinShortestQueue(Dispatcher):
+    """Full-information balancing: fewest in-system jobs, ties → lowest
+    index (deterministic)."""
+
+    def choose(self, loads: Sequence[int], rng: random.Random) -> int:
+        return min(range(len(loads)), key=lambda i: (loads[i], i))
+
+
+@register_dispatcher("p2c")
+class PowerOfTwoChoices(Dispatcher):
+    """Sample two distinct arrays, keep the shorter queue (Mitzenmacher
+    1996); collapses to the single array when the fleet has one."""
+
+    def choose(self, loads: Sequence[int], rng: random.Random) -> int:
+        if len(loads) == 1:
+            return 0
+        i, j = rng.sample(range(len(loads)), 2)
+        if loads[j] < loads[i] or (loads[j] == loads[i] and j < i):
+            return j
+        return i

@@ -1,0 +1,156 @@
+"""SLA metrics for open-loop serving: percentiles, misses, goodput, depth.
+
+A finished simulation is a list of :class:`JobRecord` — one per *arrived*
+job, whether it was rejected at admission, still in flight at the end, or
+completed.  :func:`summarize` folds them into a :class:`TrafficMetrics`
+(with per-tenant and per-tier splits), the numbers BENCH_traffic.json and
+``Session.serve`` report:
+
+* **latency** — completion − arrival (queueing + service), p50/p95/p99 by
+  linear interpolation over the completed set;
+* **deadline-miss rate** — fraction of arrived jobs that were rejected,
+  never completed, or completed after their deadline (rejects *are*
+  misses: open-loop load does not go away because we shed it);
+* **goodput** — deadline-met completions per second of simulated time;
+* **queue depth** — mean/max of the dispatcher queue sampled at every
+  arrival (the paper's A_t instants);
+* **utilization** — time-weighted compute-busy PE fraction over the fleet.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class JobRecord:
+    """Lifecycle of one arrived job (rejected jobs have ``submitted=None``)."""
+
+    job_id: int
+    model: str
+    tier: int
+    arrival: float
+    deadline: float
+    array: Optional[int] = None      # dispatch target (cluster runs)
+    submitted: Optional[float] = None  # admission instant; None = rejected
+    completed: Optional[float] = None
+
+    @property
+    def rejected(self) -> bool:
+        return self.submitted is None
+
+    @property
+    def latency(self) -> Optional[float]:
+        if self.completed is None:
+            return None
+        return self.completed - self.arrival
+
+    @property
+    def met_deadline(self) -> bool:
+        return self.completed is not None and self.completed <= self.deadline
+
+
+def percentile(values: Sequence[float], p: float) -> float:
+    """Linear-interpolation percentile (numpy's default), pure Python so the
+    metrics stay dependency-free and bit-stable across platforms."""
+    if not values:
+        return float("nan")
+    if not 0.0 <= p <= 100.0:
+        raise ValueError(f"percentile {p} out of [0, 100]")
+    xs = sorted(values)
+    if len(xs) == 1:
+        return xs[0]
+    rank = p / 100.0 * (len(xs) - 1)
+    lo = int(rank)
+    hi = min(lo + 1, len(xs) - 1)
+    frac = rank - lo
+    return xs[lo] * (1.0 - frac) + xs[hi] * frac
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficMetrics:
+    """Aggregate SLA metrics over one simulated serve run."""
+
+    jobs_arrived: int
+    jobs_rejected: int
+    jobs_completed: int
+    deadline_misses: int
+    p50_latency_s: float
+    p95_latency_s: float
+    p99_latency_s: float
+    mean_latency_s: float
+    goodput_jobs_per_s: float
+    queue_depth_mean: float
+    queue_depth_max: int
+    utilization: float
+    duration_s: float
+
+    @property
+    def deadline_miss_rate(self) -> float:
+        return (self.deadline_misses / self.jobs_arrived
+                if self.jobs_arrived else 0.0)
+
+    @property
+    def rejection_rate(self) -> float:
+        return (self.jobs_rejected / self.jobs_arrived
+                if self.jobs_arrived else 0.0)
+
+    def as_dict(self) -> dict:
+        return {
+            "jobs_arrived": self.jobs_arrived,
+            "jobs_rejected": self.jobs_rejected,
+            "jobs_completed": self.jobs_completed,
+            "deadline_miss_rate": self.deadline_miss_rate,
+            "rejection_rate": self.rejection_rate,
+            "p50_latency_s": self.p50_latency_s,
+            "p95_latency_s": self.p95_latency_s,
+            "p99_latency_s": self.p99_latency_s,
+            "mean_latency_s": self.mean_latency_s,
+            "goodput_jobs_per_s": self.goodput_jobs_per_s,
+            "queue_depth_mean": self.queue_depth_mean,
+            "queue_depth_max": self.queue_depth_max,
+            "utilization": self.utilization,
+            "duration_s": self.duration_s,
+        }
+
+
+def summarize(records: Sequence[JobRecord], duration_s: float,
+              pe_seconds_busy: float = 0.0, total_pes: int = 0,
+              queue_depth_samples: Sequence[int] = ()) -> TrafficMetrics:
+    """Fold job records into :class:`TrafficMetrics`.
+
+    ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
+    (busy PE-seconds over ``duration_s × total_pes``); ``queue_depth_samples``
+    are dispatcher-queue depths observed at each arrival instant.
+    """
+    lats = [r.latency for r in records if r.latency is not None]
+    completed = [r for r in records if r.completed is not None]
+    met = sum(1 for r in completed if r.met_deadline)
+    misses = sum(1 for r in records if not r.met_deadline)
+    cap = duration_s * total_pes
+    return TrafficMetrics(
+        jobs_arrived=len(records),
+        jobs_rejected=sum(1 for r in records if r.rejected),
+        jobs_completed=len(completed),
+        deadline_misses=misses,
+        p50_latency_s=percentile(lats, 50.0),
+        p95_latency_s=percentile(lats, 95.0),
+        p99_latency_s=percentile(lats, 99.0),
+        mean_latency_s=sum(lats) / len(lats) if lats else float("nan"),
+        goodput_jobs_per_s=met / duration_s if duration_s > 0 else 0.0,
+        queue_depth_mean=(sum(queue_depth_samples) / len(queue_depth_samples)
+                          if queue_depth_samples else 0.0),
+        queue_depth_max=max(queue_depth_samples, default=0),
+        utilization=pe_seconds_busy / cap if cap > 0 else 0.0,
+        duration_s=duration_s,
+    )
+
+
+def split_by(records: Sequence[JobRecord], key: str) -> dict:
+    """Group records by a JobRecord attribute (``"model"``, ``"tier"``,
+    ``"array"``) — the per-tenant / per-SLA-class views."""
+    out: dict = {}
+    for r in records:
+        out.setdefault(getattr(r, key), []).append(r)
+    return out

@@ -1,0 +1,193 @@
+"""Open-loop arrival-driven simulation over partitioned systolic arrays.
+
+The closed-workload harness (:func:`repro.core.scheduler.schedule_dynamic`)
+answers "how fast does this fixed batch drain?".  :class:`TrafficSimulator`
+answers the serving question: under a live arrival process, what latency
+percentiles, deadline-miss rate and goodput does a partition policy
+deliver?  It is the substrate every registered policy plugs into unchanged:
+
+* arrivals come from a `repro.traffic.arrivals` process (Poisson / MMPP /
+  diurnal / trace replay), each job one Table-1 DNNG with a deadline;
+* a dispatcher (`repro.traffic.cluster`) routes each job to one of
+  ``n_arrays`` systolic arrays; each array runs its own incremental
+  :class:`~repro.core.scheduler.DynamicScheduler`, so the policy's
+  split+assign re-runs on **every** arrival and completion — the paper's
+  §3.3 dynamic re-partitioning under open load, not a one-shot split;
+* admission control bounds co-residency (``max_concurrent``) and the wait
+  queue (``queue_cap``); overflow is shed and counted as an SLA miss;
+* results fold into `repro.traffic.metrics` SLA numbers.
+
+Everything is deterministic under a fixed seed: the arrival stream owns its
+rng, the dispatcher gets a derived ``random.Random(seed)``, and the
+scheduler itself is event-ordered with a stable tie-break.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional, Sequence
+
+from repro.core.scheduler import ScheduleResult
+from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
+from repro.traffic.cluster import ArrayNode, resolve_dispatcher
+from repro.traffic.metrics import (
+    JobRecord,
+    TrafficMetrics,
+    split_by,
+    summarize,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeResult:
+    """One open-loop serve run: per-job records + aggregate SLA metrics."""
+
+    policy: str
+    backend: str
+    arrivals: str
+    dispatch: str
+    n_arrays: int
+    records: tuple[JobRecord, ...]
+    metrics: TrafficMetrics
+    schedules: Optional[tuple[ScheduleResult, ...]] = None
+
+    def per(self, key: str) -> dict:
+        """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
+        per-tenant / per-SLA-class / per-node views.  Group metrics carry
+        latency + miss numbers; fleet-level utilization and queue depth are
+        only meaningful in the aggregate and read 0 here."""
+        return {k: summarize(rs, self.metrics.duration_s)
+                for k, rs in sorted(split_by(self.records, key).items(),
+                                    key=lambda kv: str(kv[0]))}
+
+    def as_dict(self) -> dict:
+        """Machine-readable summary (the BENCH_traffic.json row format)."""
+        return {
+            "policy": self.policy,
+            "backend": self.backend,
+            "arrivals": self.arrivals,
+            "dispatch": self.dispatch,
+            "n_arrays": self.n_arrays,
+            **self.metrics.as_dict(),
+        }
+
+
+class _RecordBuilder:
+    __slots__ = ("job", "array", "submitted", "completed")
+
+    def __init__(self, job: Job):
+        self.job = job
+        self.array: Optional[int] = None
+        self.submitted: Optional[float] = None
+        self.completed: Optional[float] = None
+
+    def build(self) -> JobRecord:
+        return JobRecord(job_id=self.job.job_id, model=self.job.model,
+                         tier=self.job.tier, arrival=self.job.arrival,
+                         deadline=self.job.deadline, array=self.array,
+                         submitted=self.submitted, completed=self.completed)
+
+
+class TrafficSimulator:
+    """Drive an arrival stream through a fleet of partitioned arrays.
+
+    ``arrivals`` is an :class:`~repro.traffic.arrivals.ArrivalProcess`, a
+    registry name (needing ``rate``/``horizon``/... forwarded by the
+    caller), or any time-ordered iterable of :class:`Job`.  ``policy`` and
+    ``backend`` take `repro.api` registry names or instances.
+    """
+
+    def __init__(self, arrivals, policy="equal", backend="sim",
+                 n_arrays: int = 1, dispatch: str = "jsq",
+                 max_concurrent: int = 4, queue_cap: int = 16,
+                 seed: int = 0, keep_trace: bool = False,
+                 **arrival_kwargs):
+        from repro.api.backend import resolve_backend
+        from repro.api.policy import resolve_policy
+        if n_arrays < 1:
+            raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
+        if isinstance(arrivals, str):
+            # one seed steers the whole run: the arrival stream inherits it
+            # unless the caller seeds the process explicitly
+            arrival_kwargs.setdefault("seed", seed)
+        if isinstance(arrivals, (str, ArrivalProcess)):
+            self.arrivals = resolve_arrivals(arrivals, **arrival_kwargs)
+        else:
+            if arrival_kwargs:
+                raise ValueError("arrival kwargs need a registry name")
+            self.arrivals = arrivals  # pre-built Job iterable
+        self.policy = resolve_policy(policy)
+        self.backend = resolve_backend(backend)
+        self.dispatcher = resolve_dispatcher(dispatch)
+        self.n_arrays = n_arrays
+        self.keep_trace = keep_trace
+        self._rng = random.Random(seed)
+        self._builders: dict[str, _RecordBuilder] = {}
+        time_fn = self.backend.time_fn()
+        stage = self.backend.stage_model()
+        self.nodes = [
+            ArrayNode(i, self.backend.array, time_fn, stage, self.policy,
+                      max_concurrent=max_concurrent, queue_cap=queue_cap,
+                      on_complete=self._on_complete,
+                      on_submit=self._on_submit, keep_trace=keep_trace)
+            for i in range(n_arrays)]
+
+    # -- node callbacks -----------------------------------------------------
+    def _on_complete(self, node: ArrayNode, tenant: str, t: float) -> None:
+        self._builders[tenant].completed = t
+
+    def _on_submit(self, job: Job, t: float) -> None:
+        self._builders[job.dnng.name].submitted = t
+
+    # -- execution ----------------------------------------------------------
+    def run(self) -> ServeResult:
+        depth_samples: list[int] = []
+        last_arrival = 0.0
+        for job in self.arrivals:
+            last_arrival = job.arrival
+            # advance every array to the arrival instant first, so slots
+            # freed by completions before t are visible to the dispatcher
+            for node in self.nodes:
+                node.scheduler.run_until(job.arrival)
+            if job.dnng.name in self._builders:
+                raise ValueError(f"duplicate job name {job.dnng.name!r} in "
+                                 "arrival stream")
+            b = _RecordBuilder(job)
+            self._builders[job.dnng.name] = b
+            loads = [n.in_system for n in self.nodes]
+            target = self.nodes[self.dispatcher.choose(loads, self._rng)]
+            status = target.offer(job)
+            if status != "rejected":
+                b.array = target.index
+            depth_samples.append(sum(len(n.queue) for n in self.nodes))
+        # arrivals exhausted: drain all in-flight and queued work
+        for node in self.nodes:
+            node.scheduler.run()
+        end = max([n.scheduler.now for n in self.nodes]
+                  + [last_arrival, getattr(self.arrivals, "horizon", 0.0)])
+        records = tuple(b.build() for b in self._builders.values())
+        pes = self.backend.array.rows * self.backend.array.cols
+        metrics = summarize(
+            records, duration_s=end,
+            pe_seconds_busy=sum(n.scheduler.pe_seconds_busy
+                                for n in self.nodes),
+            total_pes=pes * self.n_arrays,
+            queue_depth_samples=depth_samples)
+        return ServeResult(
+            policy=getattr(self.policy, "name", type(self.policy).__name__),
+            backend=getattr(self.backend, "name",
+                            type(self.backend).__name__),
+            arrivals=getattr(self.arrivals, "name",
+                             type(self.arrivals).__name__),
+            dispatch=self.dispatcher.name or type(self.dispatcher).__name__,
+            n_arrays=self.n_arrays,
+            records=records, metrics=metrics,
+            schedules=(tuple(n.scheduler.result() for n in self.nodes)
+                       if self.keep_trace else None))
+
+
+def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:
+    """Functional one-shot: ``serve(PoissonArrivals(...), policy="equal")``."""
+    return TrafficSimulator(arrivals, policy=policy, backend=backend,
+                            **kwargs).run()

@@ -113,3 +113,115 @@ class TestEngine:
         eng = self._engine()
         with pytest.raises(KeyError):
             eng.submit("ghost", prompt=[1], max_new=1)
+
+
+class _FakeMesh:
+    """Multi-column stand-in: the engine's tenancy/fault path never builds a
+    submesh on the CPU rig, so a bare (axis_names, devices) object lets the
+    eviction machinery be tested across 4 columns with one real device."""
+
+    def __init__(self, model_cols: int):
+        self.axis_names = ("data", "model")
+        self.devices = np.empty((1, model_cols), dtype=object)
+
+
+class TestEngineFaultPath:
+    """fail_column/heal_column: eviction, re-placement, width_history."""
+
+    def _engine(self, cols=4, policy="equal"):
+        eng = MultiTenantEngine(TenantMeshManager(_FakeMesh(cols), "model"),
+                                policy=policy)
+        for i, name in enumerate(["A", "B"]):
+            eng.add_tenant(name, _session(), flops_per_token=float(i + 1))
+        return eng
+
+    @staticmethod
+    def _placements(eng):
+        return {t.name: t.partition for t in eng.manager.tenants()}
+
+    def test_fail_column_evicts_only_overlapping_tenant(self):
+        eng = self._engine()
+        parts = self._placements(eng)
+        victim = next(n for n, p in parts.items()
+                      if p.col_start <= 0 < p.col_end)
+        other = ({"A", "B"} - {victim}).pop()
+        evicted = eng.fail_column(0)
+        assert victim in evicted and other not in evicted
+
+    def test_failed_tenant_is_replaced_off_the_dead_column(self):
+        eng = self._engine()
+        eng.fail_column(0)
+        parts = self._placements(eng)
+        # both tenants re-placed, neither touching the fenced column
+        for name, p in parts.items():
+            assert p is not None, f"{name} left unplaced"
+            assert not (p.col_start <= 0 < p.col_end)
+        assert sum(p.cols for p in parts.values()) <= 3
+        eng.manager._pset.check()  # free+busy still tile the array
+
+    def test_heal_column_restores_full_width(self):
+        eng = self._engine()
+        eng.fail_column(2)
+        width_degraded = sum(p.cols for p in self._placements(eng).values())
+        eng.heal_column(2)
+        width_healed = sum(p.cols for p in self._placements(eng).values())
+        assert width_degraded <= 3 and width_healed == 4
+        eng.manager._pset.check()
+
+    def test_width_history_tracks_fault_and_heal(self):
+        eng = self._engine()
+        n0 = len(eng.width_history)
+        eng.fail_column(0)
+        n1 = len(eng.width_history)
+        eng.heal_column(0)
+        n2 = len(eng.width_history)
+        assert n0 < n1 < n2  # both transitions re-recorded every grant
+        # history entries are well-formed and the tail matches live widths
+        for rnd, name, w in eng.width_history:
+            assert name in ("A", "B") and w >= 1 and rnd >= 0
+        last = {}
+        for _, name, w in eng.width_history:
+            last[name] = w
+        for name, svc in eng.tenants.items():
+            assert svc.width == last[name]
+
+    def test_engine_drains_after_fail_heal_cycle(self):
+        eng = self._engine()
+        eng.submit("A", prompt=[1, 2], max_new=3)
+        eng.submit("B", prompt=[3], max_new=2)
+        eng.fail_column(1)
+        eng.heal_column(1)
+        eng.run_until_drained(max_rounds=100)
+        assert not eng.tenants
+
+
+class TestRebalanceOnSubmit:
+    """submit() changes outstanding demand → widths must follow (the engine
+    marks itself dirty and rebalances at the next step() start)."""
+
+    def _engine(self, policy="proportional"):
+        eng = MultiTenantEngine(TenantMeshManager(_FakeMesh(4), "model"),
+                                policy=policy)
+        eng.add_tenant("A", _session(slots=2), flops_per_token=1.0)
+        eng.add_tenant("B", _session(slots=2), flops_per_token=1.0)
+        return eng
+
+    def test_submit_marks_dirty_step_rebalances(self):
+        eng = self._engine()
+        n0 = len(eng.width_history)
+        eng.submit("A", prompt=[1, 2, 3], max_new=8)
+        assert eng._dirty and len(eng.width_history) == n0  # deferred
+        eng.step()
+        assert not eng._dirty
+        assert len(eng.width_history) > n0  # rebalanced at step start
+
+    def test_demand_shift_widens_loaded_tenant(self):
+        eng = self._engine()
+        for _ in range(4):
+            eng.submit("A", prompt=[1, 2, 3, 4], max_new=16)
+        eng.submit("B", prompt=[1], max_new=2)  # keep B live through step()
+        eng.step()
+        widths = {n: s.width for n, s in eng.tenants.items()}
+        # proportional split: nearly all outstanding work is A's, so the
+        # step-start rebalance hands A everything above B's floor
+        assert widths["A"] == 3 and widths["B"] == 1

@@ -1,0 +1,366 @@
+"""Open-loop traffic subsystem tests (repro/traffic/*)."""
+
+import dataclasses
+import json
+import math
+
+import pytest
+
+from repro.core.dnng import LayerShape, chain
+from repro.core.partition import ArrayShape
+from repro.core.scheduler import DynamicScheduler, schedule_dynamic
+from repro.sim.systolic import SystolicConfig, layer_time_fn
+from repro.sim.workloads import MODEL_POOLS, sample_dnng
+from repro.traffic import (
+    DiurnalArrivals,
+    Job,
+    JobRecord,
+    MMPPArrivals,
+    PoissonArrivals,
+    TraceArrivals,
+    TrafficSimulator,
+    get_arrival_process,
+    list_arrival_processes,
+    list_dispatchers,
+    percentile,
+    resolve_dispatcher,
+    summarize,
+)
+
+FC = LayerShape.fc
+ARRAY = ArrayShape(128, 128)
+TIME_FN = layer_time_fn(SystolicConfig())
+
+
+def _dnng(name, n_layers, size=256, arrival=0.0):
+    return chain(name, [FC(f"l{i}", size, size, batch=size)
+                        for i in range(n_layers)], arrival_time=arrival)
+
+
+def _job(jid, arrival, n_layers=2, size=256, slo=1.0):
+    g = _dnng(f"J#{jid}", n_layers, size=size, arrival=arrival)
+    return Job(job_id=jid, arrival=arrival, dnng=g, deadline=arrival + slo)
+
+
+# ---------------------------------------------------------------------------
+# arrivals
+# ---------------------------------------------------------------------------
+
+class TestArrivals:
+    @pytest.mark.parametrize("proc", ["poisson", "mmpp", "diurnal"])
+    def test_deterministic_replay(self, proc):
+        arr = get_arrival_process(proc, rate=500.0, horizon=0.05, seed=7,
+                                  pool="light")
+        a = [(j.arrival, j.dnng.name, j.tier, j.deadline) for j in arr]
+        b = [(j.arrival, j.dnng.name, j.tier, j.deadline) for j in arr]
+        assert a and a == b
+
+    @pytest.mark.parametrize("proc", ["poisson", "mmpp", "diurnal"])
+    def test_seed_changes_stream(self, proc):
+        mk = lambda s: [j.arrival for j in get_arrival_process(
+            proc, rate=500.0, horizon=0.05, seed=s, pool="light")]
+        assert mk(0) != mk(1)
+
+    def test_times_ordered_within_horizon(self):
+        for proc in list_arrival_processes():
+            if proc == "trace":
+                continue
+            jobs = get_arrival_process(proc, rate=800.0, horizon=0.03,
+                                       seed=3, pool="all").jobs()
+            ts = [j.arrival for j in jobs]
+            assert ts == sorted(ts)
+            assert all(0.0 <= t < 0.03 for t in ts)
+            # unique tenant names even when the same model repeats
+            names = [j.dnng.name for j in jobs]
+            assert len(set(names)) == len(names)
+
+    def test_poisson_rate_roughly_holds(self):
+        jobs = PoissonArrivals(rate=2000.0, horizon=0.5, seed=0).jobs()
+        assert 2000.0 * 0.5 * 0.8 < len(jobs) < 2000.0 * 0.5 * 1.2
+
+    def test_mmpp_is_burstier_than_poisson(self):
+        """Index of dispersion of counts > 1 for MMPP (Poisson has ≈ 1)."""
+        def idc(jobs, horizon, bins=50):
+            counts = [0] * bins
+            for j in jobs:
+                counts[min(int(j.arrival / horizon * bins), bins - 1)] += 1
+            mean = sum(counts) / bins
+            var = sum((c - mean) ** 2 for c in counts) / bins
+            return var / mean
+        h = 1.0
+        poisson = PoissonArrivals(rate=500.0, horizon=h, seed=1).jobs()
+        mmpp = MMPPArrivals(rate=500.0, horizon=h, seed=1,
+                            burst_factor=8.0, dwell_s=0.05).jobs()
+        assert idc(mmpp, h) > idc(poisson, h)
+
+    def test_diurnal_amplitude_validation(self):
+        with pytest.raises(ValueError):
+            DiurnalArrivals(rate=10.0, horizon=1.0, amplitude=1.5)
+
+    def test_trace_replay(self, tmp_path):
+        rows = [{"t": 0.002, "model": "NCF", "slo_s": 0.1, "tier": 1},
+                {"t": 0.001, "model": "AlexNet"}]
+        p = tmp_path / "trace.json"
+        p.write_text(json.dumps(rows))
+        jobs = TraceArrivals(str(p), slo_s=0.05).jobs()
+        # sorted by t, defaults filled in
+        assert [j.model for j in jobs] == ["AlexNet", "NCF"]
+        assert jobs[0].deadline == pytest.approx(0.001 + 0.05)
+        assert jobs[1].tier == 1 and jobs[1].slo_s == pytest.approx(0.1)
+
+    def test_trace_unknown_model_rejected(self):
+        with pytest.raises(ValueError, match="unknown model"):
+            TraceArrivals([{"t": 0.0, "model": "NotANet"}])
+
+    def test_sample_dnng_pools(self):
+        import random
+        rng = random.Random(0)
+        for _ in range(16):
+            g = sample_dnng(rng, pool="light", name="x#1", arrival_time=2.0)
+            assert g.arrival_time == 2.0 and g.name == "x#1"
+        with pytest.raises(ValueError):
+            sample_dnng(rng, pool="bogus")
+        assert set(MODEL_POOLS["all"]) >= set(MODEL_POOLS["heavy"])
+
+
+# ---------------------------------------------------------------------------
+# incremental scheduler
+# ---------------------------------------------------------------------------
+
+class TestDynamicSchedulerIncremental:
+    def test_matches_batch_schedule(self):
+        """Submitting everything then draining must equal schedule_dynamic."""
+        gs = [_dnng(f"t{i}", 2 + i, arrival=i * 1e-6) for i in range(4)]
+        batch = schedule_dynamic(gs, ARRAY, TIME_FN)
+        sched = DynamicScheduler(ARRAY, TIME_FN)
+        for g in gs:
+            sched.submit(g)
+        sched.run()
+        inc = sched.result()
+        assert inc.completion == batch.completion
+        assert inc.trace == batch.trace
+        assert inc.makespan == batch.makespan
+
+    def test_submit_in_past_rejected(self):
+        sched = DynamicScheduler(ARRAY, TIME_FN)
+        sched.submit(_dnng("a", 1))
+        sched.run()
+        with pytest.raises(ValueError, match="past"):
+            sched.submit(_dnng("b", 1, arrival=sched.now / 2))
+
+    def test_duplicate_name_rejected_even_after_completion(self):
+        sched = DynamicScheduler(ARRAY, TIME_FN)
+        sched.submit(_dnng("a", 1))
+        sched.run()
+        with pytest.raises(ValueError, match="duplicate"):
+            sched.submit(dataclasses.replace(_dnng("a", 1),
+                                             arrival_time=sched.now))
+
+    def test_on_complete_fires_once_per_dnng(self):
+        done = []
+        sched = DynamicScheduler(ARRAY, TIME_FN,
+                                 on_complete=lambda n, t: done.append((n, t)))
+        for i in range(3):
+            sched.submit(_dnng(f"t{i}", 2))
+        sched.run()
+        assert sorted(n for n, _ in done) == ["t0", "t1", "t2"]
+        assert all(t == sched.completion[n] for n, t in done)
+
+    def test_keep_trace_false_still_counts_busy_pes(self):
+        gs = [_dnng("a", 3), _dnng("b", 2, arrival=1e-9)]
+        ref = DynamicScheduler(ARRAY, TIME_FN)
+        lean = DynamicScheduler(ARRAY, TIME_FN, keep_trace=False)
+        for g in gs:
+            ref.submit(g)
+            lean.submit(dataclasses.replace(g))
+        ref.run()
+        lean.run()
+        assert lean.trace == []
+        assert lean.pe_seconds_busy == pytest.approx(
+            ref.result().pe_seconds_busy)
+
+    def test_rebalance_on_arrival_narrows_then_widens(self):
+        """§3.3 under open arrivals: a lone tenant's layers run full-width;
+        once a competitor arrives mid-stream the next layers narrow; after
+        the competitor drains, merge-on-free widens them back."""
+        sched = DynamicScheduler(ARRAY, TIME_FN)
+        a = _dnng("a", 6, size=256)
+        sched.submit(a)
+        # run until a's first layer completed, then inject a competitor
+        sched.run_until(sched.next_event_time())
+        t_mid = sched.now
+        b = _dnng("b", 2, size=256, arrival=t_mid)
+        sched.submit(b)
+        sched.run()
+        widths = {e.layer_index: e.partition.cols
+                  for e in sched.result().trace if e.tenant == "a"}
+        assert widths[0] == ARRAY.cols          # alone: full array
+        assert min(widths.values()) < ARRAY.cols  # shared: narrowed
+        assert widths[5] == ARRAY.cols          # competitor gone: widened
+
+    def test_empty_scheduler_result(self):
+        sched = DynamicScheduler(ARRAY, TIME_FN)
+        sched.run()
+        res = sched.result()
+        assert res.makespan == 0.0 and res.trace == ()
+
+
+# ---------------------------------------------------------------------------
+# metrics
+# ---------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_percentile_interpolates(self):
+        xs = [1.0, 2.0, 3.0, 4.0]
+        assert percentile(xs, 0) == 1.0
+        assert percentile(xs, 100) == 4.0
+        assert percentile(xs, 50) == pytest.approx(2.5)
+        assert math.isnan(percentile([], 99))
+
+    def test_summarize_accounting(self):
+        recs = [
+            JobRecord(0, "m", 0, arrival=0.0, deadline=1.0,
+                      submitted=0.0, completed=0.5),   # met
+            JobRecord(1, "m", 0, arrival=0.0, deadline=1.0,
+                      submitted=0.0, completed=2.0),   # late
+            JobRecord(2, "m", 0, arrival=0.0, deadline=1.0),  # rejected
+        ]
+        m = summarize(recs, duration_s=2.0, pe_seconds_busy=8.0,
+                      total_pes=8, queue_depth_samples=[0, 2, 4])
+        assert m.jobs_arrived == 3 and m.jobs_rejected == 1
+        assert m.jobs_completed == 2
+        assert m.deadline_misses == 2          # late + rejected
+        assert m.deadline_miss_rate == pytest.approx(2 / 3)
+        assert m.goodput_jobs_per_s == pytest.approx(0.5)  # 1 met / 2 s
+        assert m.utilization == pytest.approx(0.5)
+        assert m.queue_depth_mean == pytest.approx(2.0)
+        assert m.queue_depth_max == 4
+
+
+# ---------------------------------------------------------------------------
+# simulator: admission control + SLA behaviour
+# ---------------------------------------------------------------------------
+
+class TestSimulator:
+    def test_all_jobs_complete_under_light_load(self):
+        arr = PoissonArrivals(rate=200.0, horizon=0.05, seed=0, pool="light",
+                              slo_s=1.0)
+        res = TrafficSimulator(arr, policy="equal").run()
+        m = res.metrics
+        assert m.jobs_rejected == 0
+        assert m.jobs_completed == m.jobs_arrived > 0
+        assert m.deadline_miss_rate == 0.0
+        assert 0.0 < m.utilization <= 1.0
+
+    def test_overload_rejects_and_bounds_queue(self):
+        """Open-loop overload with a tiny queue: rejections must appear and
+        the queue depth must never exceed its cap."""
+        jobs = [_job(i, arrival=i * 1e-6, n_layers=4, size=1024)
+                for i in range(20)]
+        sim = TrafficSimulator(jobs, policy="equal", max_concurrent=2,
+                               queue_cap=3)
+        res = sim.run()
+        m = res.metrics
+        assert m.jobs_rejected > 0
+        assert m.queue_depth_max <= 3
+        assert m.jobs_completed == m.jobs_arrived - m.jobs_rejected
+        # every non-rejected job has a submission and completion instant
+        for r in res.records:
+            if not r.rejected:
+                assert r.submitted is not None and r.completed is not None
+                assert r.arrival <= r.submitted <= r.completed
+
+    def test_rejected_jobs_count_as_misses(self):
+        jobs = [_job(i, arrival=0.0 if i == 0 else 1e-9, n_layers=2)
+                for i in range(6)]
+        res = TrafficSimulator(jobs, max_concurrent=1, queue_cap=0).run()
+        m = res.metrics
+        assert m.jobs_rejected == m.deadline_misses > 0
+
+    def test_queued_job_latency_includes_wait(self):
+        jobs = [_job(0, arrival=0.0, n_layers=3), _job(1, arrival=1e-9)]
+        res = TrafficSimulator(jobs, max_concurrent=1, queue_cap=4).run()
+        rec = {r.job_id: r for r in res.records}
+        assert rec[1].submitted == pytest.approx(rec[0].completed)
+        assert rec[1].latency > rec[0].latency
+
+    def test_policies_run_unchanged(self):
+        """Every registered policy plugs into the open-loop substrate."""
+        from repro.api import list_policies
+        arr = PoissonArrivals(rate=300.0, horizon=0.02, seed=5, pool="light")
+        for pol in list_policies():
+            res = TrafficSimulator(arr, policy=pol).run()
+            assert res.metrics.jobs_completed == res.metrics.jobs_arrived
+            assert res.policy == pol
+
+    def test_deterministic_end_to_end(self):
+        arr = MMPPArrivals(rate=400.0, horizon=0.04, seed=9, pool="light")
+        r1 = TrafficSimulator(arr, policy="proportional", seed=1).run()
+        r2 = TrafficSimulator(arr, policy="proportional", seed=1).run()
+        assert r1.as_dict() == r2.as_dict()
+        assert r1.records == r2.records
+
+    def test_per_splits(self):
+        arr = PoissonArrivals(rate=300.0, horizon=0.03, seed=2, pool="light",
+                              tiers=(0, 1))
+        res = TrafficSimulator(arr).run()
+        by_tier = res.per("tier")
+        assert set(by_tier) <= {0, 1}
+        assert sum(m.jobs_arrived for m in by_tier.values()) \
+            == res.metrics.jobs_arrived
+        by_model = res.per("model")
+        assert set(by_model) <= set(MODEL_POOLS["light"])
+
+    def test_session_serve_front_door(self):
+        from repro.api import Session
+        res = Session(policy="equal", backend="sim").serve(
+            "poisson", rate=300.0, horizon=0.02, seed=0, pool="light")
+        assert res.metrics.jobs_completed == res.metrics.jobs_arrived > 0
+        assert res.policy == "equal" and res.backend == "sim"
+        assert res.arrivals == "poisson"
+
+
+# ---------------------------------------------------------------------------
+# cluster dispatch
+# ---------------------------------------------------------------------------
+
+class TestClusterDispatch:
+    def _loads(self, res):
+        counts = {}
+        for r in res.records:
+            if r.array is not None:
+                counts[r.array] = counts.get(r.array, 0) + 1
+        return counts
+
+    def test_jsq_balances_across_arrays(self):
+        arr = PoissonArrivals(rate=2000.0, horizon=0.05, seed=0,
+                              pool="light")
+        res = TrafficSimulator(arr, n_arrays=4, dispatch="jsq").run()
+        counts = self._loads(res)
+        assert set(counts) == {0, 1, 2, 3}
+        # no array starves: JSQ keeps the split within a loose band
+        assert min(counts.values()) > 0.25 * max(counts.values())
+
+    def test_p2c_uses_multiple_arrays_and_is_seeded(self):
+        arr = PoissonArrivals(rate=2000.0, horizon=0.05, seed=0,
+                              pool="light")
+        r1 = TrafficSimulator(arr, n_arrays=4, dispatch="p2c", seed=3).run()
+        r2 = TrafficSimulator(arr, n_arrays=4, dispatch="p2c", seed=3).run()
+        assert r1.records == r2.records
+        assert len(self._loads(r1)) > 1
+
+    def test_more_arrays_cut_latency_under_load(self):
+        arr = MMPPArrivals(rate=1500.0, horizon=0.05, seed=4, pool="light",
+                           slo_s=0.05)
+        one = TrafficSimulator(arr, n_arrays=1, queue_cap=64,
+                               max_concurrent=4).run()
+        four = TrafficSimulator(arr, n_arrays=4, queue_cap=64,
+                                max_concurrent=4).run()
+        assert four.metrics.p99_latency_s < one.metrics.p99_latency_s
+        assert four.metrics.deadline_miss_rate \
+            <= one.metrics.deadline_miss_rate
+
+    def test_dispatcher_registry(self):
+        assert {"jsq", "p2c"} <= set(list_dispatchers())
+        with pytest.raises(ValueError):
+            resolve_dispatcher("bogus")
