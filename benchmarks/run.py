@@ -5,7 +5,9 @@
 Order: the policy × workload matrix (written to ``BENCH_fig9.json`` at the
 repo root so the perf trajectory is machine-trackable across PRs), the
 Fig. 9 reproduction (time / partitions / energy), the sensitivity ablation,
-the kernel bench, the serving bench, then the roofline table (which needs
+the kernel bench (dense-vs-compact grid accounting, written alongside the
+matrix as ``BENCH_kernel.json`` — the kernel-level perf trajectory), the
+serving bench, then the roofline table (which needs
 ``benchmarks/results/dryrun.json`` from ``repro.launch.dryrun`` — skipped
 with a notice when absent, since the dry-run takes ~30 min of compiles).
 """
@@ -92,7 +94,7 @@ def main() -> int:
     fig9_ablation.run(policy_matrix=False)  # matrix already in BENCH_fig9
 
     print("#" * 72)
-    print("# kernel bench — partitioned-WS fused GEMM")
+    print("# kernel bench — dense vs compact grids -> BENCH_kernel.json")
     print("#" * 72)
     kernel_bench.run()
 

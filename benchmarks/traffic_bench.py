@@ -16,6 +16,12 @@ on the same jobs.  A second small block compares cluster dispatchers (jsq
 vs p2c) on a 4-array fleet.
 
 Everything is seeded; two runs of this script are byte-identical.
+
+The run also reports end-to-end wall time and the ``ws_cost``/``layer_cost``
+LRU hit rates (stdout only — the JSON stays byte-stable): the scheduler
+re-prices the same (layer, partition) pairs on every arrival/completion
+rebalance, and the memoized cost path serves the vast majority of those
+oracle calls from cache.
 """
 
 from __future__ import annotations
@@ -23,6 +29,7 @@ from __future__ import annotations
 import json
 import os
 import sys
+import time
 
 BENCH_JSON = os.path.join(os.path.dirname(os.path.dirname(
     os.path.abspath(__file__))), "BENCH_traffic.json")
@@ -55,6 +62,7 @@ def mean_service_s(pool: str) -> float:
 def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
     from repro.traffic import TrafficSimulator, get_arrival_process
 
+    t_start = time.perf_counter()
     svc = mean_service_s(pool)
     slo = 4.0 * svc
     rows = []
@@ -114,6 +122,14 @@ def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
     with open(path, "w") as f:
         json.dump(blob, f, indent=1)
         f.write("\n")
+    from repro.core.dataflow import ws_cost_cache_stats
+    from repro.sim.systolic import layer_cost
+    ws, lc = ws_cost_cache_stats(), layer_cost.cache_info()
+    lc_total = lc.hits + lc.misses
+    print(f"end-to-end {time.perf_counter() - t_start:.2f}s; cost-path "
+          f"memoization: layer_cost {lc.hits}/{lc_total} hits "
+          f"({100 * lc.hits / lc_total if lc_total else 0:.1f}%), "
+          f"ws_cost {ws['hits']}/{ws['hits'] + ws['misses']} hits")
     print(f"wrote {path}")
     return blob
 

@@ -45,7 +45,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
-from typing import Callable, Mapping, Optional, Sequence
+from typing import Callable, Mapping, MutableMapping, Optional, Sequence
 
 from repro.core.dnng import LayerShape
 from repro.core.partition import (
@@ -86,11 +86,32 @@ class AssignContext:
     array is free); ``time_fn`` is the backend's compute oracle, available to
     policies that weigh opportunity cost (e.g. ``width_aware``'s
     hold-for-width rule).
+
+    ``cost_cache`` is an optional shared ``(layer, partition) → seconds``
+    memo the scheduler threads through every context of one rebalance
+    round: a policy that probes the same pairing the round already priced
+    (steady-state assign re-offers after every grant) gets a dict hit
+    instead of a fresh oracle call.  Policies should query the oracle via
+    :meth:`time` so they participate in the cache transparently.
     """
 
     array: ArrayShape
     time_fn: Optional[Callable[[LayerShape, Partition], float]] = None
     busy: Mapping[str, Partition] = dataclasses.field(default_factory=dict)
+    cost_cache: Optional[MutableMapping] = None
+
+    def time(self, layer: LayerShape, part: Partition) -> float:
+        """Memoized ``time_fn(layer, part)`` (falls through when no cache)."""
+        if self.time_fn is None:
+            raise ValueError("AssignContext has no time_fn oracle")
+        if self.cost_cache is None:
+            return self.time_fn(layer, part)
+        key = (layer, part)
+        try:
+            return self.cost_cache[key]
+        except KeyError:
+            self.cost_cache[key] = cost = self.time_fn(layer, part)
+            return cost
 
 
 class PartitionPolicy(abc.ABC):
@@ -451,8 +472,8 @@ class WidthAwarePolicy(EqualPolicy):
         if slice_cols * 2 >= demand:
             return False
         rows = ctx.array.rows
-        t_here = ctx.time_fn(layer, Partition(rows=rows, col_start=0,
-                                              cols=slice_cols))
-        t_want = ctx.time_fn(layer, Partition(rows=rows, col_start=0,
-                                              cols=demand))
+        t_here = ctx.time(layer, Partition(rows=rows, col_start=0,
+                                           cols=slice_cols))
+        t_want = ctx.time(layer, Partition(rows=rows, col_start=0,
+                                           cols=demand))
         return t_here > 2.0 * t_want

@@ -29,6 +29,7 @@ cycles once per fold (data crosses foreign partitions tri-stated).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 
 from repro.core.dnng import LayerShape
@@ -82,8 +83,17 @@ class DataflowCost:
     load_pe_cycles: int    # fk·fn·R·R·C — load-phase latch-only PE-cycles
 
 
+@functools.lru_cache(maxsize=1 << 16)
 def ws_cost(gemm: GEMM, part: Partition) -> DataflowCost:
-    """Analytic partitioned-WS cost of ``gemm`` on ``part`` (Fig. 5 loop-nest)."""
+    """Analytic partitioned-WS cost of ``gemm`` on ``part`` (Fig. 5 loop-nest).
+
+    Memoized: both arguments are frozen (hashable) dataclasses and the
+    result is pure, while the dynamic scheduler re-derives the SAME
+    (layer, partition) costs on every arrival/completion rebalance — under
+    open-loop traffic that is the host hot path.  The LRU turns those
+    re-derivations into dict hits; :func:`ws_cost_cache_stats` exposes the
+    hit rate and :func:`ws_cost_cache_clear` resets it (tests, memory).
+    """
     R, C = part.rows, part.cols
     fk = _ceil_div(gemm.K, R)
     fn = _ceil_div(gemm.N, C)
@@ -115,6 +125,17 @@ def ws_cost(gemm: GEMM, part: Partition) -> DataflowCost:
         feed_pe_cycles=fk * fn * gemm.T * part.n_pes,
         load_pe_cycles=fk * fn * R * part.n_pes,
     )
+
+
+def ws_cost_cache_stats() -> dict:
+    """``ws_cost`` LRU counters: hits / misses / currsize / maxsize."""
+    info = ws_cost.cache_info()
+    return {"hits": info.hits, "misses": info.misses,
+            "currsize": info.currsize, "maxsize": info.maxsize}
+
+
+def ws_cost_cache_clear() -> None:
+    ws_cost.cache_clear()
 
 
 def utilization(gemm: GEMM, part: Partition) -> float:

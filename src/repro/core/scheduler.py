@@ -286,10 +286,15 @@ class DynamicScheduler:
         ready = self._ready_tenants(now)
         if not ready:
             return
+        # one (layer, partition) -> seconds memo per rebalance round: the
+        # steady-state loop below re-offers after every grant, re-probing
+        # pairings the round has already priced
+        cost_cache: dict = {}
         whole_array_free = (not pset.busy_partitions
                             and len(pset.free_partitions) == 1)
         if whole_array_free:
-            ctx = AssignContext(array=array, time_fn=self.time_fn, busy={})
+            ctx = AssignContext(array=array, time_fn=self.time_fn, busy={},
+                                cost_cache=cost_cache)
             if len(ready) == 1:
                 # Fig. 5 lines 5–6: single available task -> offer all PEs.
                 offered = [Partition(rows=array.rows, col_start=0,
@@ -312,7 +317,8 @@ class DynamicScheduler:
             if not free or not ready:
                 break
             ctx = AssignContext(array=array, time_fn=self.time_fn,
-                                busy=pset.busy_partitions)
+                                busy=pset.busy_partitions,
+                                cost_cache=cost_cache)
             for a in pol.assign(ready, free, ctx):
                 got = pset.allocate_exact(a.tenant, a.partition)
                 self._launch(now, a.tenant, a.layer_index, a.layer, got)

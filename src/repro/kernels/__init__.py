@@ -1,13 +1,36 @@
 """Pallas TPU kernels: the paper's partitioned-WS GEMM (+ oracle & wrappers)."""
 
-from repro.kernels.ops import build_owner_map, fused_tenant_gemm
-from repro.kernels.partitioned_matmul import partitioned_matmul
+from repro.kernels.ops import (
+    BLOCK_CANDIDATES,
+    FusedGemmStats,
+    autotune_blocks,
+    build_owner_map,
+    fused_tenant_gemm,
+)
+from repro.kernels.partitioned_matmul import (
+    GRID_MODES,
+    VMEM_BUDGET_BYTES,
+    BlockAccounting,
+    block_vmem_bytes,
+    grid_accounting,
+    live_block_tables,
+    partitioned_matmul,
+)
 from repro.kernels.ref import matmul_ref, partitioned_matmul_ref
 
 __all__ = [
+    "BLOCK_CANDIDATES",
+    "BlockAccounting",
+    "FusedGemmStats",
+    "GRID_MODES",
+    "VMEM_BUDGET_BYTES",
+    "autotune_blocks",
+    "block_vmem_bytes",
     "build_owner_map",
     "fused_tenant_gemm",
-    "partitioned_matmul",
+    "grid_accounting",
+    "live_block_tables",
     "matmul_ref",
+    "partitioned_matmul",
     "partitioned_matmul_ref",
 ]

@@ -10,6 +10,7 @@ Array config follows the paper §4.2: a TPU-v3-like 128×128 PE array.
 from __future__ import annotations
 
 import dataclasses
+import functools
 
 from repro.core.dataflow import GEMM, DataflowCost, ws_cost
 from repro.core.dnng import LayerShape
@@ -35,8 +36,14 @@ class SystolicConfig:
         return self.rows * self.cols
 
 
+@functools.lru_cache(maxsize=1 << 16)
 def layer_cost(layer: LayerShape, part: Partition) -> DataflowCost:
-    """Cycle/access breakdown of one layer on one partition."""
+    """Cycle/access breakdown of one layer on one partition.
+
+    Memoized on top of the (also memoized) :func:`ws_cost`: the extra LRU
+    level skips even the layer→GEMM lowering for the exact repeats the
+    scheduler's rebalance loop generates.
+    """
     return ws_cost(GEMM.of_layer(layer), part)
 
 

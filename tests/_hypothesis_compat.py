@@ -1,0 +1,31 @@
+"""Shared hypothesis fallback: property tests skip, deterministic tests run.
+
+Test modules do ``from _hypothesis_compat import given, settings, st``
+(pytest puts each test file's directory on ``sys.path``).  With hypothesis
+installed these are the real objects; without it (the no-extras CI leg)
+``@given`` marks the test skipped before any placeholder strategy is drawn,
+so the rest of the module's deterministic coverage still executes — unlike
+a module-level ``pytest.importorskip`` which skips everything.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - exercised on the no-extras CI leg
+    def given(*args, **kwargs):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*args, **kwargs):
+        return lambda f: f
+
+    class _NullStrategies:
+        """Placeholder ``st``: @given skips before any strategy is drawn."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _NullStrategies()
+
+__all__ = ["given", "settings", "st"]

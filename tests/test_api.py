@@ -155,6 +155,51 @@ class TestPolicyBehaviour:
         assert grants["heavy"].n_pes >= grants["light"].n_pes
 
 
+class TestAssignContextCostCache:
+    def test_repeated_probes_hit_the_shared_cache(self):
+        from repro.api import AssignContext
+        from repro.core.partition import Partition
+        calls = []
+
+        def time_fn(layer, part):
+            calls.append((layer, part))
+            return 1.0
+
+        layer = LayerShape.fc("l", 64, 64, batch=8)
+        part = Partition(rows=128, col_start=0, cols=32)
+        cache: dict = {}
+        ctx = AssignContext(array=ArrayShape(128, 128), time_fn=time_fn,
+                            cost_cache=cache)
+        assert ctx.time(layer, part) == 1.0
+        assert ctx.time(layer, part) == 1.0
+        assert len(calls) == 1          # second probe served from the dict
+        # a second context of the same round shares the same memo
+        ctx2 = AssignContext(array=ArrayShape(128, 128), time_fn=time_fn,
+                             cost_cache=cache)
+        assert ctx2.time(layer, part) == 1.0
+        assert len(calls) == 1
+
+    def test_no_cache_falls_through(self):
+        from repro.api import AssignContext
+        from repro.core.partition import Partition
+        calls = []
+        ctx = AssignContext(array=ArrayShape(128, 128),
+                            time_fn=lambda l, p: calls.append(1) or 2.0)
+        layer = LayerShape.fc("l", 64, 64, batch=8)
+        part = Partition(rows=128, col_start=0, cols=32)
+        assert ctx.time(layer, part) == 2.0
+        assert ctx.time(layer, part) == 2.0
+        assert len(calls) == 2
+
+    def test_missing_time_fn_raises(self):
+        from repro.api import AssignContext
+        from repro.core.partition import Partition
+        ctx = AssignContext(array=ArrayShape(128, 128))
+        with pytest.raises(ValueError, match="time_fn"):
+            ctx.time(LayerShape.fc("l", 64, 64, batch=8),
+                     Partition(rows=128, col_start=0, cols=32))
+
+
 @pytest.mark.parametrize("workload", ["heavy", "light"])
 class TestSessionAcceptance:
     def test_all_policies_run_all_workloads(self, workload):

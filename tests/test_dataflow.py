@@ -1,11 +1,16 @@
 """Partitioned-WS dataflow model tests (core/dataflow.py)."""
 
-import pytest
+# only the property tests need hypothesis; deterministic tests always run
+from _hypothesis_compat import given, settings, st
 
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
-
-from repro.core.dataflow import GEMM, partitioned_ws_loopnest, utilization, ws_cost
+from repro.core.dataflow import (
+    GEMM,
+    partitioned_ws_loopnest,
+    utilization,
+    ws_cost,
+    ws_cost_cache_clear,
+    ws_cost_cache_stats,
+)
 from repro.core.dnng import LayerShape
 from repro.core.partition import Partition
 
@@ -61,6 +66,31 @@ class TestWsCost:
         wide = utilization(g, Partition(128, 0, 128))
         snug = utilization(g, Partition(128, 0, 16))
         assert snug > wide
+
+
+class TestWsCostCache:
+    def test_identical_queries_hit_the_lru(self):
+        ws_cost_cache_clear()
+        g, p = GEMM(T=77, K=256, N=333), Partition(128, 16, 64)
+        first = ws_cost(g, p)
+        # equal-by-value (not identical) arguments must hit
+        again = ws_cost(GEMM(T=77, K=256, N=333), Partition(128, 16, 64))
+        assert again is first  # the cache returns the memoized object
+        stats = ws_cost_cache_stats()
+        assert stats["hits"] >= 1 and stats["misses"] >= 1
+        assert stats["currsize"] >= 1
+
+    def test_clear_resets_counters(self):
+        ws_cost(GEMM(T=5, K=5, N=5), Partition(128, 0, 8))
+        ws_cost_cache_clear()
+        stats = ws_cost_cache_stats()
+        assert stats["hits"] == 0 and stats["currsize"] == 0
+
+    def test_layer_cost_is_memoized_too(self):
+        from repro.sim.systolic import layer_cost
+        layer = LayerShape.fc("l", 128, 128, batch=8)
+        part = Partition(128, 0, 32)
+        assert layer_cost(layer, part) is layer_cost(layer, part)
 
 
 class TestLoopNest:

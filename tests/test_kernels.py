@@ -4,12 +4,18 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # property tests skip cleanly without it
-from hypothesis import given, settings, strategies as st
+
+# only the property tests need hypothesis — the deterministic compact-grid
+# / dtype / VMEM / autotune coverage always runs
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels import (
+    autotune_blocks,
+    block_vmem_bytes,
     build_owner_map,
     fused_tenant_gemm,
+    grid_accounting,
+    live_block_tables,
     partitioned_matmul,
     partitioned_matmul_ref,
 )
@@ -86,6 +92,224 @@ class TestPartitionedMatmul:
         with pytest.raises(ValueError, match="owner"):
             partitioned_matmul(xs, w, jnp.zeros((5,), jnp.int32),
                                jnp.array([128]), interpret=True)
+
+
+def _mk_int(seed, E, T, K, N, n_blocks, valid_t, valid_k):
+    """Integer-valued f32 operands honouring the zero-padding contract.
+
+    Small-integer entries keep every product and partial sum exactly
+    representable in f32, so dense, compact and the oracle must agree
+    BIT-exactly regardless of accumulation grouping.
+    """
+    rng = np.random.default_rng(seed)
+    xs = rng.integers(-4, 5, (E, T, K)).astype(np.float32)
+    for e in range(E):
+        xs[e, valid_t[e]:, :] = 0.0
+        xs[e, :, valid_k[e]:] = 0.0
+    w = rng.integers(-4, 5, (K, N)).astype(np.float32)
+    owner = rng.integers(0, E, n_blocks).astype(np.int32)
+    return (jnp.asarray(xs), jnp.asarray(w), jnp.asarray(owner),
+            jnp.asarray(valid_t, jnp.int32), jnp.asarray(valid_k, jnp.int32))
+
+
+class TestCompactGrid:
+    """grid_mode='compact' — live blocks only, same numerics as dense."""
+
+    @given(seed=st.integers(0, 2**31 - 1),
+           dims=st.tuples(st.integers(1, 3),      # E
+                          st.integers(1, 3),      # t blocks
+                          st.integers(1, 3),      # k blocks
+                          st.integers(1, 4)),     # n blocks
+           data=st.data())
+    @settings(max_examples=10, deadline=None)
+    def test_matches_dense_and_oracle_bit_exactly(self, seed, dims, data):
+        E, tb, kb, nb = dims
+        B = 64
+        T, K, N = tb * B, kb * B, nb * B
+        valid_t = data.draw(st.lists(st.integers(0, T), min_size=E,
+                                     max_size=E))
+        valid_k = data.draw(st.lists(st.integers(0, K), min_size=E,
+                                     max_size=E))
+        xs, w, owner, vt, vk = _mk_int(seed, E, T, K, N, nb,
+                                       valid_t, valid_k)
+        kw = dict(block_t=B, block_k=B, block_n=B, interpret=True)
+        dense = partitioned_matmul(xs, w, owner, vt, vk,
+                                   grid_mode="dense", **kw)
+        compact = partitioned_matmul(xs, w, owner, vt, vk,
+                                     grid_mode="compact", **kw)
+        np.testing.assert_array_equal(np.asarray(compact), np.asarray(dense))
+        # the oracle masks by valid_t only; valid_k exactness comes from
+        # the zero-padded K columns contributing exact zeros
+        ref = partitioned_matmul_ref(xs, w, owner, vt, B)
+        np.testing.assert_array_equal(np.asarray(compact), np.asarray(ref))
+
+    def test_compact_schedules_exactly_the_live_blocks(self):
+        owner = np.array([0, 1, 1, 2], np.int32)
+        vt, vk = np.array([100, 256, 7]), np.array([384, 130, 40])
+        nidx, tidx, kidx, last = live_block_tables(
+            owner, vt, vk, T=256, K=384, block_t=128, block_k=128)
+        acc = grid_accounting(T=256, K=384, N=512, owner=owner, valid_t=vt,
+                              valid_k=vk, grid_mode="compact")
+        assert acc.blocks_scheduled == nidx.size == acc.blocks_live
+        assert acc.blocks_skipped == 0
+        # tenant0: 1x3 blocks; tenant1 (2 cols): 2*(2x2); tenant2: 1x1
+        assert acc.blocks_live == 3 + 2 * 4 + 1
+        # K-runs contiguous, drain flagged on the run's last step
+        runs = np.flatnonzero(kidx == 0)
+        for s, e in zip(runs, list(runs[1:]) + [nidx.size]):
+            assert (nidx[s:e] == nidx[s]).all() and (tidx[s:e] == tidx[s]).all()
+            assert list(kidx[s:e]) == list(range(e - s))
+            assert last[e - 1] == 1 and not last[s:e - 1].any()
+
+    def test_dense_accounting_counts_gated_steps(self):
+        owner = np.array([0, 1], np.int32)
+        acc = grid_accounting(T=256, K=256, N=256, owner=owner,
+                              valid_t=np.array([128, 256]),
+                              valid_k=np.array([256, 128]),
+                              grid_mode="dense")
+        assert acc.blocks_total == acc.blocks_scheduled == 2 * 2 * 2
+        assert acc.blocks_live == 2 + 2          # t0: 1x2, t1: 2x1
+        assert acc.blocks_skipped == 4
+        # fetch model: every scheduled step pulls one x and one w tile
+        assert acc.x_bytes_fetched == 8 * 128 * 128 * 4
+        assert acc.w_bytes_fetched == 8 * 128 * 128 * 4
+        assert acc.schedule_efficiency == 0.5
+
+    def test_zero_live_blocks_returns_zeros(self):
+        xs = jnp.ones((1, 128, 128), jnp.float32)
+        out = partitioned_matmul(xs, jnp.ones((128, 128), jnp.float32),
+                                 jnp.zeros((1,), jnp.int32),
+                                 jnp.array([0], jnp.int32),
+                                 grid_mode="compact", interpret=True)
+        np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+    def test_compact_rejects_traced_partition_state(self):
+        xs = jnp.zeros((1, 128, 128), jnp.float32)
+        w = jnp.zeros((128, 128), jnp.float32)
+
+        @jax.jit
+        def f(owner, vt):
+            return partitioned_matmul(xs, w, owner, vt,
+                                      grid_mode="compact", interpret=True)
+
+        with pytest.raises(ValueError, match="concrete"):
+            f(jnp.zeros((1,), jnp.int32), jnp.array([128], jnp.int32))
+
+    def test_bad_grid_mode_rejected(self):
+        xs = jnp.zeros((1, 128, 128), jnp.float32)
+        with pytest.raises(ValueError, match="grid_mode"):
+            partitioned_matmul(xs, jnp.zeros((128, 128)),
+                               jnp.zeros((1,), jnp.int32),
+                               jnp.array([128]), grid_mode="sparse",
+                               interpret=True)
+
+
+class TestOperandContract:
+    """Explicit dtype validation/promotion + the VMEM block budget."""
+
+    def test_int_operands_rejected(self):
+        xs = jnp.zeros((1, 128, 128), jnp.int32)
+        with pytest.raises(TypeError, match="bfloat16 or float32"):
+            partitioned_matmul(xs, jnp.zeros((128, 128), jnp.float32),
+                               jnp.zeros((1,), jnp.int32),
+                               jnp.array([128]), interpret=True)
+
+    def test_f16_weights_rejected(self):
+        xs = jnp.zeros((1, 128, 128), jnp.float32)
+        with pytest.raises(TypeError, match="bfloat16 or float32"):
+            partitioned_matmul(xs, jnp.zeros((128, 128), jnp.float16),
+                               jnp.zeros((1,), jnp.int32),
+                               jnp.array([128]), interpret=True)
+
+    def test_mixed_bf16_f32_promotes(self):
+        key = jax.random.key(3)
+        x = jax.random.normal(key, (64, 64), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (64, 64),
+                              jnp.float32)
+        out = fused_tenant_gemm([x.astype(jnp.bfloat16)], [w],
+                                block_t=64, block_k=64, block_n=64,
+                                interpret=True)[0]
+        np.testing.assert_allclose(
+            np.asarray(out),
+            np.asarray(x.astype(jnp.bfloat16).astype(jnp.float32) @ w),
+            rtol=1e-5, atol=1e-5)
+
+    def test_vmem_budget_enforced(self):
+        xs = jnp.zeros((1, 1024, 1024), jnp.float32)
+        w = jnp.zeros((1024, 1024), jnp.float32)
+        with pytest.raises(ValueError, match="VMEM"):
+            partitioned_matmul(xs, w, jnp.zeros((1,), jnp.int32),
+                               jnp.array([1024]), block_t=1024,
+                               block_k=1024, block_n=1024, interpret=True)
+
+    def test_mixed_dtype_autotune_budgets_for_the_promoted_type(self):
+        # regression: the autotuner must budget/account for the PROMOTED
+        # operand dtypes (bf16 × f32 → f32), exactly like the kernel does
+        key = jax.random.key(11)
+        x = jax.random.normal(key, (64, 64), jnp.float32)
+        w = jax.random.normal(jax.random.fold_in(key, 1), (64, 64),
+                              jnp.float32)
+        budget = block_vmem_bytes(128, 128, 128, "float32", "float32")
+        _, stats = fused_tenant_gemm(
+            [x.astype(jnp.bfloat16)], [w], vmem_budget_bytes=budget,
+            interpret=True, return_stats=True)
+        assert (stats.block_t, stats.block_k, stats.block_n) == \
+            (128, 128, 128)
+        # byte accounting reflects the f32 fetch, not the bf16 source
+        acc = stats.accounting
+        assert acc.x_bytes_fetched == acc.blocks_scheduled * 128 * 128 * 4
+
+    def test_vmem_budget_is_dtype_aware(self):
+        f32 = block_vmem_bytes(256, 256, 256, jnp.float32, jnp.float32)
+        bf16 = block_vmem_bytes(256, 256, 256, jnp.bfloat16, jnp.bfloat16)
+        assert bf16 < f32  # narrower operands buy headroom
+
+
+class TestAutotune:
+    def test_fits_budget_and_caches(self):
+        shapes = ((512, 363, 96), (512, 147, 64), (54, 512, 100))
+        before = autotune_blocks.cache_info().hits
+        bt, bk, bn = autotune_blocks(shapes)
+        assert autotune_blocks(shapes) == (bt, bk, bn)
+        assert autotune_blocks.cache_info().hits == before + 1
+        assert block_vmem_bytes(bt, bk, bn, "float32", "float32") <= \
+            16 * 2 ** 20
+
+    def test_prefers_fewer_fetched_bytes(self):
+        # tiny tenants: any block over 128 only adds padding fetch traffic
+        assert autotune_blocks(((64, 64, 64), (32, 48, 64))) == \
+            (128, 128, 128)
+
+    def test_respects_tight_budget(self):
+        budget = block_vmem_bytes(128, 128, 128, "float32", "float32")
+        bt, bk, bn = autotune_blocks(((512, 512, 512),),
+                                     vmem_budget_bytes=budget)
+        assert (bt, bk, bn) == (128, 128, 128)
+        with pytest.raises(ValueError, match="fits the VMEM budget"):
+            autotune_blocks(((512, 512, 512),),
+                            vmem_budget_bytes=budget - 1)
+
+    def test_auto_mode_picks_compact_iff_ragged(self):
+        key = jax.random.key(7)
+        mk = lambda t, k, n, s: (
+            jax.random.normal(jax.random.fold_in(key, s), (t, k)),
+            jax.random.normal(jax.random.fold_in(key, s + 100), (k, n)))
+        # tenant 1 is >1 block smaller on T and K: its padding tiles are
+        # dead blocks in the shared dense grid
+        ragged = [mk(256, 256, 128, 0), mk(40, 60, 128, 1)]
+        _, stats = fused_tenant_gemm(
+            [x for x, _ in ragged], [w for _, w in ragged],
+            block_t=128, block_k=128, block_n=128, interpret=True,
+            return_stats=True)
+        assert stats.grid_mode == "compact"
+        assert stats.accounting.blocks_skipped == 0
+        uniform = [mk(128, 128, 128, 2), mk(128, 128, 128, 3)]
+        _, stats = fused_tenant_gemm(
+            [x for x, _ in uniform], [w for _, w in uniform],
+            block_t=128, block_k=128, block_n=128, interpret=True,
+            return_stats=True)
+        assert stats.grid_mode == "dense"
+        assert stats.accounting.schedule_efficiency == 1.0
 
 
 class TestFusedTenantGemm:
