@@ -1,0 +1,198 @@
+"""CI bench-regression gate — regenerate BENCH_*.json and diff vs committed.
+
+    PYTHONPATH=src python benchmarks/check_regression.py [--tolerance R]
+
+Regenerates the tracked benchmark records into a scratch directory and
+compares every tracked metric against the committed copies at the repo
+root:
+
+* ``BENCH_fig9.json``    — per (policy, workload): time/turnaround/energy
+  savings and utilization must not drop (higher is better);
+* ``BENCH_traffic.json`` — per (process, policy, load) and per cluster
+  dispatcher: p99 latency and deadline-miss rate must not rise (lower is
+  better);
+* ``BENCH_kernel.json``  — per compact-mode mix: blocks scheduled and
+  bytes fetched must not rise, and compact mode must still schedule
+  exactly the live-block count.
+
+Every comparison is printed as a metric-by-metric diff table; when
+``$GITHUB_STEP_SUMMARY`` is set the table is also appended there as
+markdown.  Exit code 1 on any regression beyond ``--tolerance`` (relative,
+default 2% — the benches are seeded and deterministic, so the slack only
+absorbs cross-platform float noise).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+class Gate:
+    """Collect metric comparisons; render the diff table; decide pass/fail."""
+
+    def __init__(self, tolerance: float):
+        self.tolerance = tolerance
+        self.rows: list[tuple[str, str, float, float, bool]] = []
+
+    def check(
+        self, key: str, metric: str, old: float, new: float, higher_is_better: bool
+    ) -> None:
+        if higher_is_better:
+            regressed = new < old - self.tolerance * max(abs(old), 1e-12)
+        else:
+            regressed = new > old + self.tolerance * max(abs(old), 1e-12)
+        self.rows.append((key, metric, old, new, regressed))
+
+    @property
+    def regressions(self) -> list[tuple[str, str, float, float, bool]]:
+        return [r for r in self.rows if r[4]]
+
+    def table(self, markdown: bool = False) -> str:
+        lines = []
+        if markdown:
+            lines.append("| benchmark cell | metric | committed | fresh | status |")
+            lines.append("|---|---|---|---|---|")
+        else:
+            lines.append(
+                f"{'benchmark cell':<44}{'metric':<22}{'committed':>12}"
+                f"{'fresh':>12}  status"
+            )
+        for key, metric, old, new, bad in self.rows:
+            status = "REGRESSED" if bad else "ok"
+            if markdown:
+                lines.append(f"| {key} | {metric} | {old:.6g} | {new:.6g} | {status} |")
+            else:
+                lines.append(f"{key:<44}{metric:<22}{old:>12.6g}{new:>12.6g}  {status}")
+        return "\n".join(lines)
+
+
+def _load(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def check_fig9(gate: Gate, committed: dict, fresh: dict) -> None:
+    old = {(r["policy"], r["workload"]): r for r in committed["results"]}
+    new = {(r["policy"], r["workload"]): r for r in fresh["results"]}
+    for key in sorted(old):
+        if key not in new:
+            gate.check(f"fig9 {key}", "row-present", 1.0, 0.0, True)
+            continue
+        for metric in (
+            "time_saving",
+            "turnaround_saving",
+            "energy_saving",
+            "utilization",
+        ):
+            gate.check(
+                f"fig9 {key[0]}/{key[1]}",
+                metric,
+                old[key][metric],
+                new[key][metric],
+                higher_is_better=True,
+            )
+
+
+def check_traffic(gate: Gate, committed: dict, fresh: dict) -> None:
+    def index(blob):
+        rows = {}
+        for r in blob["results"]:
+            rows[(r["arrivals"], r["policy"], r["load"])] = r
+        for r in blob.get("cluster_results", []):
+            rows[("cluster", r["dispatch"], r["load"])] = r
+        return rows
+
+    old, new = index(committed), index(fresh)
+    for key in sorted(old):
+        if key not in new:
+            gate.check(f"traffic {key}", "row-present", 1.0, 0.0, True)
+            continue
+        cell = f"traffic {key[0]}/{key[1]}@{key[2]}"
+        for metric in ("p99_latency_s", "deadline_miss_rate"):
+            gate.check(
+                cell,
+                metric,
+                old[key][metric],
+                new[key][metric],
+                higher_is_better=False,
+            )
+
+
+def check_kernel(gate: Gate, committed: dict, fresh: dict) -> None:
+    old = {r["mix"]: r["compact"] for r in committed["results"]}
+    new = {r["mix"]: r["compact"] for r in fresh["results"]}
+    for mix in sorted(old):
+        if mix not in new:
+            gate.check(f"kernel {mix}", "row-present", 1.0, 0.0, True)
+            continue
+        cell = f"kernel {mix}/compact"
+        for metric in ("blocks_scheduled", "bytes_fetched"):
+            gate.check(
+                cell,
+                metric,
+                old[mix][metric],
+                new[mix][metric],
+                higher_is_better=False,
+            )
+        gate.check(
+            cell,
+            "scheduled-minus-live",
+            0.0,
+            abs(new[mix]["blocks_scheduled"] - new[mix]["blocks_live"]),
+            higher_is_better=False,
+        )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--tolerance", type=float, default=0.02)
+    args = parser.parse_args(argv)
+
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    sys.path.insert(0, ROOT)
+    from benchmarks import kernel_bench, traffic_bench
+    from benchmarks.run import emit_bench_json
+
+    gate = Gate(args.tolerance)
+    with tempfile.TemporaryDirectory() as tmp:
+        print("# regenerating BENCH_fig9.json ...")
+        fresh_fig9 = emit_bench_json(os.path.join(tmp, "fig9.json"))
+        print("# regenerating BENCH_traffic.json ...")
+        fresh_traffic = traffic_bench.run(path=os.path.join(tmp, "traffic.json"))
+        print("# regenerating BENCH_kernel.json ...")
+        fresh_kernel = kernel_bench.run(path=os.path.join(tmp, "kernel.json"))
+
+    check_fig9(gate, _load(os.path.join(ROOT, "BENCH_fig9.json")), fresh_fig9)
+    check_traffic(
+        gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic
+    )
+    check_kernel(gate, _load(os.path.join(ROOT, "BENCH_kernel.json")), fresh_kernel)
+
+    print()
+    print(gate.table())
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write("## Bench-regression gate\n\n")
+            f.write(gate.table(markdown=True))
+            f.write("\n")
+    bad = gate.regressions
+    if bad:
+        print(
+            f"\nFAIL: {len(bad)} tracked metric(s) regressed beyond "
+            f"{args.tolerance:.1%} tolerance",
+            file=sys.stderr,
+        )
+        return 1
+    print(f"\nOK: {len(gate.rows)} tracked metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -23,7 +23,7 @@ from repro.sim import workloads as W
 
 
 def _scale_batch(g: DNNG, factor: int) -> DNNG:
-    new = [dataclasses.replace(l, N=l.N * factor) for l in g.layers]
+    new = [dataclasses.replace(ls, N=ls.N * factor) for ls in g.layers]
     return dataclasses.replace(g, layers=tuple(new))
 
 

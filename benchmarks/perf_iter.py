@@ -33,7 +33,7 @@ def main() -> int:
         _model_flops,
     )
     from repro.configs import get
-    from repro.distributed.sharding import FSDP_TP, MeshRules
+    from repro.distributed.sharding import FSDP_TP
     from repro.launch.hlo_analysis import collective_stats, loop_aware_cost
     from repro.launch.steps import build_lowerable
     from repro.training.train_loop import TrainConfig

@@ -40,6 +40,11 @@ def emit_bench_json(path: str = BENCH_JSON) -> dict:
                  for wl in ("heavy", "light")}
     rows = []
     for pol in list_policies():
+        if pol == "deadline_preempt":
+            # deadline-driven serving policy: closed workloads carry no
+            # deadlines, so it degenerates to `equal` here — its numbers
+            # live in BENCH_preempt.json (benchmarks/preempt_bench.py)
+            continue
         for wl in ("heavy", "light"):
             rows.append(Session(policy=pol, backend="sim")
                         .run(wl, baseline=baselines[wl]).as_dict())

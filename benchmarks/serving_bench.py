@@ -16,7 +16,7 @@ from repro.distributed.tenancy import TenantMeshManager
 from repro.launch.mesh import make_host_mesh
 from repro.models.model import init_params
 from repro.serving.engine import MultiTenantEngine
-from repro.serving.kv_cache import DecodeSession, Request
+from repro.serving.kv_cache import DecodeSession
 
 TENANTS = ("llama3.2-3b", "mamba2-780m", "recurrentgemma-2b")
 

@@ -54,8 +54,8 @@ def mean_service_s(pool: str) -> float:
     times = []
     for name in MODEL_POOLS[pool]:
         g = MODELS[name]()
-        times.append(sum(stage.stage_in_s(l) + time_fn(l, full)
-                         + stage.stage_out_s(l) for l in g.layers))
+        times.append(sum(stage.stage_in_s(ls) + time_fn(ls, full)
+                         + stage.stage_out_s(ls) for ls in g.layers))
     return sum(times) / len(times)
 
 

@@ -13,7 +13,6 @@ re-initialising the survivor's step on the wider slice).
 
 import tempfile
 
-import jax
 
 from repro.configs import get
 from repro.distributed.tenancy import TenantMeshManager

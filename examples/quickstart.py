@@ -11,7 +11,6 @@
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 # -- 1. the paper's simulation, via the API front door -------------------
 from repro.api import Session, list_policies

@@ -20,8 +20,11 @@ Three pieces:
 from repro.api.policy import (
     AssignContext,
     BestFitPolicy,
+    DeadlinePreemptPolicy,
     EqualPolicy,
+    InFlightLayer,
     PartitionPolicy,
+    PreemptContext,
     PriorityPolicy,
     ProportionalPolicy,
     TenantDemand,
@@ -46,8 +49,9 @@ from repro.api.session import BaselineRun, Session, SessionResult
 __all__ = [
     # policies
     "PartitionPolicy", "TenantDemand", "AssignContext",
+    "PreemptContext", "InFlightLayer",
     "EqualPolicy", "ProportionalPolicy", "BestFitPolicy", "PriorityPolicy",
-    "WidthAwarePolicy",
+    "WidthAwarePolicy", "DeadlinePreemptPolicy",
     "register_policy", "get_policy", "list_policies", "resolve_policy",
     # backends
     "Accelerator", "EnergyReport", "SimBackend", "MeshBackend",

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import abc
 import dataclasses
+import math
 from typing import Callable, Mapping, MutableMapping, Optional, Sequence
 
 from repro.core.dnng import LayerShape
@@ -79,6 +80,66 @@ class TenantDemand:
 
 
 @dataclasses.dataclass(frozen=True)
+class InFlightLayer:
+    """Policy-facing view of one executing layer (preemption candidate).
+
+    ``remaining_s`` is the compute time left on the current partition at
+    ``PreemptContext.now``; ``fraction_done`` is the share of the layer's
+    total compute already finished (across all of its segments).
+    """
+
+    tenant: str
+    layer_index: int
+    layer: LayerShape
+    partition: Partition
+    compute_start: float
+    compute_end: float
+    remaining_s: float
+    fraction_done: float
+
+
+@dataclasses.dataclass(frozen=True)
+class PreemptContext:
+    """Runtime context for :meth:`PartitionPolicy.preempt`.
+
+    Built by the scheduler at every rebalance point when a
+    :class:`~repro.core.scheduler.PreemptionModel` is armed: ``ready`` is
+    the waiting layer set, ``free`` the current free slices, ``inflight``
+    the preemptible (mid-compute) layers, and ``deadlines`` the absolute
+    SLA deadlines of tenants that carry one.  ``drain_s``/``stage_in_s``
+    price a candidate eviction so hooks can weigh the drain + re-stage
+    overhead against the columns reclaimed.
+    """
+
+    array: ArrayShape
+    now: float
+    ready: tuple[ReadyLayer, ...]
+    free: tuple[Partition, ...]
+    inflight: Mapping[str, InFlightLayer]
+    deadlines: Mapping[str, float]
+    time_fn: Callable[[LayerShape, Partition], float]
+    drain_s: Callable[[Partition], float]
+    stage_in_s: Callable[[LayerShape], float]
+    cost_cache: Optional[MutableMapping] = None
+
+    def time(self, layer: LayerShape, part: Partition) -> float:
+        """Memoized ``time_fn(layer, part)`` — shares the rebalance round's
+        oracle memo with :meth:`AssignContext.time`."""
+        if self.cost_cache is None:
+            return self.time_fn(layer, part)
+        key = (layer, part)
+        try:
+            return self.cost_cache[key]
+        except KeyError:
+            self.cost_cache[key] = cost = self.time_fn(layer, part)
+            return cost
+
+    def preempt_cost_s(self, victim: InFlightLayer) -> float:
+        """Drain + weight re-stage time for evicting ``victim`` now."""
+        return self.drain_s(victim.partition) + self.stage_in_s(victim.layer)
+
+
+@dataclasses.dataclass(frozen=True)
 class AssignContext:
     """Runtime context the scheduler passes to :meth:`PartitionPolicy.assign`.
 
@@ -93,12 +154,18 @@ class AssignContext:
     (steady-state assign re-offers after every grant) gets a dict hit
     instead of a fresh oracle call.  Policies should query the oracle via
     :meth:`time` so they participate in the cache transparently.
+
+    ``deadlines`` maps tenant name → absolute SLA deadline for tenants
+    that carry one (supplied by ``DynamicScheduler.submit(...,
+    deadline=)``); deadline-aware policies (``deadline_preempt``) use it
+    for earliest-deadline-first assignment ordering.
     """
 
     array: ArrayShape
     time_fn: Optional[Callable[[LayerShape, Partition], float]] = None
     busy: Mapping[str, Partition] = dataclasses.field(default_factory=dict)
     cost_cache: Optional[MutableMapping] = None
+    deadlines: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def time(self, layer: LayerShape, part: Partition) -> float:
         """Memoized ``time_fn(layer, part)`` (falls through when no cache)."""
@@ -178,6 +245,17 @@ class PartitionPolicy(abc.ABC):
         Task_Assignment — heaviest ``Opr`` → largest slice, whole grants)."""
         return task_assignment(ready, partitions)
 
+    def preempt(self, ctx: PreemptContext) -> Sequence[str]:
+        """Name in-flight tenants whose layer should be evicted *now*.
+
+        Called by the scheduler at every rebalance point, but only when a
+        :class:`~repro.core.scheduler.PreemptionModel` is armed.  The
+        default never preempts, so every stock policy (``equal`` included)
+        stays byte-identical to the preemption-free scheduler even with
+        the model configured.
+        """
+        return ()
+
     # -- conveniences ------------------------------------------------------
     def place(self, array: ArrayShape,
               tenants: Sequence[TenantDemand]) -> dict[str, Partition]:
@@ -254,6 +332,11 @@ class EqualPolicy(PartitionPolicy):
         return partition_calculation(array, len(tenants))
 
 
+def _floor_cols(t: TenantDemand) -> int:
+    """Reservation floor of one tenant (at least one column)."""
+    return max(1, t.min_cols)
+
+
 def _admit_by_floor(order: Sequence[TenantDemand], total_cols: int,
                     floor_of) -> list[TenantDemand]:
     """Admit tenants in priority order while reservation floors still fit."""
@@ -295,8 +378,7 @@ class ProportionalPolicy(PartitionPolicy):
 
     def widths(self, total_cols: int,
                tenants: Sequence[TenantDemand]) -> dict[str, int]:
-        floor_of = lambda t: max(1, t.min_cols)
-        placed = _admit_by_floor(self.order(tenants), total_cols, floor_of)
+        placed = _admit_by_floor(self.order(tenants), total_cols, _floor_cols)
         if not placed:
             return {}
         ws: dict[str, int] = {}
@@ -304,13 +386,13 @@ class ProportionalPolicy(PartitionPolicy):
         cols_left = total_cols
         while free:
             shares = _largest_remainder(cols_left, free)
-            short = [t for t in free if shares[t.name] < floor_of(t)]
+            short = [t for t in free if shares[t.name] < _floor_cols(t)]
             if not short:
                 ws.update(shares)
                 break
             for t in short:  # pin under-floor tenants, re-apportion the rest
-                ws[t.name] = floor_of(t)
-                cols_left -= floor_of(t)
+                ws[t.name] = _floor_cols(t)
+                cols_left -= _floor_cols(t)
                 free.remove(t)
         return ws
 
@@ -325,22 +407,21 @@ class BestFitPolicy(PartitionPolicy):
 
     def widths(self, total_cols: int,
                tenants: Sequence[TenantDemand]) -> dict[str, int]:
-        floor_of = lambda t: max(1, t.min_cols)
-        placed = _admit_by_floor(self.order(tenants), total_cols, floor_of)
+        placed = _admit_by_floor(self.order(tenants), total_cols, _floor_cols)
         if not placed:
             return {}
         base = max(1, total_cols // len(placed))
         ws = {}
         for t in placed:
             wd = t.width_demand if t.width_demand else base
-            ws[t.name] = max(floor_of(t), min(base, wd))
+            ws[t.name] = max(_floor_cols(t), min(base, wd))
         # floors can push the fair-share sum over the array: shave the
         # lowest-priority tenants back toward their floors
         over = sum(ws.values()) - total_cols
         for t in reversed(placed):
             if over <= 0:
                 break
-            cut = min(ws[t.name] - floor_of(t), over)
+            cut = min(ws[t.name] - _floor_cols(t), over)
             ws[t.name] -= cut
             over -= cut
         leftover = total_cols - sum(ws.values())
@@ -477,3 +558,89 @@ class WidthAwarePolicy(EqualPolicy):
         t_want = ctx.time(layer, Partition(rows=rows, col_start=0,
                                            cols=demand))
         return t_here > 2.0 * t_want
+
+
+@register_policy("deadline_preempt")
+class DeadlinePreemptPolicy(EqualPolicy):
+    """Equal splits + deadline-driven preemption (the MoCA-style runtime
+    adaptation the base scheduler lacks: arXiv:2305.05843 §IV).
+
+    Split and assign are Algorithm 1 verbatim, so with no deadline pressure
+    this policy schedules exactly like ``equal``.  The :meth:`preempt` hook
+    fires when a *ready* layer's tenant is under deadline pressure and the
+    array has no free columns: the in-flight layer with the weakest claim
+    (latest or no deadline, longest remaining compute) is evicted, provided
+    the reclaimed compute time clearly exceeds the drain + re-stage
+    overhead.
+
+    A ready tenant is *pressured* when waiting for the earliest in-flight
+    completion would bust its deadline (``slack < slack_factor × (wait +
+    own runtime)``) while acting now can still meet it (``slack > own
+    runtime``) — already-doomed jobs never trigger thrash.
+    ``min_gain_factor`` additionally requires a victim's remaining compute
+    to exceed ``min_gain_factor ×`` the eviction overhead (drain + weight
+    re-stage), so near-done layers are never evicted.
+    """
+
+    def __init__(self, slack_factor: float = 1.25,
+                 min_gain_factor: float = 1.5):
+        self.slack_factor = slack_factor
+        self.min_gain_factor = min_gain_factor
+
+    def preempt(self, ctx: PreemptContext) -> Sequence[str]:
+        if ctx.free or not ctx.inflight:
+            return ()  # free columns exist: let assign() place the layer
+        wait_s = min(v.remaining_s for v in ctx.inflight.values())
+        fair = Partition(
+            rows=ctx.array.rows, col_start=0,
+            cols=max(1, ctx.array.cols // (len(ctx.inflight) + 1)))
+        pressured = []
+        for tenant, _idx, layer in ctx.ready:
+            dl = ctx.deadlines.get(tenant)
+            if dl is None:
+                continue
+            slack = dl - ctx.now
+            est = ctx.time(layer, fair)
+            if slack <= est:
+                continue  # hopeless even with an instant grant
+            if slack < self.slack_factor * (wait_s + est):
+                pressured.append((slack, tenant))
+        if not pressured:
+            return ()
+        urgent_slack = min(pressured)[0]
+        victims = self._pick_victims(ctx, urgent_slack)
+        return victims
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        """Earliest-deadline-first assignment (deadline-less tenants fall
+        back to the paper's heaviest-``Opr`` order, after every deadline
+        holder): the tenant a preemption was fired *for* must reach the
+        bus ahead of the victim's re-stage, or the eviction bought
+        nothing."""
+        dls = ctx.deadlines if ctx is not None else {}
+        layers = sorted(ready, key=lambda t: (dls.get(t[0], math.inf),
+                                              -t[2].opr))
+        parts = sorted(partitions, key=lambda p: p.n_pes, reverse=True)
+        return [Assignment(tenant=tenant, layer_index=idx, layer=layer,
+                           partition=part)
+                for (tenant, idx, layer), part in zip(layers, parts)]
+
+    def _pick_victims(self, ctx: PreemptContext,
+                      urgent_slack: float) -> Sequence[str]:
+        victims = []
+        for v in ctx.inflight.values():
+            v_dl = ctx.deadlines.get(v.tenant)
+            if v_dl is not None and 0.0 < v_dl - ctx.now <= urgent_slack:
+                # victim is salvageable and at least as urgent: never
+                # invert SLAs.  Victims whose deadline already passed are
+                # fair game — they miss either way, so their columns are
+                # worth more to a job that can still be saved.
+                continue
+            if v.remaining_s <= self.min_gain_factor * ctx.preempt_cost_s(v):
+                continue  # nearly done / tiny layer: eviction buys nothing
+            victims.append((-v.remaining_s, v.tenant))
+        if not victims:
+            return ()
+        return (min(victims)[1],)

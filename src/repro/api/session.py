@@ -201,7 +201,10 @@ class Session:
 
     def serve(self, arrivals, *, n_arrays: int = 1, dispatch: str = "jsq",
               max_concurrent: int = 4, queue_cap: int = 16, seed: int = 0,
-              keep_trace: bool = False, **arrival_kwargs):
+              keep_trace: bool = False, preemption=None,
+              rebalance_interval: "float | None" = None,
+              rebalancer="migrate_on_pressure", migration=None,
+              **arrival_kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
         :class:`repro.traffic.ServeResult` (latency percentiles,
@@ -213,6 +216,18 @@ class Session:
         ``"trace"`` — constructor kwargs such as ``rate=``/``horizon=``
         forwarded), or any time-ordered iterable of
         :class:`~repro.traffic.arrivals.Job`.
+
+        ``preemption`` arms layer-granular preemption: ``True`` for the
+        default :class:`~repro.core.scheduler.PreemptionModel`, or a model
+        instance (policies without a ``preempt`` hook — everything except
+        ``deadline_preempt`` — still never preempt).
+        ``rebalance_interval`` (seconds) enables cross-node tenant
+        migration on a fleet (``n_arrays > 1``): the ``rebalancer``
+        strategy (name or :class:`~repro.traffic.rebalance.Rebalancer`)
+        runs every interval and on deadline pressure at each arrival,
+        moving queued/pristine tenants under the ``migration``
+        (:class:`~repro.traffic.rebalance.MigrationModel`) checkpoint
+        cost.
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
@@ -220,7 +235,9 @@ class Session:
             arrivals, policy=self.policy, backend=self.backend,
             n_arrays=n_arrays, dispatch=dispatch,
             max_concurrent=max_concurrent, queue_cap=queue_cap, seed=seed,
-            keep_trace=keep_trace, **arrival_kwargs).run()
+            keep_trace=keep_trace, preemption=preemption,
+            rebalance_interval=rebalance_interval, rebalancer=rebalancer,
+            migration=migration, **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

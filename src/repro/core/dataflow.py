@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-import math
 
 from repro.core.dnng import LayerShape
 from repro.core.partition import Partition

@@ -23,7 +23,6 @@ batch/time steps folded into N.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Iterator, Sequence
 
 
@@ -166,11 +165,11 @@ class DNNG:
 
     @property
     def total_macs(self) -> int:
-        return sum(l.macs for l in self.layers)
+        return sum(layer.macs for layer in self.layers)
 
     @property
     def total_opr(self) -> int:
-        return sum(l.opr for l in self.layers)
+        return sum(layer.opr for layer in self.layers)
 
     def __iter__(self) -> Iterator[LayerShape]:
         return iter(self.layers)

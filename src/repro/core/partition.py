@@ -23,7 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Iterable, Optional, Sequence
+from typing import Optional, Sequence
 
 from repro.core.dnng import LayerShape
 

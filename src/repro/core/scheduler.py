@@ -72,11 +72,51 @@ class StageModel:
 
 
 @dataclasses.dataclass(frozen=True)
+class PreemptionModel:
+    """Cost model of preempting an in-flight layer (§3.3 taken further).
+
+    Preempting a layer mid-compute is not free: the partition's in-array
+    partial sums (one fp32 accumulator per PE of the column group) must be
+    drained to the output SRAM/DRAM over the shared bus before the columns
+    can be handed to another tenant — the already-computed OFMap rows stay
+    in the output buffer and flow out with the layer's normal stage-out.
+    The victim pays the normal :class:`StageModel` stage-in again on
+    resume (weights are stationary — they are gone once the columns are
+    reassigned), so the restore side is simply the relaunch's stage-in and
+    needs no extra model here.
+
+    ``fixed_overhead_s`` is the control-path cost of quiescing the column
+    group (pipeline flush + reconfiguration), paid once per preemption —
+    it is the whole cost when a layer is caught during stage-in, before
+    any partial sums exist.
+    """
+
+    dram_bw_bytes: float = 64e9
+    psum_bytes_per_elem: int = 4      # partial sums are fp32 accumulators
+    fixed_overhead_s: float = 2e-6
+
+    def drain_s(self, part: Partition) -> float:
+        psum_bytes = part.n_pes * self.psum_bytes_per_elem
+        return self.fixed_overhead_s + psum_bytes / self.dram_bw_bytes
+
+
+@dataclasses.dataclass(frozen=True)
 class TraceEvent:
-    """One executed layer: who, what, where, when (Fig. 9(c,d) raw data).
+    """One executed layer *segment*: who, what, where, when (Fig. 9(c,d)).
 
     ``start``/``end`` bound the full lifecycle on the partition;
     ``compute_start``/``compute_end`` bound the PE-array-active phase.
+
+    Without preemption every layer is exactly one segment with
+    ``fraction == 1.0`` and both flags False — byte-identical to the
+    pre-preemption trace format.  A preempted layer emits one event per
+    executed segment: ``fraction`` is the share of the layer's total
+    compute done in this segment (segment fractions sum to 1.0 across the
+    layer), ``preempted`` marks a segment that ended in a drain (its
+    ``end`` includes the partial-sum drain), and ``resumed`` marks a
+    segment that began with a weight re-stage.  Energy accounting in
+    `repro.sim.energy` scales per-layer access counts by ``fraction`` and
+    adds the drain/restore DRAM traffic, so the books stay exact.
     """
 
     tenant: str
@@ -87,6 +127,9 @@ class TraceEvent:
     end: float
     compute_start: float
     compute_end: float
+    fraction: float = 1.0
+    resumed: bool = False
+    preempted: bool = False
 
     @property
     def duration(self) -> float:
@@ -107,6 +150,7 @@ class ScheduleResult:
     # the trace.  Keeps utilization correct when the trace was dropped
     # (DynamicScheduler(keep_trace=False) over long open-loop horizons).
     busy_pe_seconds: float | None = None
+    preemptions: int = 0
 
     def tenant_trace(self, tenant: str) -> list[TraceEvent]:
         return [e for e in self.trace if e.tenant == tenant]
@@ -137,14 +181,29 @@ class _Bus:
         self.busy_s += dur
         return start, start + dur
 
+    def abort_reservation(self, now: float, start: float, end: float) -> None:
+        """Cancel the unperformed part of the reservation ``[start, end)``
+        (a preempted stage-in).  Only possible while it is still the bus's
+        LAST reservation — transfers already committed behind it keep
+        their windows, so the slot is sunk cost then and nothing is
+        reclaimed."""
+        if self.free_at != end:
+            return
+        cut_from = max(now, start)
+        self.busy_s -= end - cut_from
+        self.free_at = cut_from
+
 
 class _Tenant:
-    __slots__ = ("dnng", "next_layer", "running", "done_layers")
+    __slots__ = ("dnng", "next_layer", "running", "done_layers", "draining",
+                 "done_frac")
 
     def __init__(self, dnng: DNNG):
         self.dnng = dnng
         self.next_layer = 0
         self.running = False
+        self.draining = False       # preempted: partition frees at drain end
+        self.done_frac: dict[int, float] = {}  # layer idx -> compute done
         self.done_layers: set[int] = set()
 
     @property
@@ -153,13 +212,34 @@ class _Tenant:
 
     def ready_layer(self) -> tuple[int, LayerShape] | None:
         """Next layer whose DAG predecessors are all complete."""
-        if self.finished or self.running:
+        if self.finished or self.running or self.draining:
             return None
         idx = self.next_layer
         preds = self.dnng.predecessors(idx)
         if all(p in self.done_layers for p in preds):
             return idx, self.dnng.layers[idx]
         return None
+
+
+@dataclasses.dataclass
+class _InFlight:
+    """One launched layer segment (scheduler-internal mutable record)."""
+
+    __slots__ = ("idx", "layer", "part", "t_assign", "si_start", "c_start",
+                 "c_end", "base_frac", "share", "resumed", "token")
+
+    idx: int
+    layer: LayerShape
+    part: Partition
+    t_assign: float
+    si_start: float      # stage-in bus reservation start (== t_assign if
+                         # the bus was free; == c_start when stage is None)
+    c_start: float
+    c_end: float
+    base_frac: float     # compute fraction done before this segment
+    share: float         # compute fraction this segment covers (1 - base)
+    resumed: bool        # a prior segment of this layer was preempted
+    token: int           # invalidates stale "cdone" events after preemption
 
 
 class DynamicScheduler:
@@ -184,12 +264,21 @@ class DynamicScheduler:
       PE-seconds, completion count and last completion time are still
       accumulated, and per-job completion instants flow through
       ``on_complete``.
+    * ``preemption``      — a :class:`PreemptionModel` arms layer-granular
+      preemption: at every rebalance point the policy's optional
+      ``preempt(ctx)`` hook may name in-flight victims, whose partial sums
+      are drained over the bus (partition frees at drain end) and whose
+      remaining compute re-enters the ready set, paying stage-in again on
+      resume.  ``None`` (default) or a policy without the hook keeps the
+      event stream — and therefore the trace — byte-identical to the
+      preemption-free scheduler.
     """
 
     def __init__(self, array: ArrayShape, time_fn: TimeFn,
                  stage: StageModel | None = None, policy="paper",
                  on_complete: Callable[[str, float], None] | None = None,
-                 keep_trace: bool = True, start_time: float = 0.0):
+                 keep_trace: bool = True, start_time: float = 0.0,
+                 preemption: "PreemptionModel | None" = None):
         # lazy import: repro.api builds on this module (no import cycle)
         from repro.api.policy import resolve_policy
         self.array = array
@@ -198,7 +287,9 @@ class DynamicScheduler:
         self.pol = resolve_policy(policy)
         self.on_complete = on_complete
         self.keep_trace = keep_trace
+        self.preemption = preemption
         self.tenants: dict[str, _Tenant] = {}
+        self.deadlines: dict[str, float] = {}
         self.pset = PartitionSet(array)
         self.bus = _Bus()
         self.trace: list[TraceEvent] = []
@@ -206,12 +297,15 @@ class DynamicScheduler:
         self.now = start_time
         self.pe_seconds_busy = 0.0
         self.n_completed = 0
+        self.n_preemptions = 0
         self.last_completion = start_time
-        # in-flight state: tenant -> (idx, layer, part, t_assign, t_cstart, t_cend)
-        self._inflight: dict[str, tuple] = {}
-        # event heap: (time, seq, kind, tenant); kinds: "arrive", "cdone", "done"
+        self._inflight: dict[str, _InFlight] = {}
+        # event heap: (time, seq, kind, payload); kinds: "arrive", "cdone",
+        # "done", "pfree".  payload is the tenant name, except "cdone" which
+        # carries (tenant, token) so preemption can invalidate stale events.
         self._seq = itertools.count()
-        self._events: list[tuple[float, int, str, str]] = []
+        self._tokens = itertools.count()
+        self._events: list[tuple] = []
 
     # -- queries ------------------------------------------------------------
     @property
@@ -226,13 +320,17 @@ class DynamicScheduler:
         return self._events[0][0] if self._events else None
 
     # -- admission ----------------------------------------------------------
-    def submit(self, dnng: DNNG) -> None:
+    def submit(self, dnng: DNNG, deadline: float | None = None) -> None:
         """Admit one DNNG; its layers become schedulable at ``arrival_time``.
 
         Names must be unique per scheduler.  In ``keep_trace=False`` mode
         completed names are not remembered (bounded memory), so collisions
         with *retired* tenants are only caught by the caller — the traffic
         simulator enforces uniqueness across the whole arrival stream.
+
+        ``deadline`` (absolute seconds) is optional SLA metadata surfaced to
+        the policy's ``preempt(ctx)`` hook; it never affects scheduling
+        unless a policy acts on it.
         """
         if dnng.name in self.tenants or dnng.name in self.completion:
             raise ValueError(f"duplicate DNNG name: {dnng.name!r}")
@@ -241,8 +339,27 @@ class DynamicScheduler:
                 f"cannot submit {dnng.name!r} at t={dnng.arrival_time} in "
                 f"the past (clock is at {self.now})")
         self.tenants[dnng.name] = _Tenant(dnng)
+        if deadline is not None:
+            self.deadlines[dnng.name] = deadline
         heapq.heappush(self._events, (dnng.arrival_time, next(self._seq),
                                       "arrive", dnng.name))
+
+    def withdraw(self, name: str) -> bool:
+        """Remove a submitted tenant that has not touched the array yet.
+
+        Only *pristine* tenants — no layer completed, none in flight, not
+        draining — can be withdrawn; this is the cross-node migration hook
+        (`repro.traffic.rebalance` moves the job to another array).  Returns
+        False when the tenant is unknown or has already made progress.  The
+        tenant's pending "arrive" event becomes a harmless no-op.
+        """
+        t = self.tenants.get(name)
+        if (t is None or t.running or t.draining or t.next_layer > 0
+                or name in self._inflight):
+            return False
+        del self.tenants[name]
+        self.deadlines.pop(name, None)
+        return True
 
     # -- event loop ---------------------------------------------------------
     def _ready_tenants(self, now: float) -> list[tuple[str, int, LayerShape]]:
@@ -261,16 +378,28 @@ class DynamicScheduler:
         t.running = True
         # stage-in on the shared bus, then compute; stage-out acquires the
         # bus only when compute actually completes (see "cdone" handler).
+        # A resumed (previously preempted) segment pays stage-in again —
+        # this IS the restore cost: stationary weights were lost with the
+        # columns (PreemptionModel docstring).
         if self.stage is not None:
-            _, si_end = self.bus.acquire(now, self.stage.stage_in_s(layer))
+            si_start, si_end = self.bus.acquire(
+                now, self.stage.stage_in_s(layer))
         else:
-            si_end = now
+            si_start = si_end = now
         c_dur = self.time_fn(layer, part)
         if c_dur <= 0:
             raise ValueError(f"time_fn returned non-positive duration {c_dur}")
-        c_end = si_end + c_dur
-        self._inflight[tenant] = (layer_idx, layer, part, now, si_end, c_end)
-        heapq.heappush(self._events, (c_end, next(self._seq), "cdone", tenant))
+        base = t.done_frac.get(layer_idx, 0.0)
+        share = 1.0 - base
+        c_end = si_end + c_dur * share
+        token = next(self._tokens)
+        self._inflight[tenant] = _InFlight(
+            idx=layer_idx, layer=layer, part=part, t_assign=now,
+            si_start=si_start, c_start=si_end, c_end=c_end,
+            base_frac=base, share=share,
+            resumed=layer_idx in t.done_frac, token=token)
+        heapq.heappush(self._events, (c_end, next(self._seq), "cdone",
+                                      (tenant, token)))
 
     def _demands(self, ready: Sequence[tuple[str, int, LayerShape]]):
         from repro.api.policy import TenantDemand
@@ -279,22 +408,77 @@ class DynamicScheduler:
                                                      self.array.cols)))
                 for tenant, _idx, layer in ready]
 
+    def _maybe_preempt(self, now: float, cost_cache: dict) -> None:
+        """Offer the policy's ``preempt(ctx)`` hook the in-flight set.
+
+        Armed only when a :class:`PreemptionModel` was configured.  Any
+        layer that has not finished computing is eligible — including one
+        still in stage-in, which has no partial sums yet and so pays only
+        the fixed quiesce overhead on eviction.  Layers already draining
+        (past ``c_end``) are not; invalid names are ignored rather than
+        fatal so third-party hooks cannot corrupt scheduler state.
+
+        ``cost_cache`` is the rebalance round's shared oracle memo — the
+        same dict the :class:`AssignContext`\\ s of this round use.
+        """
+        from repro.api.policy import (
+            InFlightLayer,
+            PartitionPolicy,
+            PreemptContext,
+        )
+        hook = getattr(self.pol, "preempt", None)
+        if hook is None or getattr(type(self.pol), "preempt", None) \
+                is PartitionPolicy.preempt:
+            return  # base hook never preempts: skip building the context
+        eligible = {
+            name: inf for name, inf in self._inflight.items()
+            if now < inf.c_end  # mid-stage-in layers are evictable too
+        }
+        if not eligible:
+            return
+        ready = self._ready_tenants(now)
+        if not ready:
+            return
+        ctx = PreemptContext(
+            array=self.array, now=now,
+            ready=tuple(ready),
+            free=tuple(self.pset.free_partitions),
+            inflight={name: InFlightLayer(
+                tenant=name, layer_index=inf.idx, layer=inf.layer,
+                partition=inf.part, compute_start=inf.c_start,
+                compute_end=inf.c_end, remaining_s=inf.c_end - now,
+                fraction_done=inf.base_frac + inf.share
+                * max(0.0, now - inf.c_start) / (inf.c_end - inf.c_start))
+                for name, inf in eligible.items()},
+            deadlines=dict(self.deadlines),
+            time_fn=self.time_fn,
+            cost_cache=cost_cache,
+            drain_s=self.preemption.drain_s,
+            stage_in_s=(self.stage.stage_in_s if self.stage is not None
+                        else lambda layer: 0.0))
+        for victim in hook(ctx):
+            if victim in eligible and victim in self._inflight:
+                self._preempt(victim, now)
+
     def _assign(self, now: float) -> None:
         """(Re-)run the policy's split + assign steps at time ``now``."""
         from repro.api.policy import AssignContext
         array, pset, pol = self.array, self.pset, self.pol
+        # one (layer, partition) -> seconds memo per rebalance round: the
+        # preempt hook and the steady-state loop below re-probe pairings
+        # the round has already priced
+        cost_cache: dict = {}
+        if self.preemption is not None:
+            self._maybe_preempt(now, cost_cache)
         ready = self._ready_tenants(now)
         if not ready:
             return
-        # one (layer, partition) -> seconds memo per rebalance round: the
-        # steady-state loop below re-offers after every grant, re-probing
-        # pairings the round has already priced
-        cost_cache: dict = {}
         whole_array_free = (not pset.busy_partitions
                             and len(pset.free_partitions) == 1)
         if whole_array_free:
             ctx = AssignContext(array=array, time_fn=self.time_fn, busy={},
-                                cost_cache=cost_cache)
+                                cost_cache=cost_cache,
+                                deadlines=self.deadlines)
             if len(ready) == 1:
                 # Fig. 5 lines 5–6: single available task -> offer all PEs.
                 offered = [Partition(rows=array.rows, col_start=0,
@@ -318,7 +502,8 @@ class DynamicScheduler:
                 break
             ctx = AssignContext(array=array, time_fn=self.time_fn,
                                 busy=pset.busy_partitions,
-                                cost_cache=cost_cache)
+                                cost_cache=cost_cache,
+                                deadlines=self.deadlines)
             for a in pol.assign(ready, free, ctx):
                 got = pset.allocate_exact(a.tenant, a.partition)
                 self._launch(now, a.tenant, a.layer_index, a.layer, got)
@@ -326,23 +511,65 @@ class DynamicScheduler:
                 break  # free list changed; re-sort and re-match
 
     def _compute_done(self, tenant: str, now: float) -> None:
-        idx, layer, part, t_assign, t_cstart, t_cend = self._inflight[tenant]
+        inf = self._inflight[tenant]
         if self.stage is not None:
-            _, so_end = self.bus.acquire(now, self.stage.stage_out_s(layer))
+            _, so_end = self.bus.acquire(now,
+                                         self.stage.stage_out_s(inf.layer))
         else:
             so_end = now
-        self.pe_seconds_busy += (t_cend - t_cstart) * part.n_pes
+        self.pe_seconds_busy += (inf.c_end - inf.c_start) * inf.part.n_pes
         if self.keep_trace:
             self.trace.append(TraceEvent(
-                tenant=tenant, layer_index=idx,
-                layer_name=layer.name or f"L{idx}",
-                partition=part, start=t_assign, end=so_end,
-                compute_start=t_cstart, compute_end=t_cend))
+                tenant=tenant, layer_index=inf.idx,
+                layer_name=inf.layer.name or f"L{inf.idx}",
+                partition=inf.part, start=inf.t_assign, end=so_end,
+                compute_start=inf.c_start, compute_end=inf.c_end,
+                fraction=inf.share, resumed=inf.resumed))
         heapq.heappush(self._events, (so_end, next(self._seq), "done", tenant))
+
+    def _preempt(self, tenant: str, now: float) -> None:
+        """Evict ``tenant``'s in-flight layer: emit the partial segment,
+        drain partial sums over the bus, free the partition at drain end,
+        and return the remaining compute to the ready set.
+
+        A layer caught during stage-in (compute not yet started) has no
+        partial sums in the array: it pays only the fixed quiesce overhead,
+        and its wasted stage-in bus time is already sunk.
+        """
+        inf = self._inflight.pop(tenant)
+        t = self.tenants[tenant]
+        run_s = max(0.0, now - inf.c_start)
+        frac_seg = inf.share * run_s / (inf.c_end - inf.c_start)
+        t.done_frac[inf.idx] = inf.base_frac + frac_seg
+        t.running = False
+        t.draining = True
+        self.n_preemptions += 1
+        self.pe_seconds_busy += run_s * inf.part.n_pes
+        if run_s > 0.0:
+            drain = self.preemption.drain_s(inf.part)
+        else:
+            # caught mid-stage-in: nothing in the array to drain, and the
+            # unperformed part of the stage-in transfer is reclaimed (only
+            # if it is still the bus's last reservation — committed
+            # transfers behind it keep their windows)
+            self.bus.abort_reservation(now, inf.si_start, inf.c_start)
+            drain = self.preemption.fixed_overhead_s
+        _, dr_end = self.bus.acquire(now, drain)
+        if self.keep_trace:
+            self.trace.append(TraceEvent(
+                tenant=tenant, layer_index=inf.idx,
+                layer_name=inf.layer.name or f"L{inf.idx}",
+                partition=inf.part, start=inf.t_assign, end=dr_end,
+                compute_start=min(inf.c_start, now), compute_end=now,
+                fraction=frac_seg, resumed=inf.resumed,
+                preempted=True))
+        heapq.heappush(self._events, (dr_end, next(self._seq), "pfree",
+                                      tenant))
 
     def _finish(self, tenant: str, now: float) -> None:
         t = self.tenants[tenant]
         t.running = False
+        t.done_frac.pop(t.next_layer, None)
         t.done_layers.add(t.next_layer)
         t.next_layer += 1
         self._inflight.pop(tenant, None)
@@ -352,17 +579,25 @@ class DynamicScheduler:
                 self.completion[tenant] = now
             self.n_completed += 1
             self.last_completion = now
+            self.deadlines.pop(tenant, None)
             # retired tenants never become ready again; drop them so the
             # ready scan stays O(live tenants) over open-loop horizons
             del self.tenants[tenant]
             if self.on_complete is not None:
                 self.on_complete(tenant, now)
 
-    def _dispatch(self, kind: str, name: str, now: float) -> None:
+    def _dispatch(self, kind: str, payload, now: float) -> None:
         if kind == "done":
-            self._finish(name, now)
+            self._finish(payload, now)
         elif kind == "cdone":
-            self._compute_done(name, now)
+            name, token = payload
+            inf = self._inflight.get(name)
+            if inf is not None and inf.token == token:
+                self._compute_done(name, now)
+            # else: stale event — the segment was preempted first
+        elif kind == "pfree":
+            self.pset.free(payload)
+            self.tenants[payload].draining = False
         # "arrive" has no state change — it exists to trigger _assign(now)
 
     def _step(self) -> None:
@@ -400,7 +635,8 @@ class DynamicScheduler:
         return ScheduleResult(trace=tuple(self.trace),
                               completion=dict(self.completion),
                               makespan=makespan, array=self.array,
-                              busy_pe_seconds=self.pe_seconds_busy)
+                              busy_pe_seconds=self.pe_seconds_busy,
+                              preemptions=self.n_preemptions)
 
 
 def schedule_dynamic(
@@ -409,6 +645,7 @@ def schedule_dynamic(
     time_fn: TimeFn,
     stage: StageModel | None = None,
     policy="paper",
+    preemption: PreemptionModel | None = None,
 ) -> ScheduleResult:
     """Run Algorithm 1's runtime dynamics end-to-end and return the trace.
 
@@ -431,7 +668,7 @@ def schedule_dynamic(
     # negative arrival times are legal in batch mode: start the clock there
     start = min(0.0, min(g.arrival_time for g in dnngs))
     sched = DynamicScheduler(array, time_fn, stage=stage, policy=policy,
-                             start_time=start)
+                             start_time=start, preemption=preemption)
     for g in dnngs:
         sched.submit(g)
     sched.run()

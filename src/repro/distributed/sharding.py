@@ -25,7 +25,7 @@ all-reduces (log-sum-exp terms) — far cheaper than replicating a 32k cache.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np

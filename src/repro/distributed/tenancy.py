@@ -31,9 +31,7 @@ heaviest-first sort hands the freed columns to healthy tenants).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Sequence
 
-import jax
 import numpy as np
 from jax.sharding import Mesh
 

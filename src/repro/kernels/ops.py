@@ -33,9 +33,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.partitioned_matmul import (
-    DEFAULT_BLOCK_K,
-    DEFAULT_BLOCK_N,
-    DEFAULT_BLOCK_T,
     VMEM_BUDGET_BYTES,
     BlockAccounting,
     block_vmem_bytes,

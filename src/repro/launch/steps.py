@@ -15,13 +15,12 @@ pattern that lets a CPU host validate a 512-chip lowering.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchSpec, ShapeCell, input_specs, params_spec
+from repro.configs.base import ArchSpec, input_specs, params_spec
 from repro.distributed.sharding import (
     FSDP_TP,
     MeshRules,
@@ -30,7 +29,7 @@ from repro.distributed.sharding import (
     params_shardings,
 )
 from repro.models.model import decode_step, forward, prefill
-from repro.training.optimizer import OptConfig, adamw_update, init_opt_state
+from repro.training.optimizer import adamw_update, init_opt_state
 from repro.training.train_loop import TrainConfig, loss_and_grads
 
 

@@ -16,7 +16,6 @@ from __future__ import annotations
 import argparse
 import time
 
-import jax
 
 from repro.configs import get, list_archs
 from repro.launch.mesh import make_host_mesh

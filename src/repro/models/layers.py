@@ -16,7 +16,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -189,11 +188,11 @@ def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         Sq_b = qf.shape[1]
 
         def _update(carry, kb, vb, s):
-            m, l, acc = carry
+            m, lsum, acc = carry
             m_new = jnp.maximum(m, s.max(axis=-1))
             alpha = jnp.exp(m - m_new)
             p_blk = jnp.exp(s - m_new[..., None])
-            l_new = l * alpha + p_blk.sum(axis=-1)
+            l_new = lsum * alpha + p_blk.sum(axis=-1)
             # PV product in bf16 (f32 accumulate): halves the HBM traffic
             # of the largest residual without touching softmax numerics
             acc_new = (acc * alpha[..., None]
@@ -252,10 +251,10 @@ def _chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
             lo_c = diag_c
         # remat the chunk body: backward recomputes the (B,H,Sq_b,chunk)
         # score block instead of saving one per scan step.
-        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(body), carry,
+        (m, lsum, acc), _ = jax.lax.scan(jax.checkpoint(body), carry,
                                       (kc[lo_c:hi_c], vc[lo_c:hi_c],
                                        pc[lo_c:hi_c]))
-        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        out = acc / jnp.maximum(lsum, 1e-30)[..., None]
         return out.transpose(0, 2, 1, 3).astype(q.dtype)  # (B, Sq_b, H, D)
 
     qf_all = (q * scale).astype(jnp.float32)
@@ -382,7 +381,6 @@ def conv1d_step(p: Params, window: jax.Array, x_t: jax.Array):
 
     Returns (y_t, new_window).
     """
-    width = p["w"].shape[0]
     full = jnp.concatenate([window, x_t[:, None, :]], axis=1)  # (B, width, d)
     y = jnp.einsum("bwd,wd->bd", full.astype(jnp.float32),
                    p["w"].astype(jnp.float32))

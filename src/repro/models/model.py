@@ -30,7 +30,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from functools import partial
 from typing import Any
 
 import jax
@@ -412,10 +411,8 @@ def _decode_attn(p: Params, cfg_a: AttnConfig, x: jax.Array,
     q, k, v = L._project_qkv(p, cfg_a, x, pos)
     if ring:
         slot = (cache_len % S).astype(jnp.int32)
-        kv_pos_new = cache_len.astype(jnp.int32)
     else:
         slot = cache_len.astype(jnp.int32)
-        kv_pos_new = slot
     bidx = jnp.arange(B)
     if update_cache:
         k_cache = k_cache.at[bidx, slot].set(k[:, 0].astype(k_cache.dtype))
@@ -455,7 +452,6 @@ def _decode_attn(p: Params, cfg_a: AttnConfig, x: jax.Array,
 def init_cache(cfg: ModelConfig, batch: int, max_seq: int,
                dtype=jnp.bfloat16) -> Params:
     """Decode cache pytree for a (batch, max_seq) serving session."""
-    kv = lambda S: jnp.zeros((batch, S, cfg.n_kv_heads, cfg.head_dim), dtype)
     if cfg.family in ("dense", "moe"):
         return {
             "k": jnp.zeros((cfg.n_layers, batch, max_seq, cfg.n_kv_heads,
@@ -502,7 +498,6 @@ def decode_step(cfg: ModelConfig, params: Params, cache: Params,
 
     ``cache_len``: (B,) int32 — current sequence length per batch row.
     """
-    B = token.shape[0]
     x = params["embed"][token].astype(jnp.bfloat16)        # (B, 1, d)
 
     if cfg.family in ("dense", "moe"):

@@ -16,7 +16,6 @@ as in the Griffin paper.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

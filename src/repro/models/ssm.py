@@ -18,7 +18,6 @@ size ``head_dim`` (P), shared-across-head B/C of state size N (n_groups=1).
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 import jax

@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-from typing import Any, Callable
 
 from repro.distributed.tenancy import TenantMeshManager
 from repro.serving.kv_cache import DecodeSession, Request

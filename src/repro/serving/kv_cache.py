@@ -20,7 +20,6 @@ import jax.numpy as jnp
 from repro.models.model import (
     ModelConfig,
     decode_step,
-    forward,
     init_cache,
 )
 
@@ -52,7 +51,7 @@ class DecodeSession:
         self.live: dict[int, Request] = {}     # slot -> request
         self._free = list(range(batch_slots))
         self._decode = jax.jit(
-            lambda p, c, t, l: decode_step(cfg, p, c, t, l))
+            lambda p, c, t, n: decode_step(cfg, p, c, t, n))
 
     # -- admission ----------------------------------------------------------
     def can_admit(self) -> bool:

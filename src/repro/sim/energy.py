@@ -101,6 +101,16 @@ def schedule_energy_with_layers(
 
     ``layers_by_key`` maps (tenant, layer_index) -> LayerShape so the access
     counts of each executed layer can be recomputed for its partition.
+
+    Preemption segments stay exact: each :class:`TraceEvent` carries the
+    ``fraction`` of the layer's compute it covers, so per-layer access
+    counts are scaled per segment (segment fractions sum to 1.0 — a
+    preemption-free trace is bit-identical to the pre-segment accounting).
+    The preemption *overheads* are added on top: a ``preempted`` segment
+    that did compute pays the in-array psum drain (one fp32 accumulator
+    per partition PE → two 16-bit DRAM accesses each), and a ``resumed``
+    segment pays the weight re-stage (``K×N`` stationary-operand DRAM
+    re-reads).
     """
     pj = 1e-12
     mac = fwd = sram = dram = 0.0
@@ -108,23 +118,37 @@ def schedule_energy_with_layers(
     for ev in result.trace:
         layer = layers_by_key[(ev.tenant, ev.layer_index)]
         cost = layer_cost(layer, ev.partition)
+        # segment scaling; the identity path keeps integer operands intact
+        # so preemption-free traces stay bit-identical to the pre-segment
+        # accounting
+        frac = ev.fraction
+        scale = (lambda x: x) if frac == 1.0 else (lambda x: x * frac)
         if baseline_pe:
             # Fig. 7(b): no Mul_En — the multiplier of every clocked PE
             # toggles every compute cycle (stale or real operands alike).
-            mac += model.e_mac_pj * cost.cycles * full_pes * pj
+            mac += model.e_mac_pj * scale(cost.cycles) * full_pes * pj
         else:
             # Fig. 7(a): Mul_En=1 only while the partition's own feed data
             # streams through — T multiplier firings per PE per fold;
             # load phases and foreign-tenant pass-through are tri-stated
             # (latch/wire energy only).
-            mac += model.e_mac_pj * cost.feed_pe_cycles * pj
-            fwd += model.e_fwd_pj * cost.load_pe_cycles * pj
-            fwd += (model.e_fwd_pj * cost.cycles * ev.partition.rows
+            mac += model.e_mac_pj * scale(cost.feed_pe_cycles) * pj
+            fwd += model.e_fwd_pj * scale(cost.load_pe_cycles) * pj
+            fwd += (model.e_fwd_pj * scale(cost.cycles) * ev.partition.rows
                     * ev.partition.col_start * pj)
-        sram += model.e_sram_pj * (cost.load_buf_reads
-                                   + cost.drain_buf_writes) * pj
-        sram += model.e_feed_pj * cost.feed_buf_reads * pj
-        dram += model.e_dram_pj * (cost.dram_reads + cost.dram_writes) * pj
+        sram += model.e_sram_pj * scale(cost.load_buf_reads
+                                        + cost.drain_buf_writes) * pj
+        sram += model.e_feed_pj * scale(cost.feed_buf_reads) * pj
+        dram += model.e_dram_pj * scale(cost.dram_reads
+                                        + cost.dram_writes) * pj
+        if ev.preempted and ev.fraction > 0.0:
+            # psum drain: fp32 accumulators of the column group, written
+            # out as 2 × 16-bit DRAM accesses per PE
+            dram += model.e_dram_pj * 2 * ev.partition.n_pes * pj
+        if ev.resumed:
+            # weight re-stage: the stationary K×N operands re-read from
+            # DRAM (their first read was billed to the original segment)
+            dram += model.e_dram_pj * layer.gemm_k * layer.gemm_n * pj
     leak = model.leak_power(cfg.array) * result.makespan
     clk = (model.e_clk_pj * full_pes * result.makespan * cfg.clock_hz) * pj
     return EnergyBreakdown(mac_j=mac, forward_j=fwd, sram_j=sram, dram_j=dram,

@@ -15,6 +15,7 @@ with the partition policy re-running on every arrival and completion.
 ``simulator`` — the discrete-event loop + admission control + ServeResult.
 ``metrics``   — p50/p95/p99, miss rate, goodput, queue depth, utilization.
 ``cluster``   — N-array fleets with jsq / power-of-two-choices dispatch.
+``rebalance`` — cross-node tenant migration under a checkpoint-cost model.
 """
 
 from repro.traffic.arrivals import (
@@ -45,6 +46,14 @@ from repro.traffic.metrics import (
     split_by,
     summarize,
 )
+from repro.traffic.rebalance import (
+    MigrateOnPressure,
+    MigrationModel,
+    Rebalancer,
+    list_rebalancers,
+    register_rebalancer,
+    resolve_rebalancer,
+)
 from repro.traffic.simulator import ServeResult, TrafficSimulator, serve
 
 __all__ = [
@@ -58,6 +67,9 @@ __all__ = [
     "register_dispatcher", "list_dispatchers", "resolve_dispatcher",
     # metrics
     "JobRecord", "TrafficMetrics", "percentile", "summarize", "split_by",
+    # rebalance
+    "Rebalancer", "MigrationModel", "MigrateOnPressure",
+    "register_rebalancer", "list_rebalancers", "resolve_rebalancer",
     # simulator
     "TrafficSimulator", "ServeResult", "serve",
 ]

@@ -16,7 +16,10 @@ traffic simulator drives:
 :class:`ArrayNode` wraps one :class:`repro.core.scheduler.DynamicScheduler`
 with admission control (``max_concurrent`` jobs co-resident on the array)
 and a bounded FIFO wait queue (``queue_cap``); overflow is rejected — shed
-load is an SLA miss, not a silent drop.
+load is an SLA miss, not a silent drop.  Nodes also expose the migration
+surface `repro.traffic.rebalance` drives: queued or pristine tenants can
+be taken off one node (:meth:`ArrayNode.take_for_migration`) and admitted
+on another after a checkpoint-transit delay (:meth:`admit_migrated`).
 """
 
 from __future__ import annotations
@@ -24,11 +27,17 @@ from __future__ import annotations
 import abc
 import dataclasses
 import random
-from typing import Callable, Sequence
+from typing import Callable, Optional, Sequence
 
-from repro.core.partition import ArrayShape
+from repro.core.dnng import DNNG
+from repro.core.partition import ArrayShape, Partition
+from repro.core.scheduler import (
+    DynamicScheduler,
+    PreemptionModel,
+    StageModel,
+    TimeFn,
+)
 from repro.core.registry import Registry
-from repro.core.scheduler import DynamicScheduler, StageModel, TimeFn
 from repro.traffic.arrivals import Job
 
 
@@ -39,8 +48,10 @@ class ArrayNode:
                  stage: StageModel | None, policy,
                  max_concurrent: int, queue_cap: int,
                  on_complete: Callable[["ArrayNode", str, float], None],
-                 on_submit: Callable[[Job, float], None] | None = None,
-                 keep_trace: bool = False):
+                 on_submit: Callable[["ArrayNode", Job, float], None]
+                 | None = None,
+                 keep_trace: bool = False,
+                 preemption: PreemptionModel | None = None):
         if max_concurrent < 1 or queue_cap < 0:
             raise ValueError(f"need max_concurrent >= 1 (got {max_concurrent})"
                              f" and queue_cap >= 0 (got {queue_cap})")
@@ -48,11 +59,18 @@ class ArrayNode:
         self.max_concurrent = max_concurrent
         self.queue_cap = queue_cap
         self.queue: list[Job] = []
+        self.jobs: dict[str, Job] = {}   # every job on this node, by name
+        self._ready_at: dict[str, float] = {}  # migrated-in transit arrivals
         self._notify_done = on_complete
-        self._notify_submit = on_submit or (lambda job, t: None)
+        self._notify_submit = on_submit or (lambda node, job, t: None)
+        self._time_fn = time_fn
+        self._stage = stage
+        self._full = Partition(rows=array.rows, col_start=0, cols=array.cols)
+        self._svc_cache: dict = {}
         self.scheduler = DynamicScheduler(
             array, time_fn, stage=stage, policy=policy,
-            on_complete=self._job_done, keep_trace=keep_trace)
+            on_complete=self._job_done, keep_trace=keep_trace,
+            preemption=preemption)
 
     @property
     def in_system(self) -> int:
@@ -66,22 +84,85 @@ class ArrayNode:
         (parked in the bounded FIFO), or ``"rejected"`` (queue full —
         load shed, counted as a deadline miss)."""
         if self.scheduler.n_active < self.max_concurrent:
-            self.scheduler.submit(job.dnng)
-            self._notify_submit(job, job.arrival)
+            self.scheduler.submit(job.dnng, deadline=job.deadline)
+            self.jobs[job.dnng.name] = job
+            self._notify_submit(self, job, job.arrival)
             return "run"
         if len(self.queue) < self.queue_cap:
             self.queue.append(job)
+            self.jobs[job.dnng.name] = job
             return "queued"
         return "rejected"
 
     def _job_done(self, tenant: str, t: float) -> None:
+        self.jobs.pop(tenant, None)
         self._notify_done(self, tenant, t)
         # completion freed a co-residency slot: promote the head-of-line job
+        # (a migrated-in job still in checkpoint transit is submitted with
+        # its future ready instant — the scheduler holds it until then)
         while self.queue and self.scheduler.n_active < self.max_concurrent:
             job = self.queue.pop(0)
-            g = dataclasses.replace(job.dnng, arrival_time=t)
-            self.scheduler.submit(g)
-            self._notify_submit(job, t)
+            ready = max(t, self._ready_at.pop(job.dnng.name, t))
+            g = dataclasses.replace(job.dnng, arrival_time=ready)
+            self.scheduler.submit(g, deadline=job.deadline)
+            self._notify_submit(self, job, ready)
+
+    # -- migration surface (driven by repro.traffic.rebalance) --------------
+    def service_estimate(self, dnng: DNNG) -> float:
+        """Full-array sequential service time of one job, memoized on the
+        exact layer tuple (frozen dataclasses, hashable) — the rebalancer's
+        deadline-pressure oracle."""
+        key = dnng.layers
+        est = self._svc_cache.get(key)
+        if est is None:
+            est = sum(self._time_fn(layer, self._full)
+                      for layer in dnng.layers)
+            if self._stage is not None:
+                est += sum(self._stage.stage_in_s(layer)
+                           + self._stage.stage_out_s(layer)
+                           for layer in dnng.layers)
+            self._svc_cache[key] = est
+        return est
+
+    def wait_estimate(self) -> float:
+        """Rough time before a queued job gets a run slot: the running
+        jobs' remaining work (half their service, on average) plus the
+        queued backlog, spread over the co-residency slots."""
+        queued = {j.dnng.name for j in self.queue}
+        running = sum(self.service_estimate(j.dnng)
+                      for name, j in self.jobs.items() if name not in queued)
+        backlog = sum(self.service_estimate(j.dnng) for j in self.queue)
+        return (running / 2.0 + backlog) / self.max_concurrent
+
+    def take_for_migration(self, name: str) -> Optional[Job]:
+        """Remove a queued or pristine-submitted job for migration; None
+        when the job is unknown or already has array state."""
+        for i, job in enumerate(self.queue):
+            if job.dnng.name == name:
+                del self.queue[i]
+                self._ready_at.pop(name, None)
+                return self.jobs.pop(name)
+        if name in self.jobs and self.scheduler.withdraw(name):
+            return self.jobs.pop(name)
+        return None
+
+    def admit_migrated(self, job: Job, now: float, ready_at: float) -> str:
+        """Admit a migrated-in job that becomes runnable at ``ready_at``
+        (its checkpoint is in transit until then)."""
+        self.jobs[job.dnng.name] = job
+        if self.scheduler.n_active < self.max_concurrent:
+            arrival = max(now, ready_at, self.scheduler.now)
+            g = dataclasses.replace(job.dnng, arrival_time=arrival)
+            self.scheduler.submit(g, deadline=job.deadline)
+            self._notify_submit(self, job, arrival)
+            return "run"
+        if len(self.queue) < self.queue_cap:
+            self.queue.append(job)
+            self._ready_at[job.dnng.name] = ready_at
+            return "queued"
+        del self.jobs[job.dnng.name]
+        raise ValueError(f"migration target {self.index} cannot accept "
+                         f"{job.dnng.name!r}: queue full")
 
 
 # ---------------------------------------------------------------------------

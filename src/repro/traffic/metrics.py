@@ -20,7 +20,7 @@ completed.  :func:`summarize` folds them into a :class:`TrafficMetrics`
 from __future__ import annotations
 
 import dataclasses
-from typing import Mapping, Optional, Sequence
+from typing import Optional, Sequence
 
 
 @dataclasses.dataclass(frozen=True)
@@ -85,6 +85,11 @@ class TrafficMetrics:
     queue_depth_max: int
     utilization: float
     duration_s: float
+    # runtime-adaptation counters (0 unless preemption / migration enabled);
+    # kept out of as_dict() so pre-existing bench records stay byte-stable —
+    # ServeResult.as_dict() appends them when the features are armed
+    preemptions: int = 0
+    migrations: int = 0
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -117,12 +122,15 @@ class TrafficMetrics:
 
 def summarize(records: Sequence[JobRecord], duration_s: float,
               pe_seconds_busy: float = 0.0, total_pes: int = 0,
-              queue_depth_samples: Sequence[int] = ()) -> TrafficMetrics:
+              queue_depth_samples: Sequence[int] = (),
+              preemptions: int = 0, migrations: int = 0) -> TrafficMetrics:
     """Fold job records into :class:`TrafficMetrics`.
 
     ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
     (busy PE-seconds over ``duration_s × total_pes``); ``queue_depth_samples``
-    are dispatcher-queue depths observed at each arrival instant.
+    are dispatcher-queue depths observed at each arrival instant;
+    ``preemptions``/``migrations`` are the runtime-adaptation counters
+    accumulated by the scheduler and rebalancer.
     """
     lats = [r.latency for r in records if r.latency is not None]
     completed = [r for r in records if r.completed is not None]
@@ -144,6 +152,8 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
         queue_depth_max=max(queue_depth_samples, default=0),
         utilization=pe_seconds_busy / cap if cap > 0 else 0.0,
         duration_s=duration_s,
+        preemptions=preemptions,
+        migrations=migrations,
     )
 
 

@@ -26,7 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import random
-from typing import Optional, Sequence
+from typing import Optional
 
 from repro.core.scheduler import ScheduleResult
 from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
@@ -51,6 +51,8 @@ class ServeResult:
     records: tuple[JobRecord, ...]
     metrics: TrafficMetrics
     schedules: Optional[tuple[ScheduleResult, ...]] = None
+    preemption: Optional[str] = None   # PreemptionModel summary, None = off
+    rebalance: Optional[str] = None    # rebalancer name, None = off
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -61,9 +63,23 @@ class ServeResult:
                 for k, rs in sorted(split_by(self.records, key).items(),
                                     key=lambda kv: str(kv[0]))}
 
+    def per_class_p99_delta(self, baseline: "ServeResult") -> dict:
+        """Per-SLA-class p99 latency deltas vs a baseline run (seconds;
+        negative = this run is faster).  The headline view of what
+        preemption/migration bought each tier on the same arrival stream."""
+        mine = self.per("tier")
+        theirs = baseline.per("tier")
+        return {tier: mine[tier].p99_latency_s - theirs[tier].p99_latency_s
+                for tier in sorted(set(mine) & set(theirs))}
+
     def as_dict(self) -> dict:
-        """Machine-readable summary (the BENCH_traffic.json row format)."""
-        return {
+        """Machine-readable summary (the BENCH_traffic.json row format).
+
+        The ``preemptions``/``migrations`` counters appear only when the
+        corresponding feature was enabled, so records from runs predating
+        the feature regenerate byte-identically.
+        """
+        out = {
             "policy": self.policy,
             "backend": self.backend,
             "arrivals": self.arrivals,
@@ -71,6 +87,13 @@ class ServeResult:
             "n_arrays": self.n_arrays,
             **self.metrics.as_dict(),
         }
+        if self.preemption is not None:
+            out["preemption"] = self.preemption
+            out["preemptions"] = self.metrics.preemptions
+        if self.rebalance is not None:
+            out["rebalance"] = self.rebalance
+            out["migrations"] = self.metrics.migrations
+        return out
 
 
 class _RecordBuilder:
@@ -96,17 +119,59 @@ class TrafficSimulator:
     registry name (needing ``rate``/``horizon``/... forwarded by the
     caller), or any time-ordered iterable of :class:`Job`.  ``policy`` and
     ``backend`` take `repro.api` registry names or instances.
+
+    Runtime adaptation knobs:
+
+    * ``preemption`` — ``True`` (default :class:`~repro.core.scheduler
+      .PreemptionModel`) or a model instance arms layer-granular
+      preemption on every node; only policies with a ``preempt`` hook
+      (``deadline_preempt``) ever act on it.
+    * ``rebalance_interval`` — seconds between cross-node migration
+      ticks; enables the ``rebalancer`` strategy (name or
+      :class:`~repro.traffic.rebalance.Rebalancer`, default
+      ``migrate_on_pressure`` under the optional ``migration`` cost
+      model), which additionally runs a pressure-only pass at every
+      arrival.
     """
 
     def __init__(self, arrivals, policy="equal", backend="sim",
                  n_arrays: int = 1, dispatch: str = "jsq",
                  max_concurrent: int = 4, queue_cap: int = 16,
                  seed: int = 0, keep_trace: bool = False,
+                 preemption=None, rebalance_interval: float | None = None,
+                 rebalancer="migrate_on_pressure", migration=None,
                  **arrival_kwargs):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
+        from repro.core.scheduler import PreemptionModel
+        from repro.traffic.rebalance import resolve_rebalancer
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
+        if rebalance_interval is not None and rebalance_interval <= 0:
+            raise ValueError(f"rebalance_interval must be positive, got "
+                             f"{rebalance_interval}")
+        if preemption is True:
+            preemption = PreemptionModel()
+        elif preemption is False:
+            preemption = None
+        self.preemption = preemption
+        self.rebalance_interval = rebalance_interval
+        if rebalance_interval is not None:
+            if migration is not None and not isinstance(rebalancer, str):
+                raise ValueError(
+                    "migration= only applies when the rebalancer is built "
+                    "from a registry name; configure the instance's "
+                    "migration model directly instead")
+            self.rebalancer = resolve_rebalancer(
+                rebalancer, **({"migration": migration}
+                               if migration is not None else {}))
+        else:
+            if migration is not None or rebalancer != "migrate_on_pressure":
+                raise ValueError(
+                    "rebalancer=/migration= have no effect without "
+                    "rebalance_interval=; set an interval to enable "
+                    "cross-node migration")
+            self.rebalancer = None
         if isinstance(arrivals, str):
             # one seed steers the whole run: the arrival stream inherits it
             # unless the caller seeds the process explicitly
@@ -130,26 +195,40 @@ class TrafficSimulator:
             ArrayNode(i, self.backend.array, time_fn, stage, self.policy,
                       max_concurrent=max_concurrent, queue_cap=queue_cap,
                       on_complete=self._on_complete,
-                      on_submit=self._on_submit, keep_trace=keep_trace)
+                      on_submit=self._on_submit, keep_trace=keep_trace,
+                      preemption=preemption)
             for i in range(n_arrays)]
 
     # -- node callbacks -----------------------------------------------------
     def _on_complete(self, node: ArrayNode, tenant: str, t: float) -> None:
         self._builders[tenant].completed = t
 
-    def _on_submit(self, job: Job, t: float) -> None:
-        self._builders[job.dnng.name].submitted = t
+    def _on_submit(self, node: ArrayNode, job: Job, t: float) -> None:
+        b = self._builders[job.dnng.name]
+        b.submitted = t
+        b.array = node.index  # migration may have re-homed the job
 
     # -- execution ----------------------------------------------------------
+    def _advance(self, t: float) -> None:
+        for node in self.nodes:
+            node.scheduler.run_until(t)
+
     def run(self) -> ServeResult:
         depth_samples: list[int] = []
         last_arrival = 0.0
+        interval = self.rebalance_interval
+        next_tick = interval if interval is not None else None
         for job in self.arrivals:
             last_arrival = job.arrival
+            # periodic rebalance ticks up to the arrival instant
+            while next_tick is not None and next_tick <= job.arrival:
+                self._advance(next_tick)
+                self.rebalancer.rebalance(self.nodes, next_tick,
+                                          periodic=True)
+                next_tick += interval
             # advance every array to the arrival instant first, so slots
             # freed by completions before t are visible to the dispatcher
-            for node in self.nodes:
-                node.scheduler.run_until(job.arrival)
+            self._advance(job.arrival)
             if job.dnng.name in self._builders:
                 raise ValueError(f"duplicate job name {job.dnng.name!r} in "
                                  "arrival stream")
@@ -160,8 +239,19 @@ class TrafficSimulator:
             status = target.offer(job)
             if status != "rejected":
                 b.array = target.index
+            if self.rebalancer is not None:
+                # deadline-pressure check at every arrival (pressure moves
+                # only — full balancing happens on the periodic ticks)
+                self.rebalancer.rebalance(self.nodes, job.arrival,
+                                          periodic=False)
             depth_samples.append(sum(len(n.queue) for n in self.nodes))
-        # arrivals exhausted: drain all in-flight and queued work
+        # arrivals exhausted: keep ticking while queues drain, then flush
+        if next_tick is not None:
+            while any(n.queue for n in self.nodes):
+                self._advance(next_tick)
+                self.rebalancer.rebalance(self.nodes, next_tick,
+                                          periodic=True)
+                next_tick += interval
         for node in self.nodes:
             node.scheduler.run()
         end = max([n.scheduler.now for n in self.nodes]
@@ -173,7 +263,10 @@ class TrafficSimulator:
             pe_seconds_busy=sum(n.scheduler.pe_seconds_busy
                                 for n in self.nodes),
             total_pes=pes * self.n_arrays,
-            queue_depth_samples=depth_samples)
+            queue_depth_samples=depth_samples,
+            preemptions=sum(n.scheduler.n_preemptions for n in self.nodes),
+            migrations=(self.rebalancer.n_migrations
+                        if self.rebalancer is not None else 0))
         return ServeResult(
             policy=getattr(self.policy, "name", type(self.policy).__name__),
             backend=getattr(self.backend, "name",
@@ -184,7 +277,12 @@ class TrafficSimulator:
             n_arrays=self.n_arrays,
             records=records, metrics=metrics,
             schedules=(tuple(n.scheduler.result() for n in self.nodes)
-                       if self.keep_trace else None))
+                       if self.keep_trace else None),
+            preemption=(type(self.preemption).__name__
+                        if self.preemption is not None else None),
+            rebalance=(getattr(self.rebalancer, "name", None)
+                       or type(self.rebalancer).__name__
+                       if self.rebalancer is not None else None))
 
 
 def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:

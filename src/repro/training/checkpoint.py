@@ -18,7 +18,6 @@ different tenant slice (the paper's merge/rebalance!) is the same code path.
 
 from __future__ import annotations
 
-import dataclasses
 import hashlib
 import json
 import os

@@ -21,7 +21,7 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, NamedSharding
+from jax.sharding import Mesh
 
 from repro.distributed.sharding import batch_shardings
 

@@ -19,7 +19,6 @@ Two step builders, one contract — ``step(params, opt_state, batch) ->
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable
 
 import jax
@@ -73,8 +72,8 @@ def loss_and_grads(cfg: ModelConfig, params: Any, batch: Any,
 
     def body(carry, mb):
         loss_acc, g_acc = carry
-        l, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
-        return (loss_acc + l,
+        lv, g = jax.value_and_grad(lambda p: loss_fn(cfg, p, mb))(params)
+        return (loss_acc + lv,
                 jax.tree.map(jnp.add, g_acc, g)), None
 
     zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

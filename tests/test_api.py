@@ -11,7 +11,6 @@ import pytest
 
 from repro.api import (
     EqualPolicy,
-    PartitionPolicy,
     Session,
     TenantDemand,
     get_backend,
@@ -184,7 +183,7 @@ class TestAssignContextCostCache:
         from repro.core.partition import Partition
         calls = []
         ctx = AssignContext(array=ArrayShape(128, 128),
-                            time_fn=lambda l, p: calls.append(1) or 2.0)
+                            time_fn=lambda la, pa: calls.append(1) or 2.0)
         layer = LayerShape.fc("l", 64, 64, batch=8)
         part = Partition(rows=128, col_start=0, cols=32)
         assert ctx.time(layer, part) == 2.0

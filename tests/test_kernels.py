@@ -291,9 +291,10 @@ class TestAutotune:
 
     def test_auto_mode_picks_compact_iff_ragged(self):
         key = jax.random.key(7)
-        mk = lambda t, k, n, s: (
-            jax.random.normal(jax.random.fold_in(key, s), (t, k)),
-            jax.random.normal(jax.random.fold_in(key, s + 100), (k, n)))
+        def mk(t, k, n, s):
+            return (jax.random.normal(jax.random.fold_in(key, s), (t, k)),
+                    jax.random.normal(jax.random.fold_in(key, s + 100),
+                                      (k, n)))
         # tenant 1 is >1 block smaller on T and K: its padding tiles are
         # dead blocks in the shared dense grid
         ragged = [mk(256, 256, 128, 0), mk(40, 60, 128, 1)]

@@ -6,7 +6,6 @@ import pytest
 
 from repro.configs import get, list_archs
 from repro.launch.hlo_analysis import (
-    CollectiveStats,
     _type_bytes,
     collective_stats,
     while_trip_counts,

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCHS, get, list_archs
+from repro.configs import get, list_archs
 from repro.models.model import (
     _encode,
     decode_step,
@@ -159,10 +159,10 @@ def test_local_attention_window_respected():
     params = init_params(cfg, key)
     B, S = 1, 24
     toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
-    base = forward(cfg, params, toks)
+    forward(cfg, params, toks)
     # perturb a token OUTSIDE the window of the last position
     toks2 = toks.at[0, 0].set((toks[0, 0] + 1) % cfg.vocab)
-    out2 = forward(cfg, params, toks2)
+    forward(cfg, params, toks2)
     # the recurrent (RG-LRU) path DOES carry long-range state, so full
     # equality is not expected — but attention contributions beyond the
     # window must be absent in an attention-only config.

@@ -59,8 +59,8 @@ class TestTaskAssignment:
         assert by_tenant["a"].cols == 16
 
     def test_extra_layers_left_unmatched(self):
-        l = LayerShape.fc("l", 8, 8)
-        out = task_assignment([("a", 0, l), ("b", 0, l)],
+        fc = LayerShape.fc("l", 8, 8)
+        out = task_assignment([("a", 0, fc), ("b", 0, fc)],
                               [Partition(4, 0, 4)])
         assert len(out) == 1
 
@@ -68,9 +68,9 @@ class TestTaskAssignment:
 class TestPartitionSet:
     def test_allocate_free_merge(self):
         ps = PartitionSet(ArrayShape(128, 128))
-        a = ps.allocate("a", 32)
-        b = ps.allocate("b", 32)
-        c = ps.allocate("c", 64)
+        ps.allocate("a", 32)
+        ps.allocate("b", 32)
+        ps.allocate("c", 64)
         assert ps.utilization == 1.0
         ps.free("b")
         ps.check()

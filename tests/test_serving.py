@@ -1,7 +1,6 @@
 """Serving-engine tests: continuous batching, Algorithm-1 tenancy, faults."""
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

@@ -13,7 +13,6 @@ from repro.distributed.sharding import (
     batch_shardings,
     cache_shardings,
     logical_axes_of,
-    param_pspec,
     params_shardings,
 )
 from repro.launch.mesh import make_host_mesh

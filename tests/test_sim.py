@@ -2,10 +2,10 @@
 
 import pytest
 
-from repro.sim.energy import EnergyModel, schedule_energy_with_layers
+from repro.sim.energy import EnergyModel
 from repro.sim.runner import run_experiment
 from repro.sim.systolic import SystolicConfig
-from repro.sim.workloads import WORKLOADS, heavy_workload, light_workload
+from repro.sim.workloads import heavy_workload, light_workload
 
 
 class TestWorkloads:
@@ -26,7 +26,7 @@ class TestWorkloads:
 
     def test_known_layer_dims(self):
         alex = next(g for g in heavy_workload() if g.name == "AlexNet")
-        fc6 = next(l for l in alex.layers if l.name == "fc6")
+        fc6 = next(ls for ls in alex.layers if ls.name == "fc6")
         assert fc6.gemm_k == 9216 and fc6.gemm_n == 4096
 
 

@@ -57,8 +57,9 @@ class TestArrivals:
 
     @pytest.mark.parametrize("proc", ["poisson", "mmpp", "diurnal"])
     def test_seed_changes_stream(self, proc):
-        mk = lambda s: [j.arrival for j in get_arrival_process(
-            proc, rate=500.0, horizon=0.05, seed=s, pool="light")]
+        def mk(s):
+            return [j.arrival for j in get_arrival_process(
+                proc, rate=500.0, horizon=0.05, seed=s, pool="light")]
         assert mk(0) != mk(1)
 
     def test_times_ordered_within_horizon(self):
