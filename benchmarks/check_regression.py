@@ -13,7 +13,13 @@ root:
   better);
 * ``BENCH_kernel.json``  — per compact-mode mix: blocks scheduled and
   bytes fetched must not rise, and compact mode must still schedule
-  exactly the live-block count.
+  exactly the live-block count;
+* ``BENCH_scale.json``   — per fleet cell: events processed, oracle
+  calls/event, deadline-miss rate must not rise and jobs completed must
+  not drop.  Wall-clock fields (``wall_s``, ``events_per_s``, the
+  ``traffic_bench`` timing block) are machine-dependent and deliberately
+  NOT gated — they are informational trajectory records (see README
+  "Performance").
 
 Every comparison is printed as a metric-by-metric diff table; when
 ``$GITHUB_STEP_SUMMARY`` is set the table is also appended there as
@@ -149,6 +155,30 @@ def check_kernel(gate: Gate, committed: dict, fresh: dict) -> None:
         )
 
 
+def check_scale(gate: Gate, committed: dict, fresh: dict) -> None:
+    old = {(r["jobs_target"], r["n_arrays"]): r for r in committed["results"]}
+    new = {(r["jobs_target"], r["n_arrays"]): r for r in fresh["results"]}
+    for key in sorted(old):
+        if key not in new:
+            gate.check(f"scale {key}", "row-present", 1.0, 0.0, True)
+            continue
+        cell = f"scale {key[0]}jobs/{key[1]}arrays"
+        for metric in (
+            "events",
+            "oracle_calls_per_event",
+            "deadline_miss_rate",
+        ):
+            gate.check(
+                cell, metric, old[key][metric], new[key][metric],
+                higher_is_better=False,
+            )
+        gate.check(
+            cell, "jobs_completed",
+            old[key]["jobs_completed"], new[key]["jobs_completed"],
+            higher_is_better=True,
+        )
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument("--tolerance", type=float, default=0.02)
@@ -156,7 +186,7 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, os.path.join(ROOT, "src"))
     sys.path.insert(0, ROOT)
-    from benchmarks import kernel_bench, traffic_bench
+    from benchmarks import kernel_bench, scale_bench, traffic_bench
     from benchmarks.run import emit_bench_json
 
     gate = Gate(args.tolerance)
@@ -165,6 +195,11 @@ def main(argv=None) -> int:
         fresh_fig9 = emit_bench_json(os.path.join(tmp, "fig9.json"))
         print("# regenerating BENCH_traffic.json ...")
         fresh_traffic = traffic_bench.run(path=os.path.join(tmp, "traffic.json"))
+        print("# regenerating BENCH_scale.json ...")
+        fresh_scale = scale_bench.run(
+            path=os.path.join(tmp, "scale.json"), check_budget=False,
+            time_traffic=False,  # wall fields are not gated; skip re-timing
+        )
         print("# regenerating BENCH_kernel.json ...")
         fresh_kernel = kernel_bench.run(path=os.path.join(tmp, "kernel.json"))
 
@@ -172,6 +207,7 @@ def main(argv=None) -> int:
     check_traffic(
         gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic
     )
+    check_scale(gate, _load(os.path.join(ROOT, "BENCH_scale.json")), fresh_scale)
     check_kernel(gate, _load(os.path.join(ROOT, "BENCH_kernel.json")), fresh_kernel)
 
     print()

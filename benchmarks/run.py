@@ -1,6 +1,7 @@
 """Run the full benchmark suite (one entry per paper table/figure).
 
     PYTHONPATH=src python -m benchmarks.run
+    PYTHONPATH=src python -m benchmarks.run --profile   # hot-spot survey
 
 Order: the policy × workload matrix (written to ``BENCH_fig9.json`` at the
 repo root so the perf trajectory is machine-trackable across PRs), the
@@ -14,6 +15,7 @@ with a notice when absent, since the dry-run takes ~30 min of compiles).
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -62,7 +64,42 @@ def emit_bench_json(path: str = BENCH_JSON) -> dict:
     return blob
 
 
+def profile_traffic(top: int = 20, sort: str = "cumulative") -> "object":
+    """cProfile the open-loop traffic bench and print the ``top`` hot spots.
+
+    Perf PRs should start from this table, not from guesses — PR 5's
+    event-engine overhaul came out of exactly this view (the ready-set
+    rescan and per-event policy rounds dominated).  Writes the bench JSON
+    to a scratch file so the committed BENCH_traffic.json is untouched.
+    Returns the ``pstats.Stats`` for programmatic use (tests).
+    """
+    import cProfile
+    import pstats
+    import tempfile
+
+    from benchmarks import traffic_bench
+
+    prof = cProfile.Profile()
+    with tempfile.TemporaryDirectory() as tmp:
+        prof.enable()
+        traffic_bench.run(path=os.path.join(tmp, "traffic.json"))
+        prof.disable()
+    stats = pstats.Stats(prof).sort_stats(sort)
+    print(f"\n# top {top} {sort} hot spots of benchmarks/traffic_bench.py")
+    stats.print_stats(top)
+    return stats
+
+
 def main() -> int:
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument(
+        "--profile", action="store_true",
+        help="cProfile the traffic bench and print the top-20 cumulative "
+             "hot spots instead of running the full suite")
+    args = parser.parse_args()
+    if args.profile:
+        profile_traffic()
+        return 0
     t0 = time.time()
     from benchmarks import (
         fig9_energy,

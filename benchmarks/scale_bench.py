@@ -1,0 +1,168 @@
+"""Fleet-scale serving benchmark — BENCH_scale.json.
+
+    PYTHONPATH=src python benchmarks/scale_bench.py
+
+The wall-clock trajectory of the *serving engine itself*: where
+BENCH_traffic.json tracks SLA quality (p99, miss rate) of the policies,
+this bench tracks how fast the host-side stack can simulate fleet-scale
+open-loop load — the capability the ROADMAP's "millions of users" north
+star depends on.  Three cells drive 1k/5k/10k jobs over 16/32/64 arrays
+behind a jsq dispatcher and record:
+
+* ``events``            — scheduler events processed (deterministic, gated);
+* ``oracle_calls``      — cost-oracle invocations: scalar ``layer_cost``
+  calls + vectorized batch pairs (deterministic, gated);
+* ``oracle_calls_per_event`` — the rebalance-efficiency headline the
+  PR-5 engine overhaul targets (deterministic, gated);
+* ``jobs_completed`` / ``deadline_miss_rate`` — sanity that speed did not
+  change scheduling decisions (deterministic, gated);
+* ``wall_s`` / ``events_per_s`` — wall clock (informational: machine
+  dependent, NOT gated — see README "Performance").
+
+A fourth block re-times ``benchmarks/traffic_bench.py`` end-to-end in
+this process and records the speedup against the committed pre-PR-5
+baseline wall time (informational).
+
+The 10k-job cell must finish under ``TIME_BUDGET_S`` — the separate CI
+job fails otherwise, so engine regressions show up as time, not just as
+metric drift.
+
+Deterministic fields are byte-stable across runs/platforms; wall-clock
+fields are re-measured every run and excluded from the regression gate
+(`benchmarks/check_regression.py` gates the rest).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_scale.json")
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (traffic_bench reuse) importable
+
+# (target jobs, arrays): offered load is per-array-normalised, so bigger
+# fleets see proportionally more arrivals over a shorter horizon
+CELLS = ((1000, 16), (5000, 32), (10000, 64))
+LOAD = 0.85          # aggregate ρ per array (sub-saturation steady state)
+POOL = "light"
+SEED = 0
+TIME_BUDGET_S = 120.0          # CI gate for the 10k-job cell
+# committed pre-PR-5 traffic_bench end-to-end (cold, this repo's reference
+# machine) — the denominator of the recorded speedup; informational
+TRAFFIC_BASELINE_WALL_S = 2.03
+
+
+def _oracle_calls() -> int:
+    """Total cost-oracle work so far: scalar layer_cost invocations (LRU
+    hits included — each is one oracle query) + vectorized batch pairs."""
+    from repro.core.dataflow import ws_cost_batch_stats
+    from repro.sim.systolic import layer_cost
+    info = layer_cost.cache_info()
+    return info.hits + info.misses + ws_cost_batch_stats()["pairs"]
+
+
+def run_cell(jobs: int, n_arrays: int, svc: float, slo: float) -> dict:
+    from repro.traffic import TrafficSimulator, get_arrival_process
+
+    rate = n_arrays * LOAD / svc
+    horizon = jobs / rate
+    arr = get_arrival_process("poisson", rate=rate, horizon=horizon,
+                              seed=SEED, pool=POOL, slo_s=slo)
+    sim = TrafficSimulator(arr, policy="equal", backend="sim",
+                           n_arrays=n_arrays, dispatch="jsq",
+                           max_concurrent=4, queue_cap=8, seed=SEED)
+    calls0 = _oracle_calls()
+    t0 = time.perf_counter()
+    res = sim.run()
+    wall = time.perf_counter() - t0
+    events = sum(n.scheduler.n_events for n in sim.nodes)
+    calls = _oracle_calls() - calls0
+    m = res.metrics
+    return {
+        "jobs_target": jobs,
+        "n_arrays": n_arrays,
+        "load": LOAD,
+        "rate_jobs_per_s": rate,
+        "jobs_arrived": m.jobs_arrived,
+        "jobs_completed": m.jobs_completed,
+        "deadline_miss_rate": m.deadline_miss_rate,
+        "rejection_rate": m.rejection_rate,
+        "events": events,
+        "oracle_calls": calls,
+        "oracle_calls_per_event": calls / events if events else 0.0,
+        # -- informational (machine-dependent, not gated) --
+        "wall_s": wall,
+        "events_per_s": events / wall if wall > 0 else 0.0,
+    }
+
+
+def time_traffic_bench(repeats: int = 5) -> dict:
+    """Re-time the serving-quality bench end-to-end (scratch output).
+
+    Best-of-``repeats``: the minimum is the standard noise-robust
+    estimator of a deterministic workload's true cost."""
+    import tempfile
+
+    from benchmarks import traffic_bench
+    walls = []
+    with tempfile.TemporaryDirectory() as tmp:
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            traffic_bench.run(path=os.path.join(tmp, "traffic.json"))
+            walls.append(time.perf_counter() - t0)
+    wall = min(walls)
+    return {
+        "wall_s": wall,
+        "baseline_wall_s": TRAFFIC_BASELINE_WALL_S,
+        "speedup_vs_baseline": TRAFFIC_BASELINE_WALL_S / wall,
+    }
+
+
+def run(path: str = BENCH_JSON, cells=CELLS,
+        check_budget: bool = True, time_traffic: bool = True) -> dict:
+    rows = []
+    print(f"{'jobs':>7}{'arrays':>8}{'events':>9}{'oracle':>9}"
+          f"{'orc/evt':>9}{'miss%':>7}{'wall_s':>8}{'evt/s':>10}")
+    from benchmarks.traffic_bench import mean_service_s
+    svc = mean_service_s(POOL)
+    slo = 4.0 * svc
+    for jobs, n_arrays in cells:
+        r = run_cell(jobs, n_arrays, svc, slo)
+        rows.append(r)
+        print(f"{r['jobs_arrived']:>7}{r['n_arrays']:>8}{r['events']:>9}"
+              f"{r['oracle_calls']:>9}{r['oracle_calls_per_event']:>9.3f}"
+              f"{r['deadline_miss_rate'] * 100:>7.1f}{r['wall_s']:>8.2f}"
+              f"{r['events_per_s']:>10.0f}")
+    blob = {"benchmark": "scale", "backend": "sim", "pool": POOL,
+            "seed": SEED, "load": LOAD,
+            "time_budget_s": TIME_BUDGET_S,
+            "results": rows}
+    if time_traffic:
+        traffic = time_traffic_bench()
+        print(f"traffic_bench end-to-end {traffic['wall_s']:.2f}s "
+              f"({traffic['speedup_vs_baseline']:.1f}x vs committed "
+              f"{traffic['baseline_wall_s']:.2f}s pre-PR-5 baseline)")
+        blob["traffic_bench"] = traffic
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    if check_budget:
+        worst = max(r["wall_s"] for r in rows)
+        if worst > TIME_BUDGET_S:
+            print(f"FAIL: slowest scale cell took {worst:.1f}s > "
+                  f"{TIME_BUDGET_S:.0f}s budget", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: slowest cell {worst:.1f}s within "
+              f"{TIME_BUDGET_S:.0f}s budget")
+    return blob
+
+
+if __name__ == "__main__":
+    run()
+    sys.exit(0)

@@ -61,6 +61,33 @@ from repro.core.registry import Registry
 ReadyLayer = tuple[str, int, LayerShape]  # (tenant, layer_index, layer)
 
 
+def _time_batch(time_fn, cost_cache, pairs):
+    """Shared body of ``AssignContext.time_batch``/``PreemptContext
+    .time_batch``: price many (layer, partition) pairs at once, preferring
+    the oracle's vectorized ``time_fn.batch`` (see
+    :func:`repro.sim.systolic.layer_time_fn`) and filling the rebalance
+    round's shared ``cost_cache`` so later scalar :meth:`time` probes of
+    the same pairings are dict hits.  Falls back to the scalar oracle
+    pair-by-pair when the backend has no batch surface — values are
+    identical either way (the batch oracle is bit-exact by contract)."""
+    if time_fn is None:
+        raise ValueError("context has no time_fn oracle")
+    batch = getattr(time_fn, "batch", None)
+    if cost_cache is None:
+        if batch is not None:
+            return list(batch(pairs))
+        return [time_fn(layer, part) for layer, part in pairs]
+    missing = [pair for pair in dict.fromkeys(pairs) if pair not in cost_cache]
+    if missing:
+        if batch is not None:
+            vals = batch(missing)
+        else:
+            vals = [time_fn(layer, part) for layer, part in missing]
+        for pair, v in zip(missing, vals):
+            cost_cache[pair] = v
+    return [cost_cache[pair] for pair in pairs]
+
+
 @dataclasses.dataclass(frozen=True)
 class TenantDemand:
     """Policy-facing view of one tenant competing for columns.
@@ -134,6 +161,12 @@ class PreemptContext:
             self.cost_cache[key] = cost = self.time_fn(layer, part)
             return cost
 
+    def time_batch(self, pairs: Sequence[tuple[LayerShape, Partition]]
+                   ) -> list[float]:
+        """Batched :meth:`time`: one vectorized oracle pass for all
+        ``pairs``, memoized in the shared rebalance-round cost cache."""
+        return _time_batch(self.time_fn, self.cost_cache, pairs)
+
     def preempt_cost_s(self, victim: InFlightLayer) -> float:
         """Drain + weight re-stage time for evicting ``victim`` now."""
         return self.drain_s(victim.partition) + self.stage_in_s(victim.layer)
@@ -179,6 +212,15 @@ class AssignContext:
         except KeyError:
             self.cost_cache[key] = cost = self.time_fn(layer, part)
             return cost
+
+    def time_batch(self, pairs: Sequence[tuple[LayerShape, Partition]]
+                   ) -> list[float]:
+        """Batched :meth:`time`: price every pair in one vectorized oracle
+        pass (``time_fn.batch`` when the backend provides it), filling the
+        shared round cache.  Policies with several probes per candidate
+        (``width_aware``, ``deadline_preempt``) consume the batched table
+        instead of per-candidate :meth:`time` calls."""
+        return _time_batch(self.time_fn, self.cost_cache, pairs)
 
 
 class PartitionPolicy(abc.ABC):
@@ -534,8 +576,10 @@ class WidthAwarePolicy(EqualPolicy):
     def assign(self, ready: Sequence[ReadyLayer],
                partitions: Sequence[Partition],
                ctx: AssignContext | None = None) -> list[Assignment]:
+        matched = task_assignment(ready, partitions)
+        self._prime_decline_probes(matched, ctx)
         out: list[Assignment] = []
-        for a in task_assignment(ready, partitions):
+        for a in matched:
             if self._declines(a.layer, a.partition.cols, ctx):
                 continue
             w = min(a.partition.cols, self._demand_cols(a.layer, ctx))
@@ -544,6 +588,25 @@ class WidthAwarePolicy(EqualPolicy):
                                        col_start=a.partition.col_start,
                                        cols=w)))
         return out
+
+    def _prime_decline_probes(self, matched: Sequence[Assignment],
+                              ctx: AssignContext | None) -> None:
+        """Batch-price the round's hold-for-width probes: every sliver
+        candidate needs (sliver, demand-width) runtimes — one vectorized
+        oracle pass instead of two scalar ``ctx.time`` calls each."""
+        if ctx is None or ctx.time_fn is None or not ctx.busy:
+            return
+        rows = ctx.array.rows
+        pairs = []
+        for a in matched:
+            demand = self._demand_cols(a.layer, ctx)
+            if a.partition.cols * 2 < demand:
+                pairs.append((a.layer, Partition(rows=rows, col_start=0,
+                                                 cols=a.partition.cols)))
+                pairs.append((a.layer, Partition(rows=rows, col_start=0,
+                                                 cols=demand)))
+        if pairs:
+            ctx.time_batch(pairs)
 
     def _declines(self, layer: LayerShape, slice_cols: int,
                   ctx: AssignContext | None) -> bool:
@@ -594,13 +657,16 @@ class DeadlinePreemptPolicy(EqualPolicy):
         fair = Partition(
             rows=ctx.array.rows, col_start=0,
             cols=max(1, ctx.array.cols // (len(ctx.inflight) + 1)))
+        # batch-price the fair-share runtime of every deadline holder in one
+        # oracle pass (the batched table replaces per-candidate ctx.time)
+        holders = [(tenant, layer) for tenant, _idx, layer in ctx.ready
+                   if tenant in ctx.deadlines]
+        if not holders:
+            return ()
+        ests = ctx.time_batch([(layer, fair) for _, layer in holders])
         pressured = []
-        for tenant, _idx, layer in ctx.ready:
-            dl = ctx.deadlines.get(tenant)
-            if dl is None:
-                continue
-            slack = dl - ctx.now
-            est = ctx.time(layer, fair)
+        for (tenant, _layer), est in zip(holders, ests):
+            slack = ctx.deadlines[tenant] - ctx.now
             if slack <= est:
                 continue  # hopeless even with an instant grant
             if slack < self.slack_factor * (wait_s + est):

@@ -204,6 +204,7 @@ class Session:
               keep_trace: bool = False, preemption=None,
               rebalance_interval: "float | None" = None,
               rebalancer="migrate_on_pressure", migration=None,
+              check_invariants: bool = False,
               **arrival_kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
@@ -228,6 +229,11 @@ class Session:
         moving queued/pristine tenants under the ``migration``
         (:class:`~repro.traffic.rebalance.MigrationModel`) checkpoint
         cost.
+
+        ``check_invariants`` re-arms the per-event partition tiling check
+        on every node's scheduler — a debug net the serving hot path
+        leaves off by default (the PR-5 incremental engine made every
+        event O(live state delta); the check is O(tenants log tenants)).
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
@@ -237,7 +243,8 @@ class Session:
             max_concurrent=max_concurrent, queue_cap=queue_cap, seed=seed,
             keep_trace=keep_trace, preemption=preemption,
             rebalance_interval=rebalance_interval, rebalancer=rebalancer,
-            migration=migration, **arrival_kwargs).run()
+            migration=migration, check_invariants=check_invariants,
+            **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

@@ -30,9 +30,13 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+from typing import TYPE_CHECKING, Sequence
 
 from repro.core.dnng import LayerShape
 from repro.core.partition import Partition
+
+if TYPE_CHECKING:  # numpy is imported lazily: only the batch oracle needs
+    import numpy as np  # it, and `import repro.core` must stay lightweight
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -135,6 +139,119 @@ def ws_cost_cache_stats() -> dict:
 
 def ws_cost_cache_clear() -> None:
     ws_cost.cache_clear()
+
+
+# ---------------------------------------------------------------------------
+# Batch cost oracle — one NumPy pass over pre-packed shape arrays.
+#
+# A rebalance round prices many (layer, width) candidates at once (policy
+# probes, preempt-hook pressure checks); the scalar :func:`ws_cost` walks
+# them one Python call at a time.  :func:`ws_cost_batch` evaluates n pairs
+# elementwise over int64 arrays with the *same* integer arithmetic, so every
+# field is bit-identical to the scalar path (property-tested in
+# tests/test_batch_oracle.py).  All counts stay well inside int64: the
+# largest product formed is ``cycles × n_pes`` ≲ 1e17 for the paper's
+# Table-1 shapes on a 128×128 array.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchCost:
+    """Structure-of-arrays :class:`DataflowCost` for n (GEMM, partition)
+    pairs — the batch cost oracle's result table (all fields int64)."""
+
+    cycles: "np.ndarray"
+    folds_k: "np.ndarray"
+    folds_n: "np.ndarray"
+    macs: "np.ndarray"
+    load_buf_reads: "np.ndarray"
+    feed_buf_reads: "np.ndarray"
+    drain_buf_writes: "np.ndarray"
+    dram_reads: "np.ndarray"
+    dram_writes: "np.ndarray"
+    pe_cycles: "np.ndarray"
+    active_pe_cycles: "np.ndarray"
+    feed_pe_cycles: "np.ndarray"
+    load_pe_cycles: "np.ndarray"
+
+    def __len__(self) -> int:
+        return len(self.cycles)
+
+    def row(self, i: int) -> DataflowCost:
+        """The i-th pair as a scalar :class:`DataflowCost` (Python ints)."""
+        return DataflowCost(
+            *(int(getattr(self, f.name)[i])
+              for f in dataclasses.fields(DataflowCost)))
+
+
+def pack_gemms(gemms: Sequence[GEMM]) -> "np.ndarray":
+    """(n, 3) int64 array of (T, K, N) — the pre-packed shape side."""
+    import numpy as np
+    return np.array([(g.T, g.K, g.N) for g in gemms],
+                    dtype=np.int64).reshape(-1, 3)
+
+
+def pack_partitions(parts: Sequence[Partition]) -> "np.ndarray":
+    """(n, 3) int64 array of (rows, col_start, cols)."""
+    import numpy as np
+    return np.array([(p.rows, p.col_start, p.cols) for p in parts],
+                    dtype=np.int64).reshape(-1, 3)
+
+
+_BATCH_STATS = {"calls": 0, "pairs": 0}
+
+
+def ws_cost_batch(gemms: "Sequence[GEMM] | np.ndarray",
+                  parts: "Sequence[Partition] | np.ndarray") -> BatchCost:
+    """Vectorized :func:`ws_cost` over paired candidates.
+
+    ``gemms[i]`` is priced on ``parts[i]`` (build the cross product on the
+    caller's side when needed).  Accepts pre-packed ``(n, 3)`` int64 arrays
+    (:func:`pack_gemms` / :func:`pack_partitions`) or the dataclass
+    sequences directly.  Every output field equals the scalar
+    :func:`ws_cost` exactly — same integer arithmetic, elementwise.
+    """
+    import numpy as np
+    gm = gemms if isinstance(gemms, np.ndarray) else pack_gemms(gemms)
+    pm = parts if isinstance(parts, np.ndarray) else pack_partitions(parts)
+    if gm.shape != pm.shape:
+        raise ValueError(f"paired batch needs matching shapes, got "
+                         f"{gm.shape} vs {pm.shape}")
+    _BATCH_STATS["calls"] += 1
+    _BATCH_STATS["pairs"] += len(gm)
+    T, K, N = gm[:, 0], gm[:, 1], gm[:, 2]
+    R, c0, C = pm[:, 0], pm[:, 1], pm[:, 2]
+    fk = (K + R - 1) // R
+    fn = (N + C - 1) // C
+    folds = fk * fn
+    per_fold = 2 * R + C + T - 2 + c0
+    cycles = folds * per_fold
+    n_pes = R * C
+    macs = T * K * N
+    return BatchCost(
+        cycles=cycles,
+        folds_k=fk,
+        folds_n=fn,
+        macs=macs,
+        load_buf_reads=K * N,
+        feed_buf_reads=T * K * fn,
+        drain_buf_writes=T * N * fk,
+        dram_reads=K * N + T * K,
+        dram_writes=T * N,
+        pe_cycles=cycles * n_pes,
+        active_pe_cycles=macs,
+        feed_pe_cycles=folds * T * n_pes,
+        load_pe_cycles=folds * R * n_pes,
+    )
+
+
+def ws_cost_batch_stats() -> dict:
+    """Batch-oracle counters: calls made / pairs evaluated."""
+    return dict(_BATCH_STATS)
+
+
+def ws_cost_batch_stats_clear() -> None:
+    _BATCH_STATS["calls"] = 0
+    _BATCH_STATS["pairs"] = 0
 
 
 def utilization(gemm: GEMM, part: Partition) -> float:

@@ -23,7 +23,30 @@ batch/time steps folded into N.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Iterator, Sequence
+
+
+@functools.lru_cache(maxsize=4096)
+def _chain_edges(n_layers: int) -> tuple[tuple[int, int], ...]:
+    """Edge list of the default linear chain (shared across the thousands
+    of per-job DNNG clones the open-loop traffic generator stamps out)."""
+    return tuple((i, i + 1) for i in range(n_layers - 1))
+
+
+@functools.lru_cache(maxsize=4096)
+def _pred_table(edges: tuple[tuple[int, int], ...],
+                n_layers: int) -> tuple[tuple[int, ...], ...]:
+    """Predecessor indices per layer, precomputed once per graph shape.
+
+    The dynamic scheduler asks for predecessors on every ready-set update;
+    rebuilding the edge scan per query was the single hottest line of the
+    serving hot path before this cache (see benchmarks/scale_bench.py).
+    """
+    preds: list[list[int]] = [[] for _ in range(n_layers)]
+    for s, d in edges:
+        preds[d].append(s)
+    return tuple(tuple(p) for p in preds)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,6 +70,19 @@ class LayerShape:
             if not isinstance(v, int) or v < 1:
                 raise ValueError(f"LayerShape.{f} must be a positive int, got {v!r}")
 
+    def __hash__(self) -> int:
+        # memoized: LayerShape keys every hot cost-oracle memo (ws_cost /
+        # layer_cost LRUs, stage-cost dicts), and the generated dataclass
+        # hash re-tuples all 10 fields per lookup.  Frozen blocks setattr
+        # but not __dict__ writes; equal instances hash equal because the
+        # memo is derived from the same field tuple eq compares.
+        h = self.__dict__.get("_hash")
+        if h is None:
+            self.__dict__["_hash"] = h = hash(
+                (self.M, self.N, self.C, self.R, self.S,
+                 self.H, self.W, self.P, self.Q, self.name))
+        return h
+
     # -- paper Eq. 2 ------------------------------------------------------
     @property
     def opr(self) -> int:
@@ -54,9 +90,14 @@ class LayerShape:
 
         Note: the paper uses H·W (input spatial) rather than P·Q; we keep the
         paper's formula for priority ordering and expose :meth:`macs` as the
-        exact count used by the cycle/energy models.
+        exact count used by the cycle/energy models.  Memoized like
+        ``__hash__``: it is the sort key of every Task_Assignment round.
         """
-        return self.M * self.N * self.C * self.R * self.S * self.H * self.W
+        v = self.__dict__.get("_opr")
+        if v is None:
+            self.__dict__["_opr"] = v = (self.M * self.N * self.C * self.R
+                                         * self.S * self.H * self.W)
+        return v
 
     @property
     def macs(self) -> int:
@@ -150,10 +191,16 @@ class DNNG:
     def edge_list(self) -> tuple[tuple[int, int], ...]:
         if self.edges is not None:
             return self.edges
-        return tuple((i, i + 1) for i in range(len(self.layers) - 1))
+        return _chain_edges(len(self.layers))
+
+    @property
+    def pred_table(self) -> tuple[tuple[int, ...], ...]:
+        """Predecessors per layer index, cached per graph shape — the
+        scheduler's O(1) DAG-readiness lookup."""
+        return _pred_table(self.edge_list, len(self.layers))
 
     def predecessors(self, idx: int) -> list[int]:
-        return [s for s, d in self.edge_list if d == idx]
+        return list(self.pred_table[idx])
 
     def successors(self, idx: int) -> list[int]:
         return [d for s, d in self.edge_list if s == idx]
@@ -162,6 +209,24 @@ class DNNG:
         """Layers with no predecessors (ready at arrival)."""
         dsts = {d for _, d in self.edge_list}
         return [i for i in range(len(self.layers)) if i not in dsts]
+
+    def clone(self, name: str | None = None,
+              arrival_time: float | None = None) -> "DNNG":
+        """Re-stamp a validated template with a new name / arrival.
+
+        The open-loop traffic generator clones one Table-1 template per
+        arriving job; this skips ``dataclasses.replace``'s re-validation
+        (the layer tuple and edges are shared, already-validated objects)
+        — measurably cheaper at thousands of jobs per run.
+        """
+        g = object.__new__(DNNG)
+        d = g.__dict__
+        d["name"] = self.name if name is None else name
+        d["layers"] = self.layers
+        d["arrival_time"] = (self.arrival_time if arrival_time is None
+                             else arrival_time)
+        d["edges"] = self.edges
+        return g
 
     @property
     def total_macs(self) -> int:

@@ -117,6 +117,12 @@ def task_assignment(
     more layers than partitions) or extra partitions are left unmatched —
     the scheduler re-runs on the next event.
     """
+    if len(ready) == 1 and len(partitions) == 1:
+        # the steady-state common case under open-loop load: one waiting
+        # layer, one merged free slice — no sorts needed
+        tenant, idx, layer = ready[0]
+        return [Assignment(tenant=tenant, layer_index=idx, layer=layer,
+                           partition=partitions[0])]
     layers = sorted(ready, key=lambda t: t[2].opr, reverse=True)
     parts = sorted(partitions, key=lambda p: p.n_pes, reverse=True)
     out: list[Assignment] = []
@@ -145,11 +151,20 @@ class PartitionSet:
     # -- queries -----------------------------------------------------------
     @property
     def free_partitions(self) -> list[Partition]:
+        if len(self._free) <= 1:
+            return list(self._free)
         return sorted(self._free, key=lambda p: p.col_start)
 
     @property
     def busy_partitions(self) -> dict[str, Partition]:
         return dict(self._busy)
+
+    def busy_view(self) -> dict[str, Partition]:
+        """The live tenant→partition mapping, WITHOUT the defensive copy of
+        :attr:`busy_partitions`.  Read-only by contract — the scheduler
+        hands it to policy contexts once per rebalance round so every
+        policy call sees current occupancy with zero per-round copies."""
+        return self._busy
 
     def largest_free(self) -> Optional[Partition]:
         return max(self._free, key=lambda p: p.n_pes, default=None)
@@ -209,6 +224,8 @@ class PartitionSet:
         return part
 
     def _merge_free(self) -> None:
+        if len(self._free) <= 1:
+            return
         self._free.sort(key=lambda p: p.col_start)
         merged: list[Partition] = []
         for p in self._free:

@@ -195,30 +195,34 @@ class _Bus:
 
 
 class _Tenant:
-    __slots__ = ("dnng", "next_layer", "running", "done_layers", "draining",
-                 "done_frac")
+    __slots__ = ("dnng", "next_layer", "running", "draining",
+                 "done_frac", "seq", "n_layers")
 
-    def __init__(self, dnng: DNNG):
+    def __init__(self, dnng: DNNG, seq: int = 0):
         self.dnng = dnng
+        self.seq = seq              # submit order (ready-list sort key)
         self.next_layer = 0
+        self.n_layers = len(dnng.layers)
         self.running = False
         self.draining = False       # preempted: partition frees at drain end
         self.done_frac: dict[int, float] = {}  # layer idx -> compute done
-        self.done_layers: set[int] = set()
 
     @property
     def finished(self) -> bool:
-        return self.next_layer >= len(self.dnng.layers)
+        return self.next_layer >= self.n_layers
 
     def ready_layer(self) -> tuple[int, LayerShape] | None:
-        """Next layer whose DAG predecessors are all complete."""
-        if self.finished or self.running or self.draining:
+        """Next schedulable layer.
+
+        Layers execute strictly in index order and ``DNNG.__post_init__``
+        enforces topological edges (``s < d``), so the predecessors of
+        ``next_layer`` are complete by construction — the per-event DAG
+        membership scan the pre-PR-5 engine did here was provably
+        constant-true and is gone from the hot path.
+        """
+        if self.running or self.draining or self.next_layer >= self.n_layers:
             return None
-        idx = self.next_layer
-        preds = self.dnng.predecessors(idx)
-        if all(p in self.done_layers for p in preds):
-            return idx, self.dnng.layers[idx]
-        return None
+        return self.next_layer, self.dnng.layers[self.next_layer]
 
 
 @dataclasses.dataclass
@@ -272,15 +276,28 @@ class DynamicScheduler:
       resume.  ``None`` (default) or a policy without the hook keeps the
       event stream — and therefore the trace — byte-identical to the
       preemption-free scheduler.
+    * ``check_invariants`` — run the :class:`PartitionSet` tiling check
+      after every event (O(tenants log tenants) — a debug net, off by
+      default on the serving hot path; :func:`schedule_dynamic` keeps it
+      on for closed workloads).
+
+    The event engine is *incremental*: the ready set, per-tenant demand
+    vectors, and DAG-predecessor tables are maintained by delta at the
+    state transitions that can change them, and a policy round is skipped
+    outright when the events at an instant left (ready, free) state
+    untouched — ``n_events`` counts processed events for the
+    events-per-second benchmarks.
     """
 
     def __init__(self, array: ArrayShape, time_fn: TimeFn,
                  stage: StageModel | None = None, policy="paper",
                  on_complete: Callable[[str, float], None] | None = None,
                  keep_trace: bool = True, start_time: float = 0.0,
-                 preemption: "PreemptionModel | None" = None):
+                 preemption: "PreemptionModel | None" = None,
+                 check_invariants: bool = False):
         # lazy import: repro.api builds on this module (no import cycle)
-        from repro.api.policy import resolve_policy
+        from repro.api.policy import AssignContext, PartitionPolicy, \
+            TenantDemand, resolve_policy
         self.array = array
         self.time_fn = time_fn
         self.stage = stage
@@ -288,6 +305,7 @@ class DynamicScheduler:
         self.on_complete = on_complete
         self.keep_trace = keep_trace
         self.preemption = preemption
+        self.check_invariants = check_invariants
         self.tenants: dict[str, _Tenant] = {}
         self.deadlines: dict[str, float] = {}
         self.pset = PartitionSet(array)
@@ -298,8 +316,38 @@ class DynamicScheduler:
         self.pe_seconds_busy = 0.0
         self.n_completed = 0
         self.n_preemptions = 0
+        self.n_events = 0
         self.last_completion = start_time
         self._inflight: dict[str, _InFlight] = {}
+        # maintained ready set: tenant -> (layer_idx, layer, TenantDemand),
+        # updated by delta on arrive/launch/finish/pfree/withdraw instead of
+        # rescanning every tenant per event (the pre-PR-5 hot path)
+        # [layer_idx, layer, TenantDemand | None] per ready tenant
+        self._ready: dict[str, list] = {}
+        self._TenantDemand = TenantDemand
+        self._stage_memo: dict[LayerShape, tuple[float, float]] = {}
+        # ONE reusable policy context: every field is a live view (the busy
+        # mapping and deadlines mutate in place, the cost cache is cleared
+        # per round), so each policy call still sees exactly the state a
+        # freshly built per-round context would
+        self._round_cache: dict = {}
+        self._ctx = AssignContext(array=array, time_fn=time_fn,
+                                  busy=self.pset.busy_view(),
+                                  cost_cache=self._round_cache,
+                                  deadlines=self.deadlines)
+        # a rebalance round is skipped while the dirty flag is clear: only
+        # arrive/done/pfree events change the (ready, free-partition) state
+        # assign() depends on.  AssignContext deliberately carries no clock,
+        # so split/assign are time-independent and the skip is exact; a
+        # policy preempt(ctx) hook DOES see the clock (deadline slack), so
+        # an armed hook disables the skip.
+        self._dirty = False
+        self._has_preempt_hook = (
+            preemption is not None
+            and getattr(self.pol, "preempt", None) is not None
+            and getattr(type(self.pol), "preempt", None)
+            is not PartitionPolicy.preempt)
+        self._tenant_seq = itertools.count()
         # event heap: (time, seq, kind, payload); kinds: "arrive", "cdone",
         # "done", "pfree".  payload is the tenant name, except "cdone" which
         # carries (tenant, token) so preemption can invalidate stale events.
@@ -338,7 +386,7 @@ class DynamicScheduler:
             raise ValueError(
                 f"cannot submit {dnng.name!r} at t={dnng.arrival_time} in "
                 f"the past (clock is at {self.now})")
-        self.tenants[dnng.name] = _Tenant(dnng)
+        self.tenants[dnng.name] = _Tenant(dnng, seq=next(self._tenant_seq))
         if deadline is not None:
             self.deadlines[dnng.name] = deadline
         heapq.heappush(self._events, (dnng.arrival_time, next(self._seq),
@@ -358,32 +406,63 @@ class DynamicScheduler:
                 or name in self._inflight):
             return False
         del self.tenants[name]
+        self._ready.pop(name, None)
         self.deadlines.pop(name, None)
+        # the ready set changed: the next event's policy round must run
+        # even if that event alone would not dirty the state (dirty-skip
+        # exactness — see _step)
+        self._dirty = True
         return True
 
     # -- event loop ---------------------------------------------------------
+    def _mark_ready(self, name: str, now: float) -> None:
+        """Insert ``name`` into the maintained ready set (if its next layer
+        is in fact schedulable).  Called at exactly the state transitions
+        that can make a tenant ready: its arrive event, a layer completion,
+        and the post-preemption partition free."""
+        t = self.tenants.get(name)
+        if t is None or t.dnng.arrival_time > now:
+            # withdrawn before its arrive event fired (the event is a
+            # harmless no-op), or a stale arrive event of a re-submitted
+            # name — the live event marks it at the proper instant
+            return
+        rl = t.ready_layer()
+        if rl is None:
+            return
+        # [sort seq, layer idx, layer, lazy TenantDemand]: the demand slot
+        # is filled by _demands on the first round that needs the vector
+        # and survives with the entry; seq rides along so the ready-list
+        # sort never re-touches the tenant table
+        self._ready[name] = [t.seq, rl[0], rl[1], None]
+        self._dirty = True
+
     def _ready_tenants(self, now: float) -> list[tuple[str, int, LayerShape]]:
-        out = []
-        for name, t in self.tenants.items():
-            if t.dnng.arrival_time > now:
-                continue
-            rl = t.ready_layer()
-            if rl is not None:
-                out.append((name, rl[0], rl[1]))
-        return out
+        """Ready (tenant, layer_idx, layer) triples in submit order — read
+        straight off the maintained set (kept exactly in sync by
+        :meth:`_mark_ready` / launch / withdraw), sorted by the tenants'
+        submit sequence to reproduce the pre-incremental scan order."""
+        ready = self._ready
+        if not ready:
+            return []
+        if len(ready) == 1:
+            name, e = next(iter(ready.items()))
+            return [(name, e[1], e[2])]
+        return [(name, e[1], e[2]) for name, e in
+                sorted(ready.items(), key=lambda kv: kv[1][0])]
 
     def _launch(self, now: float, tenant: str, layer_idx: int,
                 layer: LayerShape, part: Partition) -> None:
         t = self.tenants[tenant]
         t.running = True
+        self._ready.pop(tenant, None)
         # stage-in on the shared bus, then compute; stage-out acquires the
         # bus only when compute actually completes (see "cdone" handler).
         # A resumed (previously preempted) segment pays stage-in again —
         # this IS the restore cost: stationary weights were lost with the
         # columns (PreemptionModel docstring).
         if self.stage is not None:
-            si_start, si_end = self.bus.acquire(
-                now, self.stage.stage_in_s(layer))
+            si_start, si_end = self.bus.acquire(now,
+                                                self._stage_costs(layer)[0])
         else:
             si_start = si_end = now
         c_dur = self.time_fn(layer, part)
@@ -402,11 +481,20 @@ class DynamicScheduler:
                                       (tenant, token)))
 
     def _demands(self, ready: Sequence[tuple[str, int, LayerShape]]):
-        from repro.api.policy import TenantDemand
-        return [TenantDemand(name=tenant, demand=float(layer.opr),
-                             width_demand=max(1, min(layer.gemm_n,
-                                                     self.array.cols)))
-                for tenant, _idx, layer in ready]
+        # demand vectors live in the maintained ready entries: built on the
+        # first round that needs them, reused for as long as the entry
+        # survives (delta-updated, not rebuilt per event)
+        out = []
+        cols = self.array.cols
+        for tenant, _idx, layer in ready:
+            entry = self._ready[tenant]
+            d = entry[3]
+            if d is None:
+                d = entry[3] = self._TenantDemand(
+                    name=tenant, demand=float(layer.opr),
+                    width_demand=max(1, min(layer.gemm_n, cols)))
+            out.append(d)
+        return out
 
     def _maybe_preempt(self, now: float, cost_cache: dict) -> None:
         """Offer the policy's ``preempt(ctx)`` hook the in-flight set.
@@ -421,15 +509,10 @@ class DynamicScheduler:
         ``cost_cache`` is the rebalance round's shared oracle memo — the
         same dict the :class:`AssignContext`\\ s of this round use.
         """
-        from repro.api.policy import (
-            InFlightLayer,
-            PartitionPolicy,
-            PreemptContext,
-        )
-        hook = getattr(self.pol, "preempt", None)
-        if hook is None or getattr(type(self.pol), "preempt", None) \
-                is PartitionPolicy.preempt:
+        from repro.api.policy import InFlightLayer, PreemptContext
+        if not self._has_preempt_hook:
             return  # base hook never preempts: skip building the context
+        hook = self.pol.preempt
         eligible = {
             name: inf for name, inf in self._inflight.items()
             if now < inf.c_end  # mid-stage-in layers are evictable too
@@ -462,27 +545,28 @@ class DynamicScheduler:
 
     def _assign(self, now: float) -> None:
         """(Re-)run the policy's split + assign steps at time ``now``."""
-        from repro.api.policy import AssignContext
         array, pset, pol = self.array, self.pset, self.pol
         # one (layer, partition) -> seconds memo per rebalance round: the
         # preempt hook and the steady-state loop below re-probe pairings
         # the round has already priced
-        cost_cache: dict = {}
+        cost_cache = self._round_cache
+        cost_cache.clear()
         if self.preemption is not None:
             self._maybe_preempt(now, cost_cache)
         ready = self._ready_tenants(now)
         if not ready:
             return
-        whole_array_free = (not pset.busy_partitions
-                            and len(pset.free_partitions) == 1)
-        if whole_array_free:
-            ctx = AssignContext(array=array, time_fn=self.time_fn, busy={},
-                                cost_cache=cost_cache,
-                                deadlines=self.deadlines)
+        # the reusable context: its ``busy`` live view tracks allocations
+        # exactly as the per-iteration snapshots of the pre-incremental
+        # engine did at each policy call
+        busy = pset.busy_view()
+        ctx = self._ctx
+        free = pset.free_partitions
+        if not busy and len(free) == 1:
             if len(ready) == 1:
-                # Fig. 5 lines 5–6: single available task -> offer all PEs.
-                offered = [Partition(rows=array.rows, col_start=0,
-                                     cols=array.cols)]
+                # Fig. 5 lines 5–6: single available task -> offer all PEs
+                # (the lone free slice IS the whole array here).
+                offered = free
             else:
                 # fresh split among all available layers (lines 8–10)
                 offered = pol.split(array, self._demands(ready))
@@ -493,28 +577,32 @@ class DynamicScheduler:
         # steady state: policy matches ready layers to merged free slices,
         # one grant at a time (trimmed grants change the free list, so
         # re-offer after every allocation).
-        progressed = True
-        while progressed:
+        while free and ready:
             progressed = False
-            free = pset.free_partitions
-            ready = self._ready_tenants(now)
-            if not free or not ready:
-                break
-            ctx = AssignContext(array=array, time_fn=self.time_fn,
-                                busy=pset.busy_partitions,
-                                cost_cache=cost_cache,
-                                deadlines=self.deadlines)
             for a in pol.assign(ready, free, ctx):
                 got = pset.allocate_exact(a.tenant, a.partition)
                 self._launch(now, a.tenant, a.layer_index, a.layer, got)
                 progressed = True
                 break  # free list changed; re-sort and re-match
+            if not progressed:
+                break
+            free = pset.free_partitions
+            ready = self._ready_tenants(now)
+
+    def _stage_costs(self, layer: LayerShape) -> tuple[float, float]:
+        """(stage_in_s, stage_out_s) memoized per layer shape — jobs of one
+        model share their (frozen) layer objects, so these hit."""
+        c = self._stage_memo.get(layer)
+        if c is None:
+            c = self._stage_memo[layer] = (self.stage.stage_in_s(layer),
+                                           self.stage.stage_out_s(layer))
+        return c
 
     def _compute_done(self, tenant: str, now: float) -> None:
         inf = self._inflight[tenant]
         if self.stage is not None:
             _, so_end = self.bus.acquire(now,
-                                         self.stage.stage_out_s(inf.layer))
+                                         self._stage_costs(inf.layer)[1])
         else:
             so_end = now
         self.pe_seconds_busy += (inf.c_end - inf.c_start) * inf.part.n_pes
@@ -570,10 +658,10 @@ class DynamicScheduler:
         t = self.tenants[tenant]
         t.running = False
         t.done_frac.pop(t.next_layer, None)
-        t.done_layers.add(t.next_layer)
         t.next_layer += 1
         self._inflight.pop(tenant, None)
         self.pset.free(tenant)  # eager merge (§3.3)
+        self._dirty = True      # columns freed (and maybe a new ready layer)
         if t.finished:
             if self.keep_trace:
                 self.completion[tenant] = now
@@ -585,6 +673,8 @@ class DynamicScheduler:
             del self.tenants[tenant]
             if self.on_complete is not None:
                 self.on_complete(tenant, now)
+        else:
+            self._mark_ready(tenant, now)
 
     def _dispatch(self, kind: str, payload, now: float) -> None:
         if kind == "done":
@@ -594,30 +684,52 @@ class DynamicScheduler:
             inf = self._inflight.get(name)
             if inf is not None and inf.token == token:
                 self._compute_done(name, now)
-            # else: stale event — the segment was preempted first
+            # else: stale event — the segment was preempted first.  Either
+            # way partition/ready state is untouched: cdone never dirties.
         elif kind == "pfree":
             self.pset.free(payload)
             self.tenants[payload].draining = False
-        # "arrive" has no state change — it exists to trigger _assign(now)
+            self._dirty = True
+            self._mark_ready(payload, now)
+        else:  # "arrive": the tenant's layers become schedulable now
+            self._dirty = True
+            self._mark_ready(payload, now)
 
     def _step(self) -> None:
         """Pop one event timestamp: handle every event at that instant, then
-        re-run the policy (the rebalance-on-arrival/-completion point)."""
-        now, _, kind, name = heapq.heappop(self._events)
+        re-run the policy (the rebalance-on-arrival/-completion point).
+
+        The policy round is *skipped* when no event at this instant dirtied
+        the (ready, free) state — e.g. a compute-done instant, which only
+        books the stage-out.  ``split``/``assign`` are deterministic in that
+        state (AssignContext carries no clock), so a clean-state round could
+        only repeat the previous round's declines; with an armed preempt
+        hook (which does see the clock) every round runs.
+        """
+        events = self._events
+        now, _, kind, name = heapq.heappop(events)
         self.now = now
+        self.n_events += 1
         self._dispatch(kind, name, now)
         # drain all events at the same timestamp before re-assigning
-        while self._events and self._events[0][0] == now:
-            _, _, k2, n2 = heapq.heappop(self._events)
+        while events and events[0][0] == now:
+            _, _, k2, n2 = heapq.heappop(events)
+            self.n_events += 1
             self._dispatch(k2, n2, now)
-        self._assign(now)
-        self.pset.check()
+        if self._dirty or self._has_preempt_hook:
+            self._dirty = False
+            self._assign(now)
+        if self.check_invariants:
+            self.pset.check()
 
     def run_until(self, t: float) -> None:
         """Process every pending event with timestamp <= ``t``."""
-        while self._events and self._events[0][0] <= t:
-            self._step()
-        self.now = max(self.now, t)
+        events = self._events  # the heap list object is never reassigned
+        step = self._step
+        while events and events[0][0] <= t:
+            step()
+        if t > self.now:
+            self.now = t
 
     def run(self) -> None:
         """Drain every pending event (closed-workload mode)."""
@@ -667,8 +779,11 @@ def schedule_dynamic(
         raise ValueError(f"duplicate DNNG names: {names}")
     # negative arrival times are legal in batch mode: start the clock there
     start = min(0.0, min(g.arrival_time for g in dnngs))
+    # closed workloads are small: keep the PartitionSet invariant check as a
+    # safety net here (the open-loop traffic path leaves it off for speed)
     sched = DynamicScheduler(array, time_fn, stage=stage, policy=policy,
-                             start_time=start, preemption=preemption)
+                             start_time=start, preemption=preemption,
+                             check_invariants=True)
     for g in dnngs:
         sched.submit(g)
     sched.run()

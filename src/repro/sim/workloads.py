@@ -310,6 +310,24 @@ MODEL_POOLS = {
 }
 
 
+_TEMPLATES: dict = {}
+
+
+def _model_template(model: str) -> DNNG:
+    """Memoized Table-1 template: model constructors are pure, and the
+    open-loop generator stamps thousands of per-job clones — rebuilding
+    every LayerShape per arrival was measurable on the serving hot path.
+    Cloning via ``dataclasses.replace`` shares the (frozen) layer tuple, so
+    all jobs of one model also share the scheduler's cost-oracle cache
+    entries.  Keyed by the constructor object itself, so a patched
+    ``MODELS`` registry (ablations, tests) misses the cache as it should."""
+    fn = MODELS[model]
+    g = _TEMPLATES.get(fn)
+    if g is None:
+        g = _TEMPLATES[fn] = fn()
+    return g
+
+
 def sample_dnng(rng, pool: str = "all", name: str | None = None,
                 arrival_time: float = 0.0) -> DNNG:
     """One fresh Table-1 DNNG for an arriving job.
@@ -319,11 +337,8 @@ def sample_dnng(rng, pool: str = "all", name: str | None = None,
     ``name`` overrides the tenant name so concurrent jobs of the same model
     stay distinct in the scheduler.
     """
-    import dataclasses as _dc
     if pool not in MODEL_POOLS:
         raise ValueError(f"unknown pool {pool!r}; known: "
                          f"{sorted(MODEL_POOLS)}")
     model = rng.choice(MODEL_POOLS[pool])
-    g = MODELS[model]()
-    return _dc.replace(g, name=name if name is not None else g.name,
-                       arrival_time=arrival_time)
+    return _model_template(model).clone(name=name, arrival_time=arrival_time)

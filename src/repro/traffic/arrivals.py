@@ -93,10 +93,20 @@ class ArrivalProcess(abc.ABC):
         """Yield strictly increasing arrival instants < ``horizon``."""
 
     def __iter__(self) -> Iterator[Job]:
+        # Iterating always replays the same stream (the rng is re-seeded),
+        # so the stream is materialized once and replayed from cache: the
+        # benchmark matrices drive the SAME arrivals through several
+        # policies, and Job/DNNG are frozen — sharing is safe.
+        cache = getattr(self, "_job_cache", None)
+        if cache is None:
+            cache = self._job_cache = list(self._generate())
+        return iter(cache)
+
+    def _generate(self) -> Iterator[Job]:
         rng = random.Random(self.seed)
         for jid, t in enumerate(self._arrival_times(rng)):
             g = sample_dnng(rng, pool=self.pool, arrival_time=t)
-            g = dataclasses.replace(g, name=f"{g.name}#{jid}")
+            g = g.clone(name=f"{g.name}#{jid}")
             yield Job(job_id=jid, arrival=t, dnng=g,
                       deadline=t + self.slo_s,
                       tier=rng.choice(self.tiers))

@@ -25,7 +25,7 @@ on another after a checkpoint-transit delay (:meth:`admit_migrated`).
 from __future__ import annotations
 
 import abc
-import dataclasses
+import heapq
 import random
 from typing import Callable, Optional, Sequence
 
@@ -42,7 +42,14 @@ from repro.traffic.arrivals import Job
 
 
 class ArrayNode:
-    """One systolic array in the fleet: scheduler + admission + wait queue."""
+    """One systolic array in the fleet: scheduler + admission + wait queue.
+
+    ``on_load_change`` (optional) fires after any mutation that can change
+    :attr:`in_system` or the queue length — admission, queue promotion,
+    completion, migration in/out — so a fleet-level load tracker
+    (:class:`FleetLoads`) can maintain its heap by delta instead of
+    rescanning every node per dispatch decision.
+    """
 
     def __init__(self, index: int, array: ArrayShape, time_fn: TimeFn,
                  stage: StageModel | None, policy,
@@ -51,7 +58,9 @@ class ArrayNode:
                  on_submit: Callable[["ArrayNode", Job, float], None]
                  | None = None,
                  keep_trace: bool = False,
-                 preemption: PreemptionModel | None = None):
+                 preemption: PreemptionModel | None = None,
+                 on_load_change: Callable[["ArrayNode"], None] | None = None,
+                 check_invariants: bool = False):
         if max_concurrent < 1 or queue_cap < 0:
             raise ValueError(f"need max_concurrent >= 1 (got {max_concurrent})"
                              f" and queue_cap >= 0 (got {queue_cap})")
@@ -63,6 +72,7 @@ class ArrayNode:
         self._ready_at: dict[str, float] = {}  # migrated-in transit arrivals
         self._notify_done = on_complete
         self._notify_submit = on_submit or (lambda node, job, t: None)
+        self._notify_load = on_load_change or (lambda node: None)
         self._time_fn = time_fn
         self._stage = stage
         self._full = Partition(rows=array.rows, col_start=0, cols=array.cols)
@@ -70,7 +80,7 @@ class ArrayNode:
         self.scheduler = DynamicScheduler(
             array, time_fn, stage=stage, policy=policy,
             on_complete=self._job_done, keep_trace=keep_trace,
-            preemption=preemption)
+            preemption=preemption, check_invariants=check_invariants)
 
     @property
     def in_system(self) -> int:
@@ -87,10 +97,12 @@ class ArrayNode:
             self.scheduler.submit(job.dnng, deadline=job.deadline)
             self.jobs[job.dnng.name] = job
             self._notify_submit(self, job, job.arrival)
+            self._notify_load(self)
             return "run"
         if len(self.queue) < self.queue_cap:
             self.queue.append(job)
             self.jobs[job.dnng.name] = job
+            self._notify_load(self)
             return "queued"
         return "rejected"
 
@@ -103,9 +115,10 @@ class ArrayNode:
         while self.queue and self.scheduler.n_active < self.max_concurrent:
             job = self.queue.pop(0)
             ready = max(t, self._ready_at.pop(job.dnng.name, t))
-            g = dataclasses.replace(job.dnng, arrival_time=ready)
+            g = job.dnng.clone(arrival_time=ready)
             self.scheduler.submit(g, deadline=job.deadline)
             self._notify_submit(self, job, ready)
+        self._notify_load(self)
 
     # -- migration surface (driven by repro.traffic.rebalance) --------------
     def service_estimate(self, dnng: DNNG) -> float:
@@ -141,9 +154,13 @@ class ArrayNode:
             if job.dnng.name == name:
                 del self.queue[i]
                 self._ready_at.pop(name, None)
-                return self.jobs.pop(name)
+                job = self.jobs.pop(name)
+                self._notify_load(self)
+                return job
         if name in self.jobs and self.scheduler.withdraw(name):
-            return self.jobs.pop(name)
+            job = self.jobs.pop(name)
+            self._notify_load(self)
+            return job
         return None
 
     def admit_migrated(self, job: Job, now: float, ready_at: float) -> str:
@@ -152,13 +169,15 @@ class ArrayNode:
         self.jobs[job.dnng.name] = job
         if self.scheduler.n_active < self.max_concurrent:
             arrival = max(now, ready_at, self.scheduler.now)
-            g = dataclasses.replace(job.dnng, arrival_time=arrival)
+            g = job.dnng.clone(arrival_time=arrival)
             self.scheduler.submit(g, deadline=job.deadline)
             self._notify_submit(self, job, arrival)
+            self._notify_load(self)
             return "run"
         if len(self.queue) < self.queue_cap:
             self.queue.append(job)
             self._ready_at[job.dnng.name] = ready_at
+            self._notify_load(self)
             return "queued"
         del self.jobs[job.dnng.name]
         raise ValueError(f"migration target {self.index} cannot accept "
@@ -166,8 +185,62 @@ class ArrayNode:
 
 
 # ---------------------------------------------------------------------------
-# dispatchers
+# fleet load tracking + dispatchers
 # ---------------------------------------------------------------------------
+
+class FleetLoads:
+    """Delta-maintained per-node loads with a lazily-rebuilt min-heap.
+
+    The traffic simulator used to rebuild ``[n.in_system for n in nodes]``
+    on every arrival — an O(N) scan per dispatch decision that dominates
+    at fleet scale (the scale bench runs 64 arrays).  Nodes push load
+    changes via their ``on_load_change`` hook; the heap accumulates stale
+    entries and discards them on pop (the classic lazy-deletion heap), so
+    a jsq decision is O(log N) amortized and p2c is O(1).
+
+    ``min_index()`` returns exactly ``argmin_i (loads[i], i)`` — the same
+    deterministic tie-break as the linear scan it replaces.
+    """
+
+    __slots__ = ("loads", "queued", "_heap", "_queued_total")
+
+    def __init__(self, nodes: Sequence["ArrayNode"]):
+        self.loads = [n.in_system for n in nodes]
+        self.queued = [len(n.queue) for n in nodes]
+        self._queued_total = sum(self.queued)
+        self._heap = [(load, i) for i, load in enumerate(self.loads)]
+        heapq.heapify(self._heap)
+
+    def update(self, node: "ArrayNode") -> None:
+        """The node's ``on_load_change`` target."""
+        i = node.index
+        load = node.in_system
+        q = len(node.queue)
+        self._queued_total += q - self.queued[i]
+        self.queued[i] = q
+        if load != self.loads[i]:
+            self.loads[i] = load
+            heap = self._heap
+            heapq.heappush(heap, (load, i))
+            if len(heap) > 64 + 8 * len(self.loads):
+                # compact the lazy-deletion backlog (amortized O(N))
+                heap[:] = [(ld, j) for j, ld in enumerate(self.loads)]
+                heapq.heapify(heap)
+
+    @property
+    def queued_total(self) -> int:
+        """Fleet-wide queue depth (the per-arrival depth sample)."""
+        return self._queued_total
+
+    def min_index(self) -> int:
+        heap = self._heap
+        loads = self.loads
+        while True:
+            load, i = heap[0]
+            if loads[i] == load:
+                return i
+            heapq.heappop(heap)  # stale: the node's load moved on
+
 
 class Dispatcher(abc.ABC):
     """Pick a target array for an arriving job from in-system loads."""
@@ -177,6 +250,14 @@ class Dispatcher(abc.ABC):
     @abc.abstractmethod
     def choose(self, loads: Sequence[int], rng: random.Random) -> int:
         """Index of the array to route to (``loads[i]`` = jobs in system)."""
+
+    def choose_tracked(self, fleet: FleetLoads, rng: random.Random) -> int:
+        """Like :meth:`choose`, reading a maintained :class:`FleetLoads`
+        instead of a freshly scanned load list.  The default delegates to
+        :meth:`choose` on the tracker's load array (correct for any
+        dispatcher); jsq/p2c override with heap / O(1) reads.  Must be
+        decision-identical to ``choose`` — including rng consumption."""
+        return self.choose(fleet.loads, rng)
 
 
 _REGISTRY = Registry("dispatcher")
@@ -202,6 +283,10 @@ class JoinShortestQueue(Dispatcher):
     def choose(self, loads: Sequence[int], rng: random.Random) -> int:
         return min(range(len(loads)), key=lambda i: (loads[i], i))
 
+    def choose_tracked(self, fleet: FleetLoads, rng: random.Random) -> int:
+        # heap argmin == linear argmin incl. the lowest-index tie-break
+        return fleet.min_index()
+
 
 @register_dispatcher("p2c")
 class PowerOfTwoChoices(Dispatcher):
@@ -215,3 +300,5 @@ class PowerOfTwoChoices(Dispatcher):
         if loads[j] < loads[i] or (loads[j] == loads[i] and j < i):
             return j
         return i
+    # choose_tracked: the base delegation is already O(1) per decision —
+    # choose() only indexes the two sampled loads

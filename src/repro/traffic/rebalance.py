@@ -154,6 +154,11 @@ class MigrateOnPressure(Rebalancer):
     def rebalance(self, nodes: Sequence, now: float, periodic: bool = False) -> int:
         if len(nodes) < 2:
             return 0
+        if not any(n.queue for n in nodes):
+            # only queued jobs ever move (pressure AND balance paths), so
+            # an all-drained fleet needs no sort/wait-estimate work — the
+            # common case at every sub-saturation arrival
+            return 0
         moves = 0
         # pressure moves: queued jobs predicted to miss where they sit
         for src in sorted(nodes, key=lambda n: (-n.in_system, n.index)):

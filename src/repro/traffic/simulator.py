@@ -30,7 +30,7 @@ from typing import Optional
 
 from repro.core.scheduler import ScheduleResult
 from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
-from repro.traffic.cluster import ArrayNode, resolve_dispatcher
+from repro.traffic.cluster import ArrayNode, FleetLoads, resolve_dispatcher
 from repro.traffic.metrics import (
     JobRecord,
     TrafficMetrics,
@@ -132,6 +132,10 @@ class TrafficSimulator:
       ``migrate_on_pressure`` under the optional ``migration`` cost
       model), which additionally runs a pressure-only pass at every
       arrival.
+    * ``check_invariants`` — re-arm the per-event
+      :class:`~repro.core.partition.PartitionSet` tiling check on every
+      node (a debug net the serving hot path leaves off — see
+      :class:`~repro.core.scheduler.DynamicScheduler`).
     """
 
     def __init__(self, arrivals, policy="equal", backend="sim",
@@ -140,6 +144,7 @@ class TrafficSimulator:
                  seed: int = 0, keep_trace: bool = False,
                  preemption=None, rebalance_interval: float | None = None,
                  rebalancer="migrate_on_pressure", migration=None,
+                 check_invariants: bool = False,
                  **arrival_kwargs):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
@@ -196,8 +201,16 @@ class TrafficSimulator:
                       max_concurrent=max_concurrent, queue_cap=queue_cap,
                       on_complete=self._on_complete,
                       on_submit=self._on_submit, keep_trace=keep_trace,
-                      preemption=preemption)
+                      preemption=preemption,
+                      on_load_change=self._on_load_change,
+                      check_invariants=check_invariants)
             for i in range(n_arrays)]
+        # delta-maintained fleet loads: dispatch reads this instead of
+        # scanning every node per arrival (O(N) -> O(log N) for jsq)
+        self.fleet = FleetLoads(self.nodes)
+
+    def _on_load_change(self, node: ArrayNode) -> None:
+        self.fleet.update(node)
 
     # -- node callbacks -----------------------------------------------------
     def _on_complete(self, node: ArrayNode, tenant: str, t: float) -> None:
@@ -211,7 +224,14 @@ class TrafficSimulator:
     # -- execution ----------------------------------------------------------
     def _advance(self, t: float) -> None:
         for node in self.nodes:
-            node.scheduler.run_until(t)
+            sched = node.scheduler
+            events = sched._events
+            if events and events[0][0] <= t:
+                sched.run_until(t)
+            # idle nodes are skipped outright — their clock stays at the
+            # last event, which only ever under-states `now` (submissions
+            # carry absolute arrival instants, so nothing depends on an
+            # idle node's clock having been ticked forward)
 
     def run(self) -> ServeResult:
         depth_samples: list[int] = []
@@ -234,8 +254,8 @@ class TrafficSimulator:
                                  "arrival stream")
             b = _RecordBuilder(job)
             self._builders[job.dnng.name] = b
-            loads = [n.in_system for n in self.nodes]
-            target = self.nodes[self.dispatcher.choose(loads, self._rng)]
+            target = self.nodes[self.dispatcher.choose_tracked(self.fleet,
+                                                               self._rng)]
             status = target.offer(job)
             if status != "rejected":
                 b.array = target.index
@@ -244,7 +264,7 @@ class TrafficSimulator:
                 # only — full balancing happens on the periodic ticks)
                 self.rebalancer.rebalance(self.nodes, job.arrival,
                                           periodic=False)
-            depth_samples.append(sum(len(n.queue) for n in self.nodes))
+            depth_samples.append(self.fleet.queued_total)
         # arrivals exhausted: keep ticking while queues drain, then flush
         if next_tick is not None:
             while any(n.queue for n in self.nodes):

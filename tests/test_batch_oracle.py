@@ -1,0 +1,206 @@
+"""Batch cost oracle: vectorized == scalar, bit for bit (PR 5 tentpole).
+
+The whole engine overhaul rests on one contract: ``ws_cost_batch`` /
+``layer_cost_batch`` / ``time_fn.batch`` return EXACTLY what the scalar
+oracles return — not approximately, byte for byte — so policies can
+consume the batched table with zero behavioral drift.  Property tests
+sweep hypothesis-generated shape/width grids; the deterministic cases run
+on the no-extras CI leg too.
+"""
+
+# only the property tests need hypothesis; deterministic tests always run
+from _hypothesis_compat import given, settings, st
+
+import pytest
+
+from repro.core.dataflow import (
+    GEMM,
+    pack_gemms,
+    pack_partitions,
+    ws_cost,
+    ws_cost_batch,
+    ws_cost_batch_stats,
+    ws_cost_batch_stats_clear,
+)
+from repro.core.dnng import LayerShape
+from repro.core.partition import Partition
+from repro.sim.systolic import (
+    SystolicConfig,
+    layer_cost,
+    layer_cost_batch,
+    layer_time_fn,
+)
+from repro.sim.workloads import MODELS
+
+ARRAY_ROWS = 128
+
+
+def _grid_pairs():
+    """Every Table-1 layer × a spread of partition widths/offsets."""
+    layers, parts = [], []
+    widths = (1, 3, 16, 64, 128)
+    offsets = (0, 16, 96)
+    i = 0
+    for build in MODELS.values():
+        for layer in build().layers:
+            w = widths[i % len(widths)]
+            c0 = offsets[i % len(offsets)]
+            layers.append(layer)
+            parts.append(Partition(rows=ARRAY_ROWS, col_start=c0, cols=w))
+            i += 1
+    return layers, parts
+
+
+class TestWsCostBatch:
+    def test_matches_scalar_on_table1_grid(self):
+        layers, parts = _grid_pairs()
+        gemms = [GEMM.of_layer(layer) for layer in layers]
+        table = ws_cost_batch(gemms, parts)
+        assert len(table) == len(gemms)
+        for i, (g, p) in enumerate(zip(gemms, parts)):
+            assert table.row(i) == ws_cost(g, p)
+
+    def test_accepts_prepacked_arrays(self):
+        gemms = [GEMM(T=10, K=300, N=500), GEMM(T=7, K=64, N=9)]
+        parts = [Partition(128, 0, 64), Partition(128, 32, 3)]
+        packed = ws_cost_batch(pack_gemms(gemms), pack_partitions(parts))
+        direct = ws_cost_batch(gemms, parts)
+        for i in range(2):
+            assert packed.row(i) == direct.row(i) == ws_cost(gemms[i],
+                                                             parts[i])
+
+    def test_empty_batch(self):
+        assert len(ws_cost_batch([], [])) == 0
+
+    def test_mismatched_lengths_raise(self):
+        with pytest.raises(ValueError, match="matching shapes"):
+            ws_cost_batch([GEMM(T=1, K=1, N=1)],
+                          [Partition(1, 0, 1), Partition(1, 1, 1)])
+
+    def test_batch_stats_count_calls_and_pairs(self):
+        ws_cost_batch_stats_clear()
+        gemms = [GEMM(T=5, K=10, N=20)] * 3
+        parts = [Partition(8, 0, 4)] * 3
+        ws_cost_batch(gemms, parts)
+        ws_cost_batch(gemms[:1], parts[:1])
+        stats = ws_cost_batch_stats()
+        assert stats == {"calls": 2, "pairs": 4}
+        ws_cost_batch_stats_clear()
+        assert ws_cost_batch_stats() == {"calls": 0, "pairs": 0}
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        T=st.integers(1, 5000), K=st.integers(1, 4096),
+        N=st.integers(1, 4096), rows=st.integers(1, 256),
+        col_start=st.integers(0, 128), cols=st.integers(1, 256),
+    )
+    def test_property_bit_identical(self, T, K, N, rows, col_start, cols):
+        g = GEMM(T=T, K=K, N=N)
+        p = Partition(rows=rows, col_start=col_start, cols=cols)
+        assert ws_cost_batch([g], [p]).row(0) == ws_cost(g, p)
+
+
+class TestLayerCostBatch:
+    def test_matches_scalar_on_table1_grid(self):
+        layers, parts = _grid_pairs()
+        table = layer_cost_batch(layers, parts)
+        for i, (layer, p) in enumerate(zip(layers, parts)):
+            assert table.row(i) == layer_cost(layer, p)
+
+    @settings(max_examples=100, deadline=None)
+    @given(
+        M=st.integers(1, 2048), N=st.integers(1, 64),
+        C=st.integers(1, 1024), R=st.integers(1, 7), S=st.integers(1, 7),
+        HW=st.integers(1, 64), cols=st.integers(1, 128),
+    )
+    def test_property_bit_identical(self, M, N, C, R, S, HW, cols):
+        layer = LayerShape(M=M, N=N, C=C, R=R, S=S, H=HW, W=HW, P=HW, Q=HW)
+        p = Partition(rows=ARRAY_ROWS, col_start=0, cols=cols)
+        assert layer_cost_batch([layer], [p]).row(0) == layer_cost(layer, p)
+
+
+class TestBatchTimeOracle:
+    def test_seconds_bit_identical_both_paths(self):
+        # small batch -> scalar-LRU path; large batch -> NumPy path: both
+        # must equal the scalar oracle exactly
+        layers, parts = _grid_pairs()
+        pairs = list(zip(layers, parts))
+        assert len(pairs) >= 64
+        for chunk in (pairs[:4], pairs):  # under / over VECTOR_THRESHOLD
+            fn = layer_time_fn(SystolicConfig())
+            fn.batch._memo.clear()
+            got = fn.batch(chunk)
+            assert got == [fn(layer, p) for layer, p in chunk]
+
+    def test_memo_hits_and_stats(self):
+        fn = layer_time_fn(SystolicConfig())
+        fn.batch._memo.clear()
+        layers, parts = _grid_pairs()
+        pairs = list(zip(layers[:6], parts[:6]))
+        fn.batch(pairs)
+        misses0 = fn.batch.misses
+        assert misses0 == len(dict.fromkeys(pairs))
+        fn.batch(pairs)  # pure replay: all hits
+        stats = fn.batch.stats()
+        assert stats["misses"] == misses0
+        assert stats["hits"] >= len(pairs)
+        assert stats["currsize"] >= misses0
+
+    def test_shared_memo_across_instances(self):
+        cfg = SystolicConfig()
+        a, b = layer_time_fn(cfg), layer_time_fn(cfg)
+        assert a.batch._memo is b.batch._memo
+
+    def test_mesh_style_time_fn_without_batch_attr(self):
+        # AssignContext.time_batch must fall back to the scalar oracle for
+        # backends that expose no vectorized surface
+        from repro.api.policy import AssignContext
+        from repro.core.partition import ArrayShape
+
+        calls = []
+
+        def scalar_fn(layer, part):
+            calls.append((layer, part))
+            return 1.5
+
+        layer = LayerShape.fc("l", 8, 8)
+        part = Partition(4, 0, 4)
+        ctx = AssignContext(array=ArrayShape(4, 4), time_fn=scalar_fn,
+                            cost_cache={})
+        assert ctx.time_batch([(layer, part), (layer, part)]) == [1.5, 1.5]
+        assert len(calls) == 1  # deduped through the shared cost cache
+        assert ctx.time(layer, part) == 1.5
+        assert len(calls) == 1  # scalar probe now hits the primed cache
+
+
+class TestContextTimeBatch:
+    def test_primes_shared_cost_cache(self):
+        from repro.api.policy import AssignContext
+        from repro.core.partition import ArrayShape
+
+        cfg = SystolicConfig()
+        fn = layer_time_fn(cfg)
+        layers, parts = _grid_pairs()
+        pairs = list(zip(layers[:5], parts[:5]))
+        cache: dict = {}
+        ctx = AssignContext(array=ArrayShape(cfg.rows, cfg.cols),
+                            time_fn=fn, cost_cache=cache)
+        got = ctx.time_batch(pairs)
+        assert got == [fn(layer, p) for layer, p in pairs]
+        assert set(cache) == set(pairs)
+
+    def test_preempt_context_time_batch(self):
+        from repro.api.policy import PreemptContext
+        from repro.core.partition import ArrayShape
+
+        cfg = SystolicConfig()
+        fn = layer_time_fn(cfg)
+        layer = LayerShape.fc("l", 64, 64)
+        part = Partition(cfg.rows, 0, 16)
+        ctx = PreemptContext(
+            array=ArrayShape(cfg.rows, cfg.cols), now=0.0, ready=(),
+            free=(), inflight={}, deadlines={}, time_fn=fn,
+            drain_s=lambda p: 0.0, stage_in_s=lambda la: 0.0,
+            cost_cache={})
+        assert ctx.time_batch([(layer, part)]) == [fn(layer, part)]
+        assert ctx.time(layer, part) == fn(layer, part)
