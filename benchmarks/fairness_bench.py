@@ -1,0 +1,273 @@
+"""Fairness benchmark — BENCH_fairness.json.
+
+    PYTHONPATH=src python benchmarks/fairness_bench.py
+
+Three questions, one record:
+
+1. **Who suffers under contention?**  The policy matrix drives one bursty
+   heavy-mix MMPP stream (the preempt bench's stress shape) through every
+   general partition policy — the five incumbents plus `repro.fairness`'s
+   ``drf`` and ``min_cost_flow`` — with per-tenant accounting armed, and
+   records Jain fairness over per-model slowdowns next to the usual SLA
+   numbers.  All policies see the identical arrival stream.
+2. **Does it hold on production arrivals?**  A trace-replay block runs an
+   Alibaba ``batch_instance``-style stream (synthesized in memory by
+   ``synth_batch_instance_rows`` — deterministic, nothing multi-MB
+   committed) through the fairness-relevant policies.
+3. **Does the sharded engine tell the truth?**  Identity cells assert the
+   `repro.traffic.sharded` determinism contract on a common cell —
+   sharded == single-process under ``rr`` dispatch, and shard-count /
+   parallel-vs-serial invariance under ``jsq`` — recorded as 0/1 fields
+   the regression gate pins at 1.  A 100k-job, 256-array sharded cell
+   then exercises fleet scale under the same ``TIME_BUDGET_S`` contract
+   as the scale bench (``--no-scale`` / ``include_scale=False`` skips it;
+   the bench-gate job does, the scale-bench CI job does not).
+
+Deterministic fields are byte-stable across runs/platforms and gated by
+``benchmarks/check_regression.py``; ``wall_s`` is machine-dependent and
+informational only (README "Performance").
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_fairness.json")
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (mean_service_s reuse) importable
+
+# the five incumbent general policies + the two repro.fairness plugins
+# (deadline_preempt is excluded as in BENCH_fig9: it is the preempt
+# bench's subject and degenerates to `equal` without armed preemption)
+POLICIES = ("equal", "proportional", "best_fit", "priority",
+            "width_aware", "drf", "min_cost_flow")
+TRACE_POLICIES = ("equal", "drf", "min_cost_flow")
+SEED = 0
+LOAD = 0.9                   # ρ per array for the policy matrix
+MATRIX_JOBS = 400
+MATRIX_ARRAYS = 4
+TRACE_JOBS = 2000
+TRACE_ARRAYS = 8
+SCALE_JOBS = 100_000
+SCALE_ARRAYS = 256
+SCALE_SHARDS = 8
+SCALE_LOAD = 0.85            # matches scale_bench's steady-state ρ
+TIME_BUDGET_S = 120.0        # CI gate for the sharded scale cell
+
+
+def _fairness_fields(res) -> dict:
+    """The gated per-tenant fairness slice of one ServeResult."""
+    m = res.metrics
+    slow = m.per_tenant_slowdown or {}
+    return {
+        "jain_fairness": m.jain_fairness,
+        "slowdown_mean": (sum(slow.values()) / len(slow)
+                          if slow else float("nan")),
+        "slowdown_max": max(slow.values()) if slow else float("nan"),
+        "per_tenant_slowdown": dict(sorted(slow.items())),
+        "jain_dominant_share": m.jain_dominant_share,
+    }
+
+
+def policy_matrix() -> list[dict]:
+    """Every policy on the identical bursty heavy-mix MMPP stream."""
+    from benchmarks.traffic_bench import mean_service_s
+    from repro.traffic import TrafficSimulator, get_arrival_process
+
+    svc = mean_service_s("heavy")
+    rate = MATRIX_ARRAYS * LOAD / svc
+    arr = get_arrival_process(
+        "mmpp", rate=rate, horizon=MATRIX_JOBS / rate, seed=SEED,
+        pool="heavy", slo_s=6.0 * svc, tiers=(0, 1))
+    rows = []
+    for pol in POLICIES:
+        res = TrafficSimulator(arr, policy=pol, backend="sim",
+                               n_arrays=MATRIX_ARRAYS, dispatch="jsq",
+                               max_concurrent=4, queue_cap=16, seed=SEED,
+                               fairness=True).run()
+        m = res.metrics
+        rows.append({
+            "policy": pol,
+            "arrivals": "mmpp",
+            "load": LOAD,
+            "jobs_arrived": m.jobs_arrived,
+            "jobs_completed": m.jobs_completed,
+            "deadline_miss_rate": m.deadline_miss_rate,
+            "p99_latency_s": m.p99_latency_s,
+            "mean_latency_s": m.mean_latency_s,
+            **_fairness_fields(res),
+        })
+    return rows
+
+
+def trace_replay() -> list[dict]:
+    """Fairness-relevant policies on a production-shaped trace replay."""
+    from repro.traffic import (
+        TrafficSimulator,
+        resolve_arrivals,
+        synth_batch_instance_rows,
+    )
+
+    csv_rows = synth_batch_instance_rows(TRACE_JOBS, seed=SEED)
+    rows = []
+    for pol in TRACE_POLICIES:
+        arr = resolve_arrivals("batch_instance", source=csv_rows,
+                               seed=SEED, pool="heavy", slo_s=0.05)
+        res = TrafficSimulator(arr, policy=pol, backend="sim",
+                               n_arrays=TRACE_ARRAYS, dispatch="jsq",
+                               max_concurrent=4, queue_cap=16, seed=SEED,
+                               fairness=True).run()
+        m = res.metrics
+        rows.append({
+            "policy": pol,
+            "arrivals": "batch_instance",
+            "trace_rows": TRACE_JOBS,
+            "jobs_arrived": m.jobs_arrived,
+            "jobs_completed": m.jobs_completed,
+            "deadline_miss_rate": m.deadline_miss_rate,
+            "p99_latency_s": m.p99_latency_s,
+            **_fairness_fields(res),
+        })
+    return rows
+
+
+def identity_cells() -> dict:
+    """The sharded determinism contract on a common cell, as 0/1 fields.
+
+    The gate pins each at 1: any divergence between the sharded engine
+    and the single-process truth is a correctness regression, not noise.
+    """
+    from repro.traffic import ShardedTrafficSimulator, TrafficSimulator
+
+    kw = dict(rate=4000.0, horizon=0.25, pool="light", slo_s=0.02)
+
+    def run_sharded(dispatch, n_shards, parallel):
+        return ShardedTrafficSimulator(
+            "poisson", policy="drf", backend="sim", n_arrays=8,
+            n_shards=n_shards, dispatch=dispatch, seed=SEED,
+            sync_every=64, parallel=parallel, **kw).run()
+
+    plain = TrafficSimulator("poisson", policy="drf", backend="sim",
+                             n_arrays=8, dispatch="rr", seed=SEED,
+                             **kw).run()
+    rr4 = run_sharded("rr", 4, True)
+    rr_serial = run_sharded("rr", 4, False)
+    jsq2 = run_sharded("jsq", 2, True)
+    jsq8 = run_sharded("jsq", 8, False)
+
+    def same(a, b) -> int:
+        return int(a.records == b.records and a.metrics == b.metrics)
+
+    return {
+        "jobs": plain.metrics.jobs_arrived,
+        "n_arrays": 8,
+        "rr_sharded_equals_single_process": same(rr4, plain),
+        "rr_parallel_equals_serial": same(rr4, rr_serial),
+        "jsq_invariant_to_shards_and_mode": same(jsq2, jsq8),
+    }
+
+
+def sharded_scale(svc: float) -> dict:
+    """100k jobs over 256 arrays through the pod-sharded engine."""
+    from repro.traffic import ShardedTrafficSimulator
+
+    rate = SCALE_ARRAYS * SCALE_LOAD / svc
+    t0 = time.perf_counter()
+    res = ShardedTrafficSimulator(
+        "poisson", policy="drf", backend="sim", n_arrays=SCALE_ARRAYS,
+        n_shards=SCALE_SHARDS, dispatch="rr", max_concurrent=4,
+        queue_cap=8, seed=SEED, sync_every=256, fairness=True,
+        rate=rate, horizon=SCALE_JOBS / rate, pool="light",
+        slo_s=4.0 * svc).run()
+    wall = time.perf_counter() - t0
+    m = res.metrics
+    return {
+        "jobs_target": SCALE_JOBS,
+        "n_arrays": SCALE_ARRAYS,
+        "n_shards": SCALE_SHARDS,
+        "dispatch": "rr",
+        "load": SCALE_LOAD,
+        "jobs_arrived": m.jobs_arrived,
+        "jobs_completed": m.jobs_completed,
+        "deadline_miss_rate": m.deadline_miss_rate,
+        "rejection_rate": m.rejection_rate,
+        "utilization": m.utilization,
+        "jain_fairness": m.jain_fairness,
+        # -- informational (machine-dependent, not gated) --
+        "wall_s": wall,
+        "jobs_per_s": m.jobs_arrived / wall if wall > 0 else 0.0,
+    }
+
+
+def run(path: str = BENCH_JSON, include_scale: bool = True,
+        check_budget: bool = True) -> dict:
+    from benchmarks.traffic_bench import mean_service_s
+
+    print(f"{'policy':>14}{'jobs':>6}{'miss%':>7}{'p99_ms':>8}"
+          f"{'jain':>7}{'slow_mu':>9}{'slow_max':>9}")
+    matrix = policy_matrix()
+    for r in matrix:
+        print(f"{r['policy']:>14}{r['jobs_arrived']:>6}"
+              f"{r['deadline_miss_rate'] * 100:>7.1f}"
+              f"{r['p99_latency_s'] * 1e3:>8.2f}{r['jain_fairness']:>7.3f}"
+              f"{r['slowdown_mean']:>9.2f}{r['slowdown_max']:>9.2f}")
+    print("# batch_instance trace replay")
+    trace = trace_replay()
+    for r in trace:
+        print(f"{r['policy']:>14}{r['jobs_arrived']:>6}"
+              f"{r['deadline_miss_rate'] * 100:>7.1f}"
+              f"{r['p99_latency_s'] * 1e3:>8.2f}{r['jain_fairness']:>7.3f}"
+              f"{r['slowdown_mean']:>9.2f}{r['slowdown_max']:>9.2f}")
+    identity = identity_cells()
+    print(f"# sharded identity: rr==single {identity['rr_sharded_equals_single_process']}, "
+          f"parallel==serial {identity['rr_parallel_equals_serial']}, "
+          f"jsq shard-invariant {identity['jsq_invariant_to_shards_and_mode']}")
+    blob = {"benchmark": "fairness", "backend": "sim", "seed": SEED,
+            "time_budget_s": TIME_BUDGET_S,
+            "policy_results": matrix,
+            "trace_results": trace,
+            "identity": identity}
+    if include_scale:
+        scale = sharded_scale(mean_service_s("light"))
+        print(f"# sharded scale: {scale['jobs_arrived']} jobs / "
+              f"{scale['n_arrays']} arrays / {scale['n_shards']} shards in "
+              f"{scale['wall_s']:.1f}s "
+              f"({scale['jobs_per_s']:,.0f} jobs/s), "
+              f"miss {scale['deadline_miss_rate'] * 100:.1f}%, "
+              f"jain {scale['jain_fairness']:.3f}")
+        blob["sharded_scale"] = scale
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    bad = [k for k, v in identity.items()
+           if k not in ("jobs", "n_arrays") and v != 1]
+    if bad:
+        print(f"FAIL: sharded identity broken: {bad}", file=sys.stderr)
+        raise SystemExit(1)
+    if include_scale and check_budget:
+        if blob["sharded_scale"]["wall_s"] > TIME_BUDGET_S:
+            print(f"FAIL: sharded scale cell took "
+                  f"{blob['sharded_scale']['wall_s']:.1f}s > "
+                  f"{TIME_BUDGET_S:.0f}s budget", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"OK: scale cell {blob['sharded_scale']['wall_s']:.1f}s "
+              f"within {TIME_BUDGET_S:.0f}s budget")
+    return blob
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--no-scale", action="store_true",
+                        help="skip the 100k-job sharded cell (the "
+                             "bench-gate job gates the fast rows only)")
+    parser.add_argument("--out", default=BENCH_JSON)
+    args = parser.parse_args()
+    run(path=args.out, include_scale=not args.no_scale)
+    sys.exit(0)

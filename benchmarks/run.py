@@ -8,7 +8,9 @@ repo root so the perf trajectory is machine-trackable across PRs), the
 Fig. 9 reproduction (time / partitions / energy), the sensitivity ablation,
 the kernel bench (dense-vs-compact grid accounting, written alongside the
 matrix as ``BENCH_kernel.json`` — the kernel-level perf trajectory), the
-serving bench, then the roofline table (which needs
+serving bench, the fairness bench (per-tenant DRF/min-cost-flow accounting
+plus the sharded 100k-job fleet cell — ``BENCH_fairness.json``), then the
+roofline table (which needs
 ``benchmarks/results/dryrun.json`` from ``repro.launch.dryrun`` — skipped
 with a notice when absent, since the dry-run takes ~30 min of compiles).
 """
@@ -144,6 +146,13 @@ def main() -> int:
     print("# serving bench — multi-tenant engine")
     print("#" * 72)
     serving_bench.run()
+
+    print("#" * 72)
+    print("# fairness bench — DRF / min-cost flow + sharded fleet "
+          "-> BENCH_fairness.json")
+    print("#" * 72)
+    from benchmarks import fairness_bench
+    fairness_bench.run()
 
     print("#" * 72)
     print("# roofline (from dry-run artifacts)")

@@ -97,6 +97,12 @@ class TenantDemand:
     can actually use (``min(gemm_n, cols)`` for a layer; None = unbounded);
     ``min_cols`` is a reservation floor (memory footprint / SLA guarantee);
     ``tier`` is the SLA class — smaller is more important.
+
+    ``layer`` (optional) is the concrete next layer behind the demand, when
+    the caller has one — the scheduler's ``_demands`` fills it so
+    resource-vector policies (``repro.fairness``'s ``drf``) can derive bus
+    and SRAM footprints; width-only callers may leave it None and such
+    policies degrade to columns-only fairness.
     """
 
     name: str
@@ -104,6 +110,7 @@ class TenantDemand:
     width_demand: Optional[int] = None
     min_cols: int = 1
     tier: int = 0
+    layer: Optional[LayerShape] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -328,12 +335,30 @@ def register_policy(name: str):
     return _REGISTRY.register(name)
 
 
+def _load_plugin_policies() -> None:
+    """Import the optional policy packages that register on import.
+
+    `repro.fairness` lives outside this module so `repro.api` carries no
+    dependency on it; importing it here (idempotent, lazily, only when a
+    name lookup needs it) makes ``get_policy("drf")`` /
+    ``get_policy("min_cost_flow")`` work everywhere without eager imports.
+    """
+    import repro.fairness  # noqa: F401  (import registers drf/min_cost_flow)
+
+
 def list_policies() -> list[str]:
+    _load_plugin_policies()
     return _REGISTRY.names()
 
 
 def get_policy(name: str, **kwargs) -> PartitionPolicy:
-    return _REGISTRY.get(name, **kwargs)
+    try:
+        return _REGISTRY.get(name, **kwargs)
+    except ValueError:
+        if name in _REGISTRY.items or name in _REGISTRY.aliases:
+            raise  # known name, bad kwargs: not a loading problem
+        _load_plugin_policies()
+        return _REGISTRY.get(name, **kwargs)
 
 
 def resolve_policy(policy: "str | PartitionPolicy") -> PartitionPolicy:

@@ -204,7 +204,7 @@ class Session:
               keep_trace: bool = False, preemption=None,
               rebalance_interval: "float | None" = None,
               rebalancer="migrate_on_pressure", migration=None,
-              check_invariants: bool = False,
+              check_invariants: bool = False, fairness=False,
               **arrival_kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
@@ -234,6 +234,11 @@ class Session:
         on every node's scheduler — a debug net the serving hot path
         leaves off by default (the PR-5 incremental engine made every
         event O(live state delta); the check is O(tenants log tenants)).
+
+        ``fairness`` (``True`` or a
+        :class:`~repro.fairness.drf.ResourceModel`) arms per-tenant
+        fairness accounting — Jain index, per-model slowdown vs isolated
+        baselines, dominant-share series (`repro.fairness.accounting`).
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
@@ -244,7 +249,7 @@ class Session:
             keep_trace=keep_trace, preemption=preemption,
             rebalance_interval=rebalance_interval, rebalancer=rebalancer,
             migration=migration, check_invariants=check_invariants,
-            **arrival_kwargs).run()
+            fairness=fairness, **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

@@ -364,6 +364,17 @@ class DynamicScheduler:
     def pending(self) -> bool:
         return bool(self._events)
 
+    def inflight_allocations(self) -> dict[str, tuple[LayerShape, Partition]]:
+        """Snapshot of the live column occupancy: tenant -> (layer,
+        partition) for every launched-but-unfinished layer segment.
+
+        This is the fairness-accounting sampling surface
+        (`repro.fairness.accounting` reads dominant resource shares off it
+        at arrival instants); pure observation — the returned dict is a
+        copy, mutating it cannot corrupt scheduler state."""
+        return {name: (inf.layer, inf.part)
+                for name, inf in self._inflight.items()}
+
     def next_event_time(self) -> float | None:
         return self._events[0][0] if self._events else None
 
@@ -492,7 +503,8 @@ class DynamicScheduler:
             if d is None:
                 d = entry[3] = self._TenantDemand(
                     name=tenant, demand=float(layer.opr),
-                    width_demand=max(1, min(layer.gemm_n, cols)))
+                    width_demand=max(1, min(layer.gemm_n, cols)),
+                    layer=layer)
             out.append(d)
         return out
 

@@ -1,0 +1,35 @@
+"""`repro.fairness` — fairness policies and per-tenant accounting.
+
+The paper splits one array among tenants but never asks whether the split
+is *fair*.  This package frames multi-tenant partitioning as the cloud
+scheduling problem it is ("No DNN Left Behind", arXiv 1901.06887):
+
+* :mod:`repro.fairness.drf` — dominant-resource fairness
+  (:class:`DRFPolicy`, registered ``"drf"``) over per-tenant resource
+  vectors (columns × stage-in bus × SRAM, :class:`ResourceModel`);
+* :mod:`repro.fairness.flow` — Firmament-style min-cost max-flow
+  assignment (:class:`MinCostFlowPolicy`, registered ``"min_cost_flow"``)
+  priced by the batch cost oracle;
+* :mod:`repro.fairness.accounting` — Jain index, per-tenant slowdown vs
+  isolated :class:`~repro.api.session.BaselineRun`\\ s, and dominant-share
+  time series (:class:`FairnessAccounting`), surfaced through
+  ``TrafficSimulator(fairness=True)``.
+
+Importing the package registers both policies; `repro.api.policy` does so
+lazily on an unknown-name lookup, so ``get_policy("drf")`` works without
+any explicit import.
+"""
+
+from repro.fairness.accounting import (
+    FairnessAccounting,
+    FairnessReport,
+    jain_index,
+)
+from repro.fairness.drf import DRFPolicy, ResourceModel
+from repro.fairness.flow import MinCostFlowPolicy, min_cost_assignment
+
+__all__ = [
+    "DRFPolicy", "ResourceModel",
+    "MinCostFlowPolicy", "min_cost_assignment",
+    "FairnessAccounting", "FairnessReport", "jain_index",
+]

@@ -1,0 +1,160 @@
+"""Dominant-resource fairness over systolic-array resource vectors.
+
+The paper's policies divide one resource — array columns — and call the
+split fair when the widths match demand.  But a tenant's real footprint on
+the accelerator is a *vector*: the columns it occupies, the share of the
+stage-in DRAM bus its weight/IFMap transfers consume, and the SRAM the
+stationary weights pin while it runs.  A column-fair split can be wildly
+bus-unfair (a reduction-heavy layer moves far more bytes per column), which
+is exactly the regime DRF (Ghodsi et al., NSDI'11 — the Mesos allocator the
+SNIPPETS exemplar benchmarks against) was designed for: allocate by
+**progressive filling** so every tenant's *dominant* share — the max of its
+per-resource shares — stays as equal as floors and demands allow.
+
+:class:`ResourceModel` maps one layer to its per-column demand vector;
+:class:`DRFPolicy` (registered ``"drf"``) runs progressive filling over
+those vectors inside :meth:`~repro.api.policy.PartitionPolicy.widths`, so
+every consumer of the policy protocol — the dynamic scheduler, the traffic
+simulator, the mesh tenancy manager — gets DRF splits unchanged.
+
+DRF properties this implementation keeps (and tests assert):
+
+* sharing-incentive / envy-freeness at column granularity: allocation is
+  one column at a time to the tenant with the smallest dominant share
+  (ties → placement order), so no tenant can end two grants ahead of
+  another that wanted columns;
+* strategy-proofness against demand inflation: a tenant's dominant share
+  is *charged* per granted column, so overstating ``demand`` (Opr) does
+  not change its fill rate;
+* floors: ``min_cols`` reservations are granted first (admission by
+  :func:`repro.api.policy._admit_by_floor`, same as ``proportional``);
+* saturation: a tenant stops filling at its ``width_demand`` — leftover
+  columns keep filling the others.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+from repro.api.policy import (
+    PartitionPolicy,
+    TenantDemand,
+    _admit_by_floor,
+    _floor_cols,
+    register_policy,
+)
+from repro.core.dnng import LayerShape
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceModel:
+    """Per-column resource demand vector of one layer.
+
+    The three tracked resources, each normalized by a *capacity* so shares
+    are comparable across resources (DRF only ever compares ratios, so the
+    capacities are normalizers, not hard limits):
+
+    * **columns** — 1/``total_cols`` per granted column;
+    * **stage-in bus** — the layer's stage-in transfer time (weights K×M
+      plus IFMap T×K over the shared DRAM bus, the
+      :class:`~repro.core.scheduler.StageModel` cost), attributed evenly
+      across the columns the layer can use and normalized by ``window_s``
+      of bus time — the fraction of a scheduling window the tenant's
+      per-column traffic keeps the bus busy;
+    * **SRAM** — the stationary weights a granted column pins
+      (``weight_bytes / usable width``) over ``sram_bytes``.
+
+    Defaults follow the sim backend's constants (64 GB/s bus,
+    :class:`~repro.configs.systolic.SystolicConfig` 2-byte elements) with a
+    100 µs window ≈ one heavy-pool layer service and a 4 MiB per-array
+    weight SRAM.
+    """
+
+    bus_bytes_per_s: float = 64e9
+    window_s: float = 100e-6
+    sram_bytes: float = 4 * 2**20
+    bytes_per_elem: int = 2
+
+    def usable_width(self, layer: LayerShape, total_cols: int) -> int:
+        return max(1, min(layer.gemm_n, total_cols))
+
+    def per_col_vector(self, layer: LayerShape,
+                       total_cols: int) -> tuple[float, float, float]:
+        """(columns, bus, sram) consumed per granted column, normalized."""
+        width = self.usable_width(layer, total_cols)
+        stage_elems = layer.gemm_k * (layer.gemm_n + layer.gemm_m)
+        bus_s = stage_elems * self.bytes_per_elem / self.bus_bytes_per_s
+        return (1.0 / total_cols,
+                (bus_s / width) / self.window_s,
+                (layer.weight_bytes / width) / self.sram_bytes)
+
+    def dominant_per_col(self, layer: LayerShape, total_cols: int) -> float:
+        """Dominant-share increment of one granted column: all three
+        resources scale linearly with columns, so the dominant resource is
+        fixed per layer and the share after ``w`` columns is ``w`` times
+        this."""
+        return max(self.per_col_vector(layer, total_cols))
+
+
+@register_policy("drf")
+class DRFPolicy(PartitionPolicy):
+    """Dominant-resource-fair widths via progressive filling.
+
+    ``widths`` grants every admitted tenant its ``min_cols`` floor, then
+    hands out the remaining columns one at a time to the tenant with the
+    smallest dominant share (ties → placement order), each grant charging
+    the tenant its per-column dominant increment.  Tenants saturate at
+    ``width_demand``.  ``assign`` stays the paper's Task_Assignment
+    (heaviest → largest, whole grants): DRF is a *widths* policy, so the
+    scheduler's split step is where it acts.
+
+    Demands without a concrete ``layer`` (e.g. the mesh tenancy manager's
+    serving tenants) fall back to a columns-only vector — progressive
+    filling then degenerates to max-min fairness over columns, still a
+    valid DRF instance with one resource.
+    """
+
+    def __init__(self, resources: ResourceModel | None = None):
+        self.resources = resources or ResourceModel()
+
+    def _dominant_per_col(self, t: TenantDemand, total_cols: int) -> float:
+        if t.layer is None:
+            return 1.0 / max(1, total_cols)
+        return self.resources.dominant_per_col(t.layer, total_cols)
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        placed = _admit_by_floor(self.order(tenants), total_cols, _floor_cols)
+        if not placed:
+            return {}
+        ws = {t.name: _floor_cols(t) for t in placed}
+        cols_left = total_cols - sum(ws.values())
+        per_col = {t.name: self._dominant_per_col(t, total_cols)
+                   for t in placed}
+        caps = {}
+        for t in placed:
+            cap = t.width_demand if t.width_demand else total_cols
+            caps[t.name] = max(_floor_cols(t), min(cap, total_cols))
+        rank = {t.name: i for i, t in enumerate(placed)}
+        active = [t.name for t in placed if ws[t.name] < caps[t.name]]
+        # progressive filling, one column per step — O(cols × tenants),
+        # both small (≤1024 cols, co-residency-bounded tenant counts)
+        while cols_left > 0 and active:
+            name = min(active,
+                       key=lambda n: (ws[n] * per_col[n], rank[n]))
+            ws[name] += 1
+            cols_left -= 1
+            if ws[name] >= caps[name]:
+                active.remove(name)
+        return ws
+
+    def dominant_share(self, layer: Optional[LayerShape], cols: int,
+                       total_cols: int) -> float:
+        """Dominant share of a tenant holding ``cols`` columns for
+        ``layer`` — the accounting-side view (`repro.fairness.accounting`
+        samples it over the in-flight set), guaranteed consistent with the
+        shares :meth:`widths` equalizes."""
+        if layer is None:
+            return cols / max(1, total_cols)
+        return cols * self.resources.dominant_per_col(layer, total_cols)

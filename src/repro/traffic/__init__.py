@@ -11,15 +11,18 @@ with the partition policy re-running on every arrival and completion.
     res = TrafficSimulator(arr, policy="proportional").run()
     print(res.metrics.p99_latency_s, res.metrics.deadline_miss_rate)
 
-``arrivals``  — seeded Poisson / MMPP / diurnal / trace-replay job streams.
+``arrivals``  — seeded Poisson / MMPP / diurnal / trace-replay job streams
+plus ``batch_instance`` production-trace (Alibaba-style CSV) replay.
 ``simulator`` — the discrete-event loop + admission control + ServeResult.
+``sharded``   — pod-per-process fleet simulation, epoch-synced dispatch.
 ``metrics``   — p50/p95/p99, miss rate, goodput, queue depth, utilization.
-``cluster``   — N-array fleets with jsq / power-of-two-choices dispatch.
+``cluster``   — N-array fleets with jsq / p2c / round-robin dispatch.
 ``rebalance`` — cross-node tenant migration under a checkpoint-cost model.
 """
 
 from repro.traffic.arrivals import (
     ArrivalProcess,
+    BatchInstanceArrivals,
     DiurnalArrivals,
     Job,
     MMPPArrivals,
@@ -29,12 +32,14 @@ from repro.traffic.arrivals import (
     list_arrival_processes,
     register_arrivals,
     resolve_arrivals,
+    synth_batch_instance_rows,
 )
 from repro.traffic.cluster import (
     ArrayNode,
     Dispatcher,
     JoinShortestQueue,
     PowerOfTwoChoices,
+    RoundRobin,
     list_dispatchers,
     register_dispatcher,
     resolve_dispatcher,
@@ -54,16 +59,19 @@ from repro.traffic.rebalance import (
     register_rebalancer,
     resolve_rebalancer,
 )
+from repro.traffic.sharded import ShardedTrafficSimulator, serve_sharded
 from repro.traffic.simulator import ServeResult, TrafficSimulator, serve
 
 __all__ = [
     # arrivals
     "Job", "ArrivalProcess",
     "PoissonArrivals", "MMPPArrivals", "DiurnalArrivals", "TraceArrivals",
+    "BatchInstanceArrivals", "synth_batch_instance_rows",
     "register_arrivals", "get_arrival_process", "list_arrival_processes",
     "resolve_arrivals",
     # cluster
     "ArrayNode", "Dispatcher", "JoinShortestQueue", "PowerOfTwoChoices",
+    "RoundRobin",
     "register_dispatcher", "list_dispatchers", "resolve_dispatcher",
     # metrics
     "JobRecord", "TrafficMetrics", "percentile", "summarize", "split_by",
@@ -72,4 +80,5 @@ __all__ = [
     "register_rebalancer", "list_rebalancers", "resolve_rebalancer",
     # simulator
     "TrafficSimulator", "ServeResult", "serve",
+    "ShardedTrafficSimulator", "serve_sharded",
 ]

@@ -302,3 +302,22 @@ class PowerOfTwoChoices(Dispatcher):
         return i
     # choose_tracked: the base delegation is already O(1) per decision —
     # choose() only indexes the two sampled loads
+
+
+@register_dispatcher("rr")
+class RoundRobin(Dispatcher):
+    """Load-oblivious cyclic dispatch: arrival ``k`` goes to array
+    ``k mod N``.  Deliberately ignores both ``loads`` and ``rng`` — the
+    decision depends on nothing but the arrival index, which is what makes
+    it the sharded simulator's *exact-identity* routing mode
+    (`repro.traffic.sharded`): every pod derives the same decision with no
+    load exchange, so a sharded run reproduces the single-process run
+    byte-for-byte."""
+
+    def __init__(self):
+        self._next = 0
+
+    def choose(self, loads: Sequence[int], rng: random.Random) -> int:
+        i = self._next % len(loads)
+        self._next = i + 1
+        return i

@@ -90,6 +90,16 @@ class TrafficMetrics:
     # ServeResult.as_dict() appends them when the features are armed
     preemptions: int = 0
     migrations: int = 0
+    # fairness accounting (None unless the run armed it — see
+    # TrafficSimulator's ``fairness=`` flag); the as_dict() keys appear only
+    # when set, so pre-fairness records regenerate byte-identically.  The
+    # slowdown gate and the dominant-share gate are independent: the
+    # sharded simulator computes slowdowns from merged records but cannot
+    # sample a global in-flight share series.
+    jain_fairness: Optional[float] = None
+    per_tenant_slowdown: Optional[dict] = None
+    jain_dominant_share: Optional[float] = None
+    dominant_share_mean: Optional[dict] = None
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -102,7 +112,7 @@ class TrafficMetrics:
                 if self.jobs_arrived else 0.0)
 
     def as_dict(self) -> dict:
-        return {
+        out = {
             "jobs_arrived": self.jobs_arrived,
             "jobs_rejected": self.jobs_rejected,
             "jobs_completed": self.jobs_completed,
@@ -118,12 +128,25 @@ class TrafficMetrics:
             "utilization": self.utilization,
             "duration_s": self.duration_s,
         }
+        # fairness keys append AFTER the stable prefix, in a fixed order,
+        # only when the accounting ran (byte-stability contract — see
+        # tests/test_record_stability.py)
+        if self.jain_fairness is not None:
+            out["jain_fairness"] = self.jain_fairness
+            out["per_tenant_slowdown"] = dict(
+                sorted((self.per_tenant_slowdown or {}).items()))
+        if self.jain_dominant_share is not None:
+            out["jain_dominant_share"] = self.jain_dominant_share
+            out["dominant_share_mean"] = dict(
+                sorted((self.dominant_share_mean or {}).items()))
+        return out
 
 
 def summarize(records: Sequence[JobRecord], duration_s: float,
               pe_seconds_busy: float = 0.0, total_pes: int = 0,
               queue_depth_samples: Sequence[int] = (),
-              preemptions: int = 0, migrations: int = 0) -> TrafficMetrics:
+              preemptions: int = 0, migrations: int = 0,
+              fairness=None) -> TrafficMetrics:
     """Fold job records into :class:`TrafficMetrics`.
 
     ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
@@ -131,6 +154,11 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
     are dispatcher-queue depths observed at each arrival instant;
     ``preemptions``/``migrations`` are the runtime-adaptation counters
     accumulated by the scheduler and rebalancer.
+
+    ``fairness`` (optional, duck-typed so this module stays free of a
+    `repro.fairness` dependency) is a
+    :class:`~repro.fairness.accounting.FairnessReport`-shaped object; its
+    numbers populate the gated fairness fields.
     """
     lats = [r.latency for r in records if r.latency is not None]
     completed = [r for r in records if r.completed is not None]
@@ -154,6 +182,16 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
         duration_s=duration_s,
         preemptions=preemptions,
         migrations=migrations,
+        jain_fairness=(fairness.jain_fairness
+                       if fairness is not None else None),
+        per_tenant_slowdown=(dict(fairness.per_tenant_slowdown)
+                             if fairness is not None else None),
+        jain_dominant_share=(fairness.jain_dominant_share
+                             if fairness is not None else None),
+        dominant_share_mean=(
+            dict(fairness.dominant_share_mean)
+            if fairness is not None and fairness.dominant_share_mean
+            is not None else None),
     )
 
 

@@ -1,0 +1,410 @@
+"""Sharded fleet simulation: per-pod event loops, epoch-synced dispatch.
+
+:class:`~repro.traffic.simulator.TrafficSimulator` is a single event loop
+over the whole fleet — every arrival touches every node's scheduler, so a
+100k-job run over 256+ arrays plateaus around ~71k events/s of straight
+Python (BENCH_scale.json).  :class:`ShardedTrafficSimulator` splits the
+fleet into ``n_shards`` *pods* of disjoint :class:`ArrayNode` groups and
+runs each pod's event loop in its own process (``fork`` + pipes), synced
+only at **epoch** boundaries (every ``sync_every`` arrivals).
+
+The design is bulk-synchronous with *replicated routing*:
+
+* every pod holds the full global load vector, refreshed from node truth
+  at each epoch boundary, and **replays the routing decision for every
+  arrival itself** — dispatcher state (rr counter, p2c rng) and the
+  in-epoch load increments are identical in every pod, so all pods agree
+  on each job's target with zero per-arrival communication;
+* within an epoch the load vector only *increments* (each routed job
+  bumps its target); completions on other pods become visible at the next
+  boundary.  That staleness is the defined semantics of sharded dispatch
+  — and it is the same for every value of ``n_shards``;
+* each pod advances **its own** nodes to every global arrival instant and
+  records its local queued count, so the per-arrival queue-depth samples
+  sum element-wise to the exact fleet series.
+
+**Determinism contract** (exercised by ``tests/test_fairness.py``):
+
+1. results are invariant to ``n_shards`` and to ``parallel=True/False``
+   for *every* dispatcher — by induction, identical routing ⇒ identical
+   per-node event streams ⇒ identical boundary snapshots;
+2. with ``dispatch="rr"`` (load-oblivious round robin) the routing does
+   not read loads at all, so a sharded run is **byte-identical** to the
+   plain single-process :class:`TrafficSimulator` on the same stream —
+   records, metrics, depth samples, everything.  jsq/p2c read loads,
+   whose staleness differs from the single loop, so for those the
+   contract is (1) only.
+
+Not supported here: cross-node migration (``rebalance_interval``) — a
+rebalancer reads global node state mid-epoch, which is exactly what
+sharding removes — and ``keep_trace`` (per-node schedules stay in the
+worker processes).
+"""
+
+from __future__ import annotations
+
+import heapq
+import multiprocessing
+import random
+from typing import Sequence
+
+from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
+from repro.traffic.cluster import ArrayNode, resolve_dispatcher
+from repro.traffic.metrics import summarize
+from repro.traffic.simulator import ServeResult, _RecordBuilder
+
+
+class _RoutedLoads:
+    """The replicated global load view one pod routes against.
+
+    Duck-types the :class:`~repro.traffic.cluster.FleetLoads` surface
+    dispatchers read (``loads`` + ``min_index()``), with the same lazy
+    min-heap so jsq stays O(log N) per decision at 256+ arrays.  Within an
+    epoch loads only move via :meth:`bump`; :meth:`reset` installs the
+    boundary snapshot.
+    """
+
+    __slots__ = ("loads", "_heap")
+
+    def __init__(self, n: int):
+        self.loads = [0] * n
+        self._heap = [(0, i) for i in range(n)]
+
+    def reset(self, snapshot: Sequence[int]) -> None:
+        self.loads[:] = snapshot
+        self._heap[:] = [(load, i) for i, load in enumerate(self.loads)]
+        heapq.heapify(self._heap)
+
+    def bump(self, i: int) -> None:
+        self.loads[i] += 1
+        heapq.heappush(self._heap, (self.loads[i], i))
+
+    def min_index(self) -> int:
+        heap = self._heap
+        loads = self.loads
+        while True:
+            load, i = heap[0]
+            if loads[i] == load:
+                return i
+            heapq.heappop(heap)
+
+
+class _Pod:
+    """One shard: a contiguous node group + a full replica of the routing
+    state.  ``run_epoch`` processes a global arrival slice — routing every
+    job, executing only the owned ones — and returns the group's
+    in-system vector for the next boundary snapshot."""
+
+    def __init__(self, base: int, count: int, n_arrays: int, jobs, *,
+                 policy: str, backend: str, dispatch: str,
+                 max_concurrent: int, queue_cap: int, seed: int,
+                 preemption, check_invariants: bool):
+        from repro.api.backend import resolve_backend
+        from repro.api.policy import resolve_policy
+        self.base = base
+        self.count = count
+        self.jobs = jobs
+        bk = resolve_backend(backend)
+        pol = resolve_policy(policy)
+        time_fn = bk.time_fn()
+        stage = bk.stage_model()
+        self.nodes = [
+            ArrayNode(base + i, bk.array, time_fn, stage, pol,
+                      max_concurrent=max_concurrent, queue_cap=queue_cap,
+                      on_complete=self._on_complete,
+                      on_submit=self._on_submit,
+                      preemption=preemption,
+                      on_load_change=self._on_load_change,
+                      check_invariants=check_invariants)
+            for i in range(count)]
+        self.dispatcher = resolve_dispatcher(dispatch)
+        self.rng = random.Random(seed)
+        self.view = _RoutedLoads(n_arrays)
+        self._queued = [0] * count
+        self._queued_total = 0
+        self._builders: list = []          # (global job idx, builder)
+        self._by_name: dict = {}
+        self.depth_samples: list[int] = []
+
+    # -- node callbacks (same wiring as TrafficSimulator) -------------------
+    def _on_complete(self, node, tenant: str, t: float) -> None:
+        self._by_name[tenant].completed = t
+
+    def _on_submit(self, node, job: Job, t: float) -> None:
+        b = self._by_name[job.dnng.name]
+        b.submitted = t
+        b.array = node.index
+
+    def _on_load_change(self, node) -> None:
+        i = node.index - self.base
+        q = len(node.queue)
+        self._queued_total += q - self._queued[i]
+        self._queued[i] = q
+
+    # -- event loop ---------------------------------------------------------
+    def _advance(self, t: float) -> None:
+        for node in self.nodes:
+            sched = node.scheduler
+            events = sched._events
+            if events and events[0][0] <= t:
+                sched.run_until(t)
+
+    def run_epoch(self, lo: int, hi: int,
+                  snapshot: Sequence[int]) -> list[int]:
+        """Process global arrivals ``jobs[lo:hi]`` against ``snapshot``
+        boundary loads; return this group's in-system vector."""
+        self.view.reset(snapshot)
+        view = self.view
+        dispatcher = self.dispatcher
+        rng = self.rng
+        base, count = self.base, self.count
+        for idx in range(lo, hi):
+            job = self.jobs[idx]
+            target = dispatcher.choose_tracked(view, rng)
+            view.bump(target)
+            self._advance(job.arrival)
+            if base <= target < base + count:
+                b = _RecordBuilder(job)
+                self._builders.append((idx, b))
+                self._by_name[job.dnng.name] = b
+                status = self.nodes[target - base].offer(job)
+                if status != "rejected":
+                    b.array = target
+            self.depth_samples.append(self._queued_total)
+        return [n.in_system for n in self.nodes]
+
+    def finish(self) -> dict:
+        """Drain all owned queues and fold the pod's results."""
+        for node in self.nodes:
+            node.scheduler.run()
+        return {
+            "records": [(idx, b.build()) for idx, b in self._builders],
+            "depth_samples": self.depth_samples,
+            # per-node, not pre-summed: the coordinator adds them flat in
+            # global node order so the float total is byte-identical to
+            # the single-process left-to-right sum
+            "pe_busy": [n.scheduler.pe_seconds_busy for n in self.nodes],
+            "preemptions": sum(n.scheduler.n_preemptions
+                               for n in self.nodes),
+            "max_now": max(n.scheduler.now for n in self.nodes),
+        }
+
+
+def _pod_worker(pod: _Pod, epochs, conn) -> None:
+    """Child-process loop: one pod, driven over a pipe.  The pod and the
+    materialized job list arrive via ``fork`` (copy-on-write), so only the
+    small per-epoch snapshots and the final fold cross the pipe."""
+    try:
+        for lo, hi in epochs:
+            snapshot = conn.recv()
+            conn.send(pod.run_epoch(lo, hi, snapshot))
+        conn.send(pod.finish())
+    except BaseException as exc:   # surface the failure, don't hang the sync
+        conn.send(("__error__", repr(exc)))
+        raise
+    finally:
+        conn.close()
+
+
+class ShardedTrafficSimulator:
+    """Drive one arrival stream through a pod-sharded fleet.
+
+    Same surface as :class:`~repro.traffic.simulator.TrafficSimulator`
+    where the semantics overlap; ``policy``/``backend``/``dispatch`` must
+    be **registry names** (each pod constructs private instances — an
+    object could not be replicated identically), and
+    rebalancing/keep_trace are unsupported (see module docstring).
+
+    ``sync_every`` sets the epoch length in arrivals: smaller tracks
+    cross-pod load more tightly (jsq quality), larger syncs less.
+    ``parallel=False`` runs the identical epoch protocol in-process —
+    bit-identical results, useful for tests and when fork is unavailable.
+    """
+
+    def __init__(self, arrivals, policy: str = "equal",
+                 backend: str = "sim", n_arrays: int = 2,
+                 n_shards: int = 2, dispatch: str = "rr",
+                 max_concurrent: int = 4, queue_cap: int = 16,
+                 seed: int = 0, sync_every: int = 64,
+                 parallel: bool = True, preemption=None,
+                 check_invariants: bool = False, fairness=False,
+                 **arrival_kwargs):
+        from repro.core.scheduler import PreemptionModel
+        for label, v in (("policy", policy), ("backend", backend),
+                         ("dispatch", dispatch)):
+            if not isinstance(v, str):
+                raise ValueError(f"sharded runs need a registry name for "
+                                 f"{label}, got {type(v).__name__} (each "
+                                 f"pod builds its own instance)")
+        if not 1 <= n_shards <= n_arrays:
+            raise ValueError(f"need 1 <= n_shards <= n_arrays, got "
+                             f"n_shards={n_shards}, n_arrays={n_arrays}")
+        if sync_every < 1:
+            raise ValueError(f"sync_every must be >= 1, got {sync_every}")
+        if preemption is True:
+            preemption = PreemptionModel()
+        elif preemption is False:
+            preemption = None
+        self.preemption = preemption
+        if isinstance(arrivals, str):
+            arrival_kwargs.setdefault("seed", seed)
+        if isinstance(arrivals, (str, ArrivalProcess)):
+            self.arrivals = resolve_arrivals(arrivals, **arrival_kwargs)
+        else:
+            if arrival_kwargs:
+                raise ValueError("arrival kwargs need a registry name")
+            self.arrivals = arrivals
+        self.policy_name = policy
+        self.backend_name = backend
+        self.dispatch_name = dispatch
+        self.n_arrays = n_arrays
+        self.n_shards = n_shards
+        self.max_concurrent = max_concurrent
+        self.queue_cap = queue_cap
+        self.seed = seed
+        self.sync_every = sync_every
+        self.parallel = parallel
+        self.check_invariants = check_invariants
+        self.fairness = fairness
+
+    # -- pod/epoch layout ---------------------------------------------------
+    def _pod_spans(self) -> list[tuple[int, int]]:
+        n, s = self.n_arrays, self.n_shards
+        bounds = [p * n // s for p in range(s + 1)]
+        return [(bounds[p], bounds[p + 1] - bounds[p]) for p in range(s)]
+
+    def _epochs(self, n_jobs: int) -> list[tuple[int, int]]:
+        e = self.sync_every
+        return [(lo, min(lo + e, n_jobs)) for lo in range(0, n_jobs, e)]
+
+    def _make_pod(self, base: int, count: int, jobs) -> _Pod:
+        return _Pod(base, count, self.n_arrays, jobs,
+                    policy=self.policy_name, backend=self.backend_name,
+                    dispatch=self.dispatch_name,
+                    max_concurrent=self.max_concurrent,
+                    queue_cap=self.queue_cap, seed=self.seed,
+                    preemption=self.preemption,
+                    check_invariants=self.check_invariants)
+
+    # -- execution ----------------------------------------------------------
+    def run(self) -> ServeResult:
+        jobs = list(self.arrivals)
+        epochs = self._epochs(len(jobs))
+        pods = [self._make_pod(base, count, jobs)
+                for base, count in self._pod_spans()]
+        use_fork = self.parallel and self.n_shards > 1 and \
+            "fork" in multiprocessing.get_all_start_methods()
+        if use_fork:
+            folds = self._run_forked(pods, epochs)
+        else:
+            folds = self._run_serial(pods, epochs)
+        return self._fold(jobs, folds)
+
+    def _run_serial(self, pods, epochs) -> list[dict]:
+        snapshot = [0] * self.n_arrays
+        for lo, hi in epochs:
+            nxt: list[int] = []
+            for pod in pods:
+                nxt.extend(pod.run_epoch(lo, hi, snapshot))
+            snapshot = nxt
+        return [pod.finish() for pod in pods]
+
+    def _run_forked(self, pods, epochs) -> list[dict]:
+        ctx = multiprocessing.get_context("fork")
+        conns, procs = [], []
+        try:
+            for pod in pods:
+                parent, child = ctx.Pipe()
+                p = ctx.Process(target=_pod_worker,
+                                args=(pod, epochs, child), daemon=True)
+                p.start()
+                child.close()   # parent keeps its end only
+                conns.append(parent)
+                procs.append(p)
+            snapshot = [0] * self.n_arrays
+            for _lo, _hi in epochs:
+                for conn in conns:
+                    conn.send(snapshot)
+                nxt: list[int] = []
+                for conn in conns:
+                    nxt.extend(self._recv(conn))
+                snapshot = nxt
+            return [self._recv(conn) for conn in conns]
+        finally:
+            for conn in conns:
+                conn.close()
+            for p in procs:
+                p.join(timeout=30.0)
+                if p.is_alive():
+                    p.terminate()
+
+    @staticmethod
+    def _recv(conn):
+        msg = conn.recv()
+        if isinstance(msg, tuple) and len(msg) == 2 \
+                and msg[0] == "__error__":
+            raise RuntimeError(f"sharded pod failed: {msg[1]}")
+        return msg
+
+    def _fold(self, jobs, folds: list[dict]) -> ServeResult:
+        indexed = sorted((pair for f in folds for pair in f["records"]),
+                         key=lambda p: p[0])
+        records = tuple(r for _idx, r in indexed)
+        # element-wise sum of the per-pod queued series == the fleet series
+        depth = [0] * (len(folds[0]["depth_samples"]) if folds else 0)
+        for f in folds:
+            for i, d in enumerate(f["depth_samples"]):
+                depth[i] += d
+        last_arrival = jobs[-1].arrival if jobs else 0.0
+        end = max([f["max_now"] for f in folds]
+                  + [last_arrival, getattr(self.arrivals, "horizon", 0.0)])
+        fairness = None
+        if self.fairness:
+            fairness = self._fairness_report(jobs, records)
+        from repro.api.backend import resolve_backend
+        bk = resolve_backend(self.backend_name)
+        pes = bk.array.rows * bk.array.cols
+        metrics = summarize(
+            records, duration_s=end,
+            pe_seconds_busy=sum(busy for f in folds
+                                for busy in f["pe_busy"]),
+            total_pes=pes * self.n_arrays,
+            queue_depth_samples=depth,
+            preemptions=sum(f["preemptions"] for f in folds),
+            fairness=fairness)
+        return ServeResult(
+            policy=self.policy_name, backend=self.backend_name,
+            arrivals=getattr(self.arrivals, "name",
+                             type(self.arrivals).__name__),
+            dispatch=self.dispatch_name, n_arrays=self.n_arrays,
+            records=records, metrics=metrics,
+            preemption=(type(self.preemption).__name__
+                        if self.preemption is not None else None),
+            fairness=fairness)
+
+    def _fairness_report(self, jobs, records):
+        """Coordinator-side fairness fold: per-tenant slowdowns from the
+        merged records.  Dominant-share sampling needs a global in-flight
+        snapshot at every arrival — exactly the cross-pod state sharding
+        removes — so those report fields stay None here (the gated
+        ``jain_dominant_share`` keys never appear; see TrafficMetrics)."""
+        from repro.fairness.accounting import FairnessAccounting
+        from repro.fairness.drf import ResourceModel
+        from repro.api.backend import resolve_backend
+        bk = resolve_backend(self.backend_name)
+        resources = self.fairness \
+            if isinstance(self.fairness, ResourceModel) else None
+        acct = FairnessAccounting(
+            bk.array, bk.time_fn(), stage=bk.stage_model(),
+            n_arrays=self.n_arrays, resources=resources,
+            backend_name=getattr(bk, "name", type(bk).__name__))
+        for job in jobs:
+            acct.observe(job)
+        return acct.report(records)
+
+
+def serve_sharded(arrivals, policy: str = "equal", backend: str = "sim",
+                  **kwargs) -> ServeResult:
+    """Functional one-shot, mirroring :func:`repro.traffic.simulator.serve`."""
+    return ShardedTrafficSimulator(arrivals, policy=policy,
+                                   backend=backend, **kwargs).run()

@@ -53,6 +53,10 @@ class ServeResult:
     schedules: Optional[tuple[ScheduleResult, ...]] = None
     preemption: Optional[str] = None   # PreemptionModel summary, None = off
     rebalance: Optional[str] = None    # rebalancer name, None = off
+    # FairnessReport (repro.fairness.accounting) when the run armed
+    # fairness accounting; its headline numbers also live in the gated
+    # metrics fields — this keeps the raw dominant-share series
+    fairness: Optional[object] = None
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -136,6 +140,14 @@ class TrafficSimulator:
       :class:`~repro.core.partition.PartitionSet` tiling check on every
       node (a debug net the serving hot path leaves off — see
       :class:`~repro.core.scheduler.DynamicScheduler`).
+    * ``fairness`` — ``True`` (or a
+      :class:`~repro.fairness.drf.ResourceModel`) arms per-tenant
+      fairness accounting: Jain index + per-model slowdown vs isolated
+      baselines and a dominant-share series sampled at every arrival;
+      the numbers land in the gated
+      :class:`~repro.traffic.metrics.TrafficMetrics` fields and the raw
+      report on ``ServeResult.fairness``.  Off (default) keeps every
+      record byte-identical to pre-fairness runs.
     """
 
     def __init__(self, arrivals, policy="equal", backend="sim",
@@ -144,7 +156,7 @@ class TrafficSimulator:
                  seed: int = 0, keep_trace: bool = False,
                  preemption=None, rebalance_interval: float | None = None,
                  rebalancer="migrate_on_pressure", migration=None,
-                 check_invariants: bool = False,
+                 check_invariants: bool = False, fairness=False,
                  **arrival_kwargs):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
@@ -208,6 +220,19 @@ class TrafficSimulator:
         # delta-maintained fleet loads: dispatch reads this instead of
         # scanning every node per arrival (O(N) -> O(log N) for jsq)
         self.fleet = FleetLoads(self.nodes)
+        self.accounting = None
+        if fairness:
+            # local import: repro.traffic stays importable without
+            # repro.fairness until the feature is actually armed
+            from repro.fairness.accounting import FairnessAccounting
+            from repro.fairness.drf import ResourceModel
+            resources = fairness if isinstance(fairness, ResourceModel) \
+                else None
+            self.accounting = FairnessAccounting(
+                self.backend.array, time_fn, stage=stage,
+                n_arrays=n_arrays, resources=resources,
+                backend_name=getattr(self.backend, "name",
+                                     type(self.backend).__name__))
 
     def _on_load_change(self, node: ArrayNode) -> None:
         self.fleet.update(node)
@@ -265,6 +290,12 @@ class TrafficSimulator:
                 self.rebalancer.rebalance(self.nodes, job.arrival,
                                           periodic=False)
             depth_samples.append(self.fleet.queued_total)
+            if self.accounting is not None:
+                # fold this arrival into the fairness books: template for
+                # the isolated baseline + a dominant-share sample of the
+                # post-dispatch fleet occupancy (the paper's A_t instants)
+                self.accounting.observe(job)
+                self.accounting.sample(job.arrival, self.nodes)
         # arrivals exhausted: keep ticking while queues drain, then flush
         if next_tick is not None:
             while any(n.queue for n in self.nodes):
@@ -278,6 +309,8 @@ class TrafficSimulator:
                   + [last_arrival, getattr(self.arrivals, "horizon", 0.0)])
         records = tuple(b.build() for b in self._builders.values())
         pes = self.backend.array.rows * self.backend.array.cols
+        fairness = (self.accounting.report(records)
+                    if self.accounting is not None else None)
         metrics = summarize(
             records, duration_s=end,
             pe_seconds_busy=sum(n.scheduler.pe_seconds_busy
@@ -286,7 +319,8 @@ class TrafficSimulator:
             queue_depth_samples=depth_samples,
             preemptions=sum(n.scheduler.n_preemptions for n in self.nodes),
             migrations=(self.rebalancer.n_migrations
-                        if self.rebalancer is not None else 0))
+                        if self.rebalancer is not None else 0),
+            fairness=fairness)
         return ServeResult(
             policy=getattr(self.policy, "name", type(self.policy).__name__),
             backend=getattr(self.backend, "name",
@@ -302,7 +336,8 @@ class TrafficSimulator:
                         if self.preemption is not None else None),
             rebalance=(getattr(self.rebalancer, "name", None)
                        or type(self.rebalancer).__name__
-                       if self.rebalancer is not None else None))
+                       if self.rebalancer is not None else None),
+            fairness=fairness)
 
 
 def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:

@@ -1,0 +1,458 @@
+"""Tests for `repro.fairness` (DRF, min-cost flow, accounting), the
+``batch_instance`` production-trace loader, and the sharded fleet
+simulator's determinism contract.
+
+The sharded contract is the load-bearing part: `repro.traffic.sharded`
+claims (1) invariance to shard count and serial/parallel mode for every
+dispatcher, and (2) byte-identity with the single-process simulator under
+``rr`` dispatch.  Both are asserted here on real runs — the same flags
+BENCH_fairness.json pins via check_regression.
+"""
+
+import itertools
+import json
+import math
+import random
+
+import pytest
+
+from repro.core.dnng import LayerShape
+from repro.fairness import (
+    DRFPolicy,
+    FairnessAccounting,
+    MinCostFlowPolicy,
+    ResourceModel,
+    jain_index,
+    min_cost_assignment,
+)
+from repro.api.policy import TenantDemand, get_policy, list_policies
+
+
+def _layer(M=64, C=32, R=1, S=1, N=1, H=8, W=8, P=8, Q=8):
+    return LayerShape(M=M, N=N, C=C, R=R, S=S, H=H, W=W, P=P, Q=Q)
+
+
+# ---------------------------------------------------------------------------
+# jain index
+# ---------------------------------------------------------------------------
+
+class TestJainIndex:
+    def test_equal_is_one(self):
+        assert jain_index([3.0, 3.0, 3.0]) == pytest.approx(1.0)
+
+    def test_one_dominates_is_one_over_n(self):
+        assert jain_index([1.0, 0.0, 0.0, 0.0]) == pytest.approx(0.25)
+
+    def test_empty_is_nan(self):
+        assert math.isnan(jain_index([]))
+
+    def test_all_zero_is_one(self):
+        assert jain_index([0.0, 0.0]) == 1.0
+
+    def test_bounded(self):
+        rng = random.Random(0)
+        for _ in range(50):
+            xs = [rng.random() for _ in range(rng.randint(1, 9))]
+            j = jain_index(xs)
+            assert 1.0 / len(xs) - 1e-12 <= j <= 1.0 + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# DRF
+# ---------------------------------------------------------------------------
+
+class TestResourceModel:
+    def test_per_col_vector_positive(self):
+        vec = ResourceModel().per_col_vector(_layer(), 128)
+        assert len(vec) == 3 and all(v > 0 for v in vec)
+
+    def test_dominant_is_max(self):
+        res = ResourceModel()
+        layer = _layer(M=8, C=512)  # few columns, heavy per-column traffic
+        assert res.dominant_per_col(layer, 128) == \
+            max(res.per_col_vector(layer, 128))
+
+
+class TestDRFPolicy:
+    def test_registered_and_lazy_loaded(self):
+        assert "drf" in list_policies()
+        pol = get_policy("drf")
+        assert isinstance(pol, DRFPolicy) and pol.name == "drf"
+
+    def test_columns_only_fallback_is_equal_split(self):
+        # no layer on the demand -> single-resource DRF == max-min columns
+        ws = DRFPolicy().widths(128, [TenantDemand("a", demand=100.0),
+                                      TenantDemand("b", demand=1.0)])
+        assert ws == {"a": 64, "b": 64}
+
+    def test_widths_partition_exactly(self):
+        ts = [TenantDemand(f"t{i}", demand=float(i + 1),
+                           layer=_layer(M=32 * (i + 1), C=16 * (i + 1)))
+              for i in range(4)]
+        ws = DRFPolicy().widths(128, ts)
+        assert sum(ws.values()) == 128
+        assert all(w >= 1 for w in ws.values())
+
+    def test_floors_respected(self):
+        ts = [TenantDemand("a", demand=1.0, min_cols=48, layer=_layer()),
+              TenantDemand("b", demand=1.0, layer=_layer(M=512, C=1024))]
+        ws = DRFPolicy().widths(64, ts)
+        assert ws["a"] >= 48
+
+    def test_width_demand_saturates(self):
+        ts = [TenantDemand("a", demand=1.0, width_demand=8, layer=_layer()),
+              TenantDemand("b", demand=1.0, layer=_layer())]
+        ws = DRFPolicy().widths(128, ts)
+        assert ws["a"] == 8
+        assert ws["b"] == 120  # leftover keeps filling the unsaturated one
+
+    def test_dominant_shares_equalized(self):
+        # bus-heavy vs compute-light: DRF should grant FEWER columns to the
+        # tenant whose per-column dominant increment is larger, ending with
+        # near-equal dominant shares (within one grant's increment)
+        pol = DRFPolicy()
+        # huge stage traffic (K·(N+M_gemm)) over few columns: bus-bound
+        heavy = _layer(M=16, C=4096, P=32, Q=32)
+        light = _layer(M=512, C=8)
+        ts = [TenantDemand("heavy", demand=1.0, layer=heavy),
+              TenantDemand("light", demand=1.0, layer=light)]
+        ws = pol.widths(128, ts)
+        assert ws["heavy"] < ws["light"]
+        s_h = pol.dominant_share(heavy, ws["heavy"], 128)
+        s_l = pol.dominant_share(light, ws["light"], 128)
+        step = max(pol.resources.dominant_per_col(heavy, 128),
+                   pol.resources.dominant_per_col(light, 128))
+        assert abs(s_h - s_l) <= step + 1e-12
+
+    def test_strategy_proof_against_opr_inflation(self):
+        # demand (Opr) is not a DRF input: inflating it must not move widths
+        layer = _layer()
+        base = [TenantDemand("a", demand=1.0, layer=layer),
+                TenantDemand("b", demand=1.0, layer=_layer(M=16, C=256))]
+        puffed = [TenantDemand("a", demand=1e9, layer=layer), base[1]]
+        assert DRFPolicy().widths(64, base) == DRFPolicy().widths(64, puffed)
+
+    def test_deterministic(self):
+        ts = [TenantDemand(f"t{i}", demand=1.0,
+                           layer=_layer(M=17 * (i + 1), C=5 * (i + 2)))
+              for i in range(5)]
+        ws = [DRFPolicy().widths(96, ts) for _ in range(3)]
+        assert ws[0] == ws[1] == ws[2]
+
+
+# ---------------------------------------------------------------------------
+# min-cost flow
+# ---------------------------------------------------------------------------
+
+def _brute_min_cost(costs):
+    """Exhaustive max-cardinality min-cost matching total (finite costs)."""
+    n, m = len(costs), len(costs[0])
+    best = None
+    k = min(n, m)
+    for rows in itertools.combinations(range(n), k):
+        for cols in itertools.permutations(range(m), k):
+            total = sum(costs[i][j] for i, j in zip(rows, cols))
+            best = total if best is None else min(best, total)
+    return best
+
+
+class TestMinCostAssignment:
+    def test_matches_brute_force(self):
+        rng = random.Random(4)
+        for _ in range(25):
+            n, m = rng.randint(1, 4), rng.randint(1, 4)
+            costs = [[rng.uniform(0.0, 10.0) for _ in range(m)]
+                     for _ in range(n)]
+            pairs = min_cost_assignment(costs)
+            assert len(pairs) == min(n, m)
+            assert len({i for i, _ in pairs}) == len(pairs)
+            assert len({j for _, j in pairs}) == len(pairs)
+            total = sum(costs[i][j] for i, j in pairs)
+            assert total == pytest.approx(_brute_min_cost(costs))
+
+    def test_max_cardinality_beats_cost(self):
+        # matching both (cost 2+1=3) beats matching only the cheap one
+        inf = math.inf
+        assert min_cost_assignment([[2.0, inf], [1.0, 1.0]]) == \
+            [(0, 0), (1, 1)]
+
+    def test_inf_edges_forbidden(self):
+        inf = math.inf
+        assert min_cost_assignment([[inf, 2.0], [inf, 1.0]]) == [(1, 1)]
+        assert min_cost_assignment([[inf, inf]]) == []
+
+    def test_empty(self):
+        assert min_cost_assignment([]) == []
+
+    def test_deterministic_under_ties(self):
+        costs = [[1.0, 1.0], [1.0, 1.0]]
+        assert [min_cost_assignment(costs) for _ in range(3)] == \
+            [[(0, 0), (1, 1)]] * 3
+
+
+class TestMinCostFlowPolicy:
+    def test_registered(self):
+        assert "min_cost_flow" in list_policies()
+        pol = get_policy("min_cost_flow")
+        assert isinstance(pol, MinCostFlowPolicy)
+        assert pol.name == "min_cost_flow"
+
+    def test_bad_width_factor_rejected(self):
+        with pytest.raises(ValueError):
+            MinCostFlowPolicy(max_width_factor=0.5)
+        # a known name with bad kwargs must surface the constructor error,
+        # not an unknown-policy error (lazy-load guard in get_policy)
+        with pytest.raises(ValueError):
+            get_policy("min_cost_flow", max_width_factor=0.5)
+
+    def test_schedules_end_to_end(self):
+        from repro.api.backend import resolve_backend
+        from repro.core.scheduler import schedule_dynamic
+        from repro.sim.workloads import MODELS
+
+        b = resolve_backend("sim")
+        dnngs = [MODELS[n]() for n in ("MelodyLSTM", "DeepVoice", "NCF")]
+        res = schedule_dynamic(dnngs, b.array, b.time_fn(),
+                               stage=b.stage_model(),
+                               policy="min_cost_flow")
+        assert set(res.completion) == {g.name for g in dnngs}
+        assert res.makespan > 0
+
+
+# ---------------------------------------------------------------------------
+# fairness accounting
+# ---------------------------------------------------------------------------
+
+class TestFairnessAccounting:
+    def _serve(self, policy, **kwargs):
+        from repro.traffic import PoissonArrivals, TrafficSimulator
+        arr = PoissonArrivals(rate=2500.0, horizon=0.02, seed=7,
+                              pool="light", slo_s=0.02)
+        return TrafficSimulator(arr, policy=policy, backend="sim",
+                                n_arrays=2, seed=7, fairness=True,
+                                **kwargs).run()
+
+    def test_report_attached_and_gated_fields_set(self):
+        res = self._serve("drf")
+        rep = res.fairness
+        assert rep is not None
+        assert 0.0 < rep.jain_fairness <= 1.0 + 1e-12
+        assert rep.per_tenant_slowdown
+        assert all(s > 0 for s in rep.per_tenant_slowdown.values())
+        assert res.metrics.jain_fairness == rep.jain_fairness
+        assert rep.dominant_share_series  # sampled at every arrival
+
+    def test_dominant_share_gate(self):
+        res = self._serve("equal")
+        d = res.as_dict()
+        assert 0.0 < d["jain_dominant_share"] <= 1.0 + 1e-12
+        assert all(v >= 0 for v in d["dominant_share_mean"].values())
+
+    def test_baseline_memoized_per_model(self):
+        from repro.api.backend import resolve_backend
+        from repro.traffic import PoissonArrivals
+        b = resolve_backend("sim")
+        acct = FairnessAccounting(b.array, b.time_fn(),
+                                  stage=b.stage_model())
+        jobs = list(PoissonArrivals(rate=2000.0, horizon=0.01, seed=1,
+                                    pool="light"))
+        for job in jobs:
+            acct.observe(job)
+        models = {j.model for j in jobs}
+        assert all(acct.baseline(m) is acct.baseline(m) for m in models)
+        assert all(acct.isolated_s(m) > 0 for m in models)
+        assert acct.baseline("NoSuchModel") is None
+
+    def test_slowdown_is_latency_over_isolated(self):
+        res = self._serve("equal")
+        # recompute one model's slowdown from raw records + baselines
+        from repro.api.backend import resolve_backend
+        b = resolve_backend("sim")
+        acct = FairnessAccounting(b.array, b.time_fn(),
+                                  stage=b.stage_model())
+        by_model = {}
+        for r in res.records:
+            if r.latency is not None:
+                by_model.setdefault(r.model, []).append(r.latency)
+        model, lats = sorted(by_model.items())[0]
+        template = next(rec for rec in res.records if rec.model == model)
+        # rebuild the template DNNG the simulator observed
+        from repro.sim.workloads import MODELS
+        acct.observe(type("J", (), {
+            "model": model, "dnng": MODELS[model]().clone(arrival_time=0.0),
+        })())
+        want = sum(lats) / len(lats) / acct.isolated_s(model)
+        assert res.fairness.per_tenant_slowdown[model] == \
+            pytest.approx(want)
+        assert template is not None
+
+
+# ---------------------------------------------------------------------------
+# batch_instance trace loader
+# ---------------------------------------------------------------------------
+
+class TestBatchInstanceArrivals:
+    def _rows(self, n=200, seed=0):
+        from repro.traffic import synth_batch_instance_rows
+        return synth_batch_instance_rows(n, seed=seed)
+
+    def test_registry_and_shape(self):
+        from repro.traffic import resolve_arrivals
+        arr = resolve_arrivals("batch_instance", source=self._rows(),
+                               pool="heavy", seed=1)
+        jobs = list(arr)
+        assert jobs and arr.name == "batch_instance"
+        assert all(jobs[i].arrival <= jobs[i + 1].arrival
+                   for i in range(len(jobs) - 1))
+        assert jobs[0].job_id == 0
+        assert all(0.0 <= j.arrival < arr.horizon for j in jobs)
+
+    def test_non_terminated_rows_dropped(self):
+        from repro.traffic import BatchInstanceArrivals
+        rows = self._rows(400)
+        kept = BatchInstanceArrivals(rows, pool="light")
+        dropped = sum(1 for r in rows[1:] if ",Terminated," not in r)
+        assert dropped > 0   # the synth helper plants non-Terminated rows
+        assert len(list(kept)) == len(rows) - 1 - dropped
+        everything = BatchInstanceArrivals(
+            rows, pool="light",
+            keep_status=("Terminated", "Failed", "Running"))
+        assert len(list(everything)) == len(rows) - 1
+
+    def test_malformed_rows_skipped(self):
+        from repro.traffic import BatchInstanceArrivals
+        rows = self._rows(50) + ["bad,row", "i,j,1,Terminated,zzz,5,100,1"]
+        a = BatchInstanceArrivals(rows, pool="light")
+        b = BatchInstanceArrivals(self._rows(50), pool="light")
+        assert len(list(a)) == len(list(b))
+
+    def test_deterministic_and_seed_sensitive(self):
+        from repro.traffic import BatchInstanceArrivals
+        rows = self._rows()
+        def sig(a):
+            return [(j.arrival, j.model, j.tier) for j in a]
+
+        assert sig(BatchInstanceArrivals(rows, seed=3, pool="heavy")) == \
+            sig(BatchInstanceArrivals(rows, seed=3, pool="heavy"))
+        assert sig(BatchInstanceArrivals(rows, seed=3, pool="heavy")) != \
+            sig(BatchInstanceArrivals(rows, seed=4, pool="heavy"))
+
+    def test_tiers_follow_plan_cpu(self):
+        from repro.traffic import BatchInstanceArrivals
+        jobs = list(BatchInstanceArrivals(self._rows(300), pool="light",
+                                          slo_s=0.05, cpu_hi=100.0))
+        tiers = {j.tier for j in jobs}
+        assert tiers == {0, 1}   # synth mixes sub- and super-100 plan_cpu
+        for j in jobs:
+            slack = 0.05 * (1 + j.tier)
+            assert j.deadline - j.arrival == pytest.approx(slack)
+
+    def test_work_rank_maps_onto_pool(self):
+        from repro.traffic import BatchInstanceArrivals
+        from repro.sim.workloads import MODEL_POOLS
+        jobs = list(BatchInstanceArrivals(self._rows(300), pool="heavy"))
+        assert {j.model for j in jobs} <= set(MODEL_POOLS["heavy"])
+        assert len({j.model for j in jobs}) > 1
+
+    def test_file_source(self, tmp_path):
+        from repro.traffic import BatchInstanceArrivals
+        p = tmp_path / "trace.csv"
+        p.write_text("\n".join(self._rows(60)) + "\n")
+        assert [j.model for j in BatchInstanceArrivals(str(p),
+                                                       pool="light")] == \
+            [j.model for j in BatchInstanceArrivals(self._rows(60),
+                                                    pool="light")]
+
+    def test_unusable_input_rejected(self):
+        from repro.traffic import BatchInstanceArrivals
+        with pytest.raises(ValueError):
+            BatchInstanceArrivals(self._rows(20), time_scale=0.0)
+        with pytest.raises(ValueError):   # everything filtered out
+            BatchInstanceArrivals(self._rows(20), keep_status=("Nope",))
+
+    def test_serves_end_to_end(self):
+        from repro.traffic import TrafficSimulator, resolve_arrivals
+        arr = resolve_arrivals("batch_instance", source=self._rows(150),
+                               pool="light", seed=0)
+        res = TrafficSimulator(arr, policy="drf", backend="sim",
+                               n_arrays=2, seed=0).run()
+        assert res.metrics.jobs_arrived == len(list(arr))
+        assert res.metrics.jobs_completed > 0
+
+
+# ---------------------------------------------------------------------------
+# sharded fleet simulator
+# ---------------------------------------------------------------------------
+
+KW = dict(rate=3000.0, horizon=0.04, pool="light", slo_s=0.02)
+
+
+def _sharded(dispatch, n_shards, parallel, policy="drf", **extra):
+    from repro.traffic import ShardedTrafficSimulator
+    return ShardedTrafficSimulator(
+        "poisson", policy=policy, backend="sim", n_arrays=8,
+        n_shards=n_shards, dispatch=dispatch, seed=3, sync_every=16,
+        parallel=parallel, **KW, **extra).run()
+
+
+class TestShardedSimulator:
+    def test_rr_byte_identical_to_single_process(self):
+        from repro.traffic import TrafficSimulator
+        plain = TrafficSimulator("poisson", policy="drf", backend="sim",
+                                 n_arrays=8, dispatch="rr", seed=3,
+                                 **KW).run()
+        for n_shards, parallel in ((1, False), (2, False), (4, True),
+                                   (8, True)):
+            sh = _sharded("rr", n_shards, parallel)
+            assert sh.records == plain.records
+            assert sh.metrics == plain.metrics
+            assert json.dumps(sh.as_dict()) == json.dumps(plain.as_dict())
+
+    @pytest.mark.parametrize("dispatch", ["jsq", "p2c"])
+    def test_invariant_to_shards_and_mode(self, dispatch):
+        ref = _sharded(dispatch, 1, False)
+        for n_shards, parallel in ((2, False), (4, False), (4, True)):
+            sh = _sharded(dispatch, n_shards, parallel)
+            assert sh.records == ref.records
+            assert sh.metrics == ref.metrics
+
+    def test_depth_samples_sum_exactly(self):
+        # queue_depth_mean is derived from the per-arrival element-wise sum
+        # of pod-local samples; rr identity already pins it, this pins the
+        # jsq path (no single-process twin exists for stale-load routing)
+        a = _sharded("jsq", 2, False)
+        b = _sharded("jsq", 8, False)
+        assert a.metrics.queue_depth_mean == b.metrics.queue_depth_mean
+        assert a.metrics.queue_depth_max == b.metrics.queue_depth_max
+
+    def test_fairness_slowdowns_match_single_process(self):
+        # merged-record slowdowns must equal the single-loop computation
+        from repro.traffic import TrafficSimulator
+        plain = TrafficSimulator("poisson", policy="equal", backend="sim",
+                                 n_arrays=8, dispatch="rr", seed=3,
+                                 fairness=True, **KW).run()
+        sh = _sharded("rr", 4, False, policy="equal", fairness=True)
+        assert sh.metrics.jain_fairness == plain.metrics.jain_fairness
+        assert sh.metrics.per_tenant_slowdown == \
+            plain.metrics.per_tenant_slowdown
+        assert sh.metrics.jain_dominant_share is None
+
+    def test_validation(self):
+        from repro.traffic import ShardedTrafficSimulator
+        from repro.api.policy import resolve_policy
+        with pytest.raises(ValueError):
+            ShardedTrafficSimulator("poisson", n_arrays=2, n_shards=4,
+                                    **KW)
+        with pytest.raises(ValueError):
+            ShardedTrafficSimulator("poisson", n_arrays=4, n_shards=2,
+                                    sync_every=0, **KW)
+        with pytest.raises(ValueError):   # instances cannot be replicated
+            ShardedTrafficSimulator("poisson",
+                                    policy=resolve_policy("equal"),
+                                    n_arrays=4, n_shards=2, **KW)
+
+    def test_preemption_plumbs_through(self):
+        sh = _sharded("rr", 2, False, policy="deadline_preempt",
+                      preemption=True)
+        assert sh.preemption == "PreemptionModel"
+        assert sh.metrics.jobs_completed > 0

@@ -25,6 +25,10 @@ METRICS_KEYS = [
 ]
 SERVE_PREFIX_KEYS = ["policy", "backend", "arrivals", "dispatch",
                      "n_arrays"]
+# gated fairness keys (appear ONLY when the run armed fairness accounting,
+# AFTER the stable base keys; two independent gates — see TrafficMetrics)
+FAIRNESS_SLOWDOWN_KEYS = ["jain_fairness", "per_tenant_slowdown"]
+FAIRNESS_SHARE_KEYS = ["jain_dominant_share", "dominant_share_mean"]
 
 
 def _small_run(**kwargs):
@@ -52,6 +56,36 @@ class TestAsDictKeyOrder:
         assert list(res.as_dict()) == (
             SERVE_PREFIX_KEYS + METRICS_KEYS
             + ["preemption", "preemptions", "rebalance", "migrations"])
+
+    def test_fairness_keys_absent_when_disabled(self):
+        res = _small_run()
+        got = set(res.as_dict())
+        assert not got & set(FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS)
+
+    def test_fairness_keys_append_after_stable_base(self):
+        res = _small_run(fairness=True)
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS)
+
+    def test_fairness_does_not_perturb_base_metrics(self):
+        # arming the accounting is pure observation: every pre-existing
+        # key keeps the identical serialized value
+        plain = _small_run().as_dict()
+        fair = _small_run(fairness=True).as_dict()
+        assert json.dumps({k: fair[k] for k in plain}) == json.dumps(plain)
+
+    def test_sharded_sets_only_the_slowdown_gate(self):
+        # the sharded engine merges records (slowdown gate) but cannot
+        # sample a global in-flight share series (share gate stays shut)
+        from repro.traffic import ShardedTrafficSimulator
+        res = ShardedTrafficSimulator(
+            "poisson", policy="equal", backend="sim", n_arrays=2,
+            n_shards=2, dispatch="rr", max_concurrent=2, queue_cap=4,
+            seed=3, parallel=False, fairness=True,
+            rate=2000.0, horizon=0.01, pool="light", slo_s=0.01).run()
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS + FAIRNESS_SLOWDOWN_KEYS)
 
     def test_metrics_counters_stay_out_of_as_dict(self):
         m = TrafficMetrics(
@@ -107,3 +141,66 @@ class TestFleetLoadsEquivalence:
             want = jsq.choose([n.in_system for n in nodes], rng)
             assert fleet.min_index() == want
             assert jsq.choose_tracked(fleet, rng) == want
+
+    def test_heap_matches_linear_under_migration_churn(self):
+        # same equivalence, but against REAL ArrayNodes mutated through
+        # every load-changing surface: admission, queue promotion on
+        # completion, take_for_migration (queued AND pristine/withdraw
+        # paths) and admit_migrated — the hooks the rebalancer drives
+        import random
+
+        from repro.api.backend import resolve_backend
+        from repro.api.policy import resolve_policy
+        from repro.traffic.cluster import ArrayNode, FleetLoads
+
+        backend = resolve_backend("sim")
+        state = {}
+        nodes = [
+            ArrayNode(i, backend.array, backend.time_fn(),
+                      backend.stage_model(), resolve_policy("equal"),
+                      max_concurrent=2, queue_cap=3,
+                      on_complete=lambda node, tenant, t: None,
+                      on_load_change=lambda n: state["fleet"].update(n))
+            for i in range(4)]
+        fleet = state["fleet"] = FleetLoads(nodes)
+
+        def check():
+            assert fleet.loads == [n.in_system for n in nodes]
+            assert fleet.queued_total == sum(len(n.queue) for n in nodes)
+            assert fleet.min_index() == min(
+                range(len(nodes)), key=lambda i: (nodes[i].in_system, i))
+
+        jobs = list(PoissonArrivals(rate=4000.0, horizon=0.05, seed=11,
+                                    pool="light", slo_s=0.05))
+        rng = random.Random(5)
+        for job in jobs:
+            for n in nodes:   # advance to the arrival (fires completions)
+                if n.scheduler._events \
+                        and n.scheduler._events[0][0] <= job.arrival:
+                    n.scheduler.run_until(job.arrival)
+            check()
+            nodes[rng.randrange(4)].offer(job)
+            check()
+            if rng.random() < 0.4:
+                src = nodes[rng.randrange(4)]
+                if src.queue:                # a queued job…
+                    name = src.queue[-1].dnng.name
+                elif src.jobs:               # …or a maybe-pristine one
+                    name = next(iter(src.jobs))   # (withdraw path)
+                else:
+                    continue
+                taken = src.take_for_migration(name)
+                check()
+                if taken is None:
+                    continue
+                dst = next((n for n in nodes
+                            if n.scheduler.n_active < n.max_concurrent
+                            or len(n.queue) < n.queue_cap), None)
+                if dst is None:
+                    continue
+                dst.admit_migrated(taken, job.arrival,
+                                   job.arrival + 1e-4)
+                check()
+        for n in nodes:
+            n.scheduler.run()
+        check()
