@@ -25,7 +25,14 @@ root:
   must not drop, and the sharded-simulator identity flags must stay 1.
   The 100k-job sharded cell is wall-clock-bound and re-validated by the
   scale-bench CI job instead (its deterministic fields are committed in
-  the record; regeneration here skips it to keep the gate fast).
+  the record; regeneration here skips it to keep the gate fast);
+* ``BENCH_obs.json``     — the observability contract flags (observation
+  purity byte-identity, deterministic Perfetto export, one track per
+  node, tenant lanes, span/preempt/migrate content) are pinned at 1,
+  and the freshly measured armed-tracing overhead ratios (default and
+  span-source serving paths) must stay within the committed
+  ``overhead_budget``.  The informational audit ratio and CPU-seconds
+  fields are machine-dependent and not gated.
 
 Every comparison is printed as a metric-by-metric diff table; when
 ``$GITHUB_STEP_SUMMARY`` is set the table is also appended there as
@@ -223,6 +230,26 @@ def check_fairness(gate: Gate, committed: dict, fresh: dict) -> None:
         )
 
 
+def check_obs(gate: Gate, committed: dict, fresh: dict) -> None:
+    # contract flags are pinned at 1: purity/export/structure breakage is
+    # an engine-correctness regression, not drift
+    for key in sorted(committed["flags"]):
+        gate.check(
+            "obs contract",
+            key,
+            1.0,
+            float(fresh["flags"].get(key, 0)),
+            higher_is_better=True,
+        )
+    # the armed overhead is re-measured fresh and held to the *committed*
+    # budget (not the committed ratio — that would ratchet machine noise)
+    budget = committed["overhead_budget"]
+    for metric in ("overhead_ratio", "overhead_ratio_spans"):
+        gate.check(
+            "obs overhead", metric, budget, fresh[metric], higher_is_better=False
+        )
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument("--tolerance", type=float, default=0.02)
@@ -230,7 +257,13 @@ def main(argv=None) -> int:
 
     sys.path.insert(0, os.path.join(ROOT, "src"))
     sys.path.insert(0, ROOT)
-    from benchmarks import fairness_bench, kernel_bench, scale_bench, traffic_bench
+    from benchmarks import (
+        fairness_bench,
+        kernel_bench,
+        obs_bench,
+        scale_bench,
+        traffic_bench,
+    )
     from benchmarks.run import emit_bench_json
 
     gate = Gate(args.tolerance)
@@ -252,16 +285,23 @@ def main(argv=None) -> int:
             path=os.path.join(tmp, "fairness.json"),
             include_scale=False,  # wall-bound cell lives in scale-bench CI
         )
+        print("# regenerating BENCH_obs.json ...")
+        obs_path = os.path.join(tmp, "obs.json")
+        try:
+            fresh_obs = obs_bench.run(path=obs_path)
+        except SystemExit:
+            # the bench's own gate tripped; fold its record into the
+            # diff table anyway so the failure is itemized
+            fresh_obs = _load(obs_path)
 
     check_fig9(gate, _load(os.path.join(ROOT, "BENCH_fig9.json")), fresh_fig9)
-    check_traffic(
-        gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic
-    )
+    check_traffic(gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic)
     check_scale(gate, _load(os.path.join(ROOT, "BENCH_scale.json")), fresh_scale)
     check_kernel(gate, _load(os.path.join(ROOT, "BENCH_kernel.json")), fresh_kernel)
     check_fairness(
         gate, _load(os.path.join(ROOT, "BENCH_fairness.json")), fresh_fairness
     )
+    check_obs(gate, _load(os.path.join(ROOT, "BENCH_obs.json")), fresh_obs)
 
     print()
     print(gate.table())

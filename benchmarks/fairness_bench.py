@@ -245,6 +245,9 @@ def run(path: str = BENCH_JSON, include_scale: bool = True,
     with open(path, "w") as f:
         json.dump(blob, f, indent=1)
         f.write("\n")
+    from repro.obs.render import render_summary, snapshot_host_caches
+    print(render_summary(snapshot_host_caches(),
+                         title="cost-path caches (cumulative)"))
     print(f"wrote {path}")
     bad = [k for k, v in identity.items()
            if k not in ("jobs", "n_arrays") and v != 1]

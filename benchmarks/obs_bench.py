@@ -1,0 +1,341 @@
+"""Observability benchmark + gate — BENCH_obs.json.
+
+    PYTHONPATH=src python benchmarks/obs_bench.py
+
+Two contracts, one record:
+
+1. **Zero cost disabled, bounded cost armed.**  The traffic bench runs
+   obs-off and obs-armed (tracer + registry, the default bundle) on
+   identical streams; the armed overhead is gated at
+   ``OVERHEAD_BUDGET`` on both serving paths — the default
+   (``keep_trace=False``) and the span-source path (``keep_trace=True``,
+   where stage-in/compute/stage-out spans derive lazily from the
+   schedulers' per-layer records, so arming adds no per-layer work to
+   either side of the pair).  The estimator is deliberately
+   noise-hardened for shared CI runners: CPU time (``process_time``,
+   not wall — the instrumented code is single-threaded pure Python, so
+   CPU time bounds the added work without charging scheduler jitter),
+   samples alternated off/armed so slow machine phases hit both sides,
+   the gated ratio built from the *minimum* per side (timing noise
+   only ever adds, so min-of-``REPEATS`` is the standard timeit-style
+   floor estimate; the median of per-pair ratios is recorded alongside
+   as the informational central estimate), and the sample pool grown —
+   up to ``MAX_TRIES`` rounds — until the floor ratio clears the
+   budget: more samples only sharpen the floor estimate toward the true
+   overhead, while a genuine regression keeps the armed floor high no
+   matter how many samples land.  The obs-off JSON must be
+   byte-identical to the committed ``BENCH_traffic.json``, and the
+   armed JSON byte-identical to the obs-off one — observation purity,
+   down to serialization.  ``Observability(audit=True)`` (per-round
+   policy decision audits) is priced as the informational
+   ``overhead_ratio_audit`` — deliberately outside the budget, which is
+   why audits are opt-in.
+2. **The exported trace is real and deterministic.**  A bursty heavy-mix
+   fleet cell with preemption + migration armed exports a Chrome
+   trace-event / Perfetto JSON (written to
+   ``benchmarks/results/sample.perfetto-trace.json`` — load it at
+   ui.perfetto.dev); the bench asserts one process track per array node,
+   per-tenant thread lanes, stage-in/compute/stage-out/drain spans,
+   preempt/migrate instant markers, and that two independent runs of the
+   same cell export byte-identical traces.
+
+``flags`` fields are 0/1 and pinned at 1 by ``check_regression.py``;
+the fresh overhead ratios are gated against the committed
+``overhead_budget``; CPU-seconds fields are machine-dependent and
+informational only.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import io
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_obs.json")
+TRAFFIC_JSON = os.path.join(ROOT, "BENCH_traffic.json")
+SAMPLE_TRACE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)),
+    "results",
+    "sample.perfetto-trace.json",
+)
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (traffic_bench reuse) importable
+
+SEED = 0
+REPEATS = 7
+MAX_TRIES = 4
+OVERHEAD_BUDGET = 1.05
+TRACE_ARRAYS = 4
+TRACE_LOAD = 1.1
+TRACE_JOBS_PER_ARRAY = 60
+REBALANCE_INTERVAL_S = 1e-3
+
+
+def _timed_traffic(tmp: str, obs, keep_trace: bool) -> tuple[float, bytes]:
+    """One traffic-bench pass (stdout swallowed); CPU time + JSON bytes."""
+    import gc
+
+    from benchmarks import traffic_bench
+
+    path = os.path.join(tmp, "traffic.json")
+    gc.collect()  # collections triggered by a prior sample stay there
+    c0 = time.process_time()
+    with contextlib.redirect_stdout(io.StringIO()):
+        traffic_bench.run(path=path, obs=obs, keep_trace=keep_trace)
+    cpu = time.process_time() - c0
+    with open(path, "rb") as f:
+        return cpu, f.read()
+
+
+class _Pool:
+    """Accumulating off/armed CPU-sample pool for one configuration.
+
+    ``ratio`` is ``min(armed) / min(off)`` over every sample so far:
+    timing noise only ever adds, so each side's min converges on its
+    true floor as the pool grows, and the ratio on the true overhead —
+    while a genuine regression keeps the armed floor high no matter how
+    many samples land.  ``median`` (of per-pair ratios) is the
+    informational central estimate."""
+
+    def __init__(self, mk_obs, keep_trace: bool = False):
+        self.mk_obs = mk_obs
+        self.keep_trace = keep_trace
+        self.offs: list[float] = []
+        self.obss: list[float] = []
+        self.bytes_off = self.bytes_obs = b""
+
+    def extend(self, tmp: str, pairs: int) -> None:
+        for i in range(pairs):
+            if i % 2 == 0:  # alternate order: slow machine phases hit
+                first, second = None, self.mk_obs()  # both sides
+            else:
+                first, second = self.mk_obs(), None
+            for obs in (first, second):
+                c, blob = _timed_traffic(tmp, obs, self.keep_trace)
+                if obs is None:
+                    self.offs.append(c)
+                    self.bytes_off = blob
+                else:
+                    self.obss.append(c)
+                    self.bytes_obs = blob
+
+    @property
+    def ratio(self) -> float:
+        off = min(self.offs)
+        return min(self.obss) / off if off > 0 else float("inf")
+
+    @property
+    def median(self) -> float:
+        import statistics
+
+        return statistics.median(
+            b / a for a, b in zip(self.offs, self.obss)
+        )
+
+
+def measure_overhead(tmp: str) -> dict:
+    """The three paired ratios: default path, span-source path, audits.
+
+    The two gated pools keep growing (up to ``MAX_TRIES`` rounds of
+    ``REPEATS`` pairs) until their min-floor ratios clear the budget —
+    more samples only sharpen the floor estimate, they never hide a
+    real regression."""
+    from repro.obs import Observability
+
+    with open(TRAFFIC_JSON, "rb") as f:
+        committed = f.read()
+    pool = _Pool(Observability)
+    pool_spans = _Pool(Observability, keep_trace=True)
+    pool_audit = _Pool(lambda: Observability(audit=True))
+    rounds = 0
+    for attempt in range(MAX_TRIES):
+        pool.extend(tmp, REPEATS)
+        pool_spans.extend(tmp, REPEATS)
+        if attempt == 0:  # informational only: one round is enough
+            pool_audit.extend(tmp, REPEATS)
+        rounds = attempt + 1
+        if max(pool.ratio, pool_spans.ratio) <= OVERHEAD_BUDGET:
+            break
+        print(
+            f"round {rounds}/{MAX_TRIES}: floor ratio "
+            f"{max(pool.ratio, pool_spans.ratio):.4f} over budget "
+            "(machine noise?) — growing the sample pool"
+        )
+    cpu_off, cpu_obs = min(pool.offs), min(pool.obss)
+    print(
+        f"traffic bench min-of-{len(pool.offs)} cpu: off {cpu_off:.3f}s, "
+        f"armed {cpu_obs:.3f}s -> ratio {pool.ratio:.4f} "
+        f"(median {pool.median:.4f}), spans {pool_spans.ratio:.4f} "
+        f"(median {pool_spans.median:.4f}, budget {OVERHEAD_BUDGET:.2f}), "
+        f"audit {pool_audit.ratio:.4f} (informational)"
+    )
+    return {
+        "disabled_matches_committed": int(pool.bytes_off == committed),
+        "armed_matches_disabled": int(
+            pool.bytes_obs == pool.bytes_off
+            and pool_spans.bytes_obs == pool_spans.bytes_off
+        ),
+        "measure_rounds": rounds,
+        "cpu_off_s": cpu_off,
+        "cpu_obs_s": cpu_obs,
+        "overhead_ratio": pool.ratio,
+        "overhead_ratio_median": pool.median,
+        "overhead_ratio_spans": pool_spans.ratio,
+        "overhead_ratio_spans_median": pool_spans.median,
+        "overhead_ratio_audit": pool_audit.ratio,
+    }
+
+
+def _trace_cell() -> dict:
+    """The sample fleet cell: bursty heavy mix, preemption + migration,
+    per-layer schedules retained (the span source)."""
+    from benchmarks.traffic_bench import mean_service_s
+    from repro.traffic import TrafficSimulator, get_arrival_process
+
+    svc = mean_service_s("heavy")
+    slo = 3.0 * svc
+    rate = TRACE_ARRAYS * TRACE_LOAD / svc
+    arr = get_arrival_process(
+        "mmpp",
+        rate=rate,
+        horizon=TRACE_ARRAYS * TRACE_JOBS_PER_ARRAY / rate,
+        seed=SEED,
+        pool="heavy",
+        slo_s=slo,
+        burst_factor=6.0,
+    )
+    res = TrafficSimulator(
+        arr,
+        policy="deadline_preempt",
+        backend="sim",
+        n_arrays=TRACE_ARRAYS,
+        dispatch="jsq",
+        max_concurrent=4,
+        queue_cap=8,
+        seed=SEED,
+        preemption=True,
+        rebalance_interval=REBALANCE_INTERVAL_S,
+        keep_trace=True,
+        obs=True,
+    ).run()
+    return res.timeline.chrome_trace()
+
+
+def export_sample() -> dict:
+    """Run the trace cell twice, assert export determinism + structure,
+    write the sample Perfetto trace, return the record fields."""
+    trace_a = _trace_cell()
+    trace_b = _trace_cell()
+    dump_a = json.dumps(trace_a, sort_keys=True)
+    deterministic = int(dump_a == json.dumps(trace_b, sort_keys=True))
+    events = trace_a["traceEvents"]
+    pids = {e["pid"] for e in events if e["ph"] != "M"}
+    kinds: dict[str, int] = {}
+    spans = 0
+    for e in events:
+        if e["ph"] in ("X", "i"):
+            kinds[e["cat"]] = kinds.get(e["cat"], 0) + 1
+            spans += e["ph"] == "X"
+    lanes = {
+        (e["pid"], e["tid"])
+        for e in events
+        if e["ph"] != "M" and e["tid"] != 0
+    }
+    os.makedirs(os.path.dirname(SAMPLE_TRACE), exist_ok=True)
+    with open(SAMPLE_TRACE, "w") as f:
+        json.dump(trace_a, f, indent=1)
+        f.write("\n")
+    print(
+        f"sample trace: {len(events)} events ({spans} spans) over "
+        f"{len(pids)} node tracks, {len(lanes)} tenant lanes, "
+        f"{kinds.get('preempt', 0)} preempt + "
+        f"{kinds.get('migrate', 0)} migrate markers -> {SAMPLE_TRACE}"
+    )
+    return {
+        "export_deterministic": deterministic,
+        "one_track_per_node": int(pids == set(range(TRACE_ARRAYS))),
+        "has_spans": int(spans > 0),
+        "has_tenant_lanes": int(len(lanes) > 0),
+        "has_preempt_markers": int(kinds.get("preempt", 0) > 0),
+        "has_migrate_markers": int(kinds.get("migrate", 0) > 0),
+        "trace_events": len(events),
+        "trace_spans": spans,
+        "preempt_markers": kinds.get("preempt", 0),
+        "migrate_markers": kinds.get("migrate", 0),
+    }
+
+
+def run(path: str = BENCH_JSON) -> dict:
+    import tempfile
+
+    with tempfile.TemporaryDirectory() as tmp:
+        overhead = measure_overhead(tmp)
+    sample = export_sample()
+    flags = {
+        "disabled_matches_committed": overhead["disabled_matches_committed"],
+        "armed_matches_disabled": overhead["armed_matches_disabled"],
+        "export_deterministic": sample["export_deterministic"],
+        "one_track_per_node": sample["one_track_per_node"],
+        "has_spans": sample["has_spans"],
+        "has_tenant_lanes": sample["has_tenant_lanes"],
+        "has_preempt_markers": sample["has_preempt_markers"],
+        "has_migrate_markers": sample["has_migrate_markers"],
+    }
+    blob = {
+        "benchmark": "obs",
+        "backend": "sim",
+        "seed": SEED,
+        "overhead_budget": OVERHEAD_BUDGET,
+        "cpu_repeats": REPEATS,
+        "measure_rounds": overhead["measure_rounds"],
+        "flags": flags,
+        "trace": {
+            "n_arrays": TRACE_ARRAYS,
+            "events": sample["trace_events"],
+            "spans": sample["trace_spans"],
+            "preempt_markers": sample["preempt_markers"],
+            "migrate_markers": sample["migrate_markers"],
+        },
+        # -- informational (machine-dependent, not gated on bytes) --
+        "cpu_off_s": overhead["cpu_off_s"],
+        "cpu_obs_s": overhead["cpu_obs_s"],
+        "overhead_ratio": overhead["overhead_ratio"],
+        "overhead_ratio_median": overhead["overhead_ratio_median"],
+        "overhead_ratio_spans": overhead["overhead_ratio_spans"],
+        "overhead_ratio_spans_median": overhead[
+            "overhead_ratio_spans_median"
+        ],
+        "overhead_ratio_audit": overhead["overhead_ratio_audit"],
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    bad = [k for k, v in flags.items() if v != 1]
+    if bad:
+        print(f"FAIL: obs contract flags not 1: {bad}", file=sys.stderr)
+        raise SystemExit(1)
+    worst = max(blob["overhead_ratio"], blob["overhead_ratio_spans"])
+    if worst > OVERHEAD_BUDGET:
+        print(
+            f"FAIL: armed tracing overhead {worst:.4f}x exceeds the "
+            f"{OVERHEAD_BUDGET:.2f}x budget",
+            file=sys.stderr,
+        )
+        raise SystemExit(1)
+    print(
+        f"OK: overhead {blob['overhead_ratio']:.4f}x "
+        f"(spans {blob['overhead_ratio_spans']:.4f}x) within "
+        f"{OVERHEAD_BUDGET:.2f}x, all contract flags 1"
+    )
+    return blob
+
+
+if __name__ == "__main__":
+    run()
+    sys.exit(0)

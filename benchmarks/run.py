@@ -66,6 +66,25 @@ def emit_bench_json(path: str = BENCH_JSON) -> dict:
     return blob
 
 
+def _profile_one(label: str, fn, top: int, sort: str) -> "object":
+    """cProfile one bench entry point, print the hot-spot table and the
+    host cost-cache summary (obs registry renderer), return the Stats."""
+    import cProfile
+    import pstats
+
+    prof = cProfile.Profile()
+    prof.enable()
+    fn()
+    prof.disable()
+    stats = pstats.Stats(prof).sort_stats(sort)
+    print(f"\n# top {top} {sort} hot spots of {label}")
+    stats.print_stats(top)
+    from repro.obs.render import render_summary, snapshot_host_caches
+    print(render_summary(snapshot_host_caches(),
+                         title=f"host caches after {label} (cumulative)"))
+    return stats
+
+
 def profile_traffic(top: int = 20, sort: str = "cumulative") -> "object":
     """cProfile the open-loop traffic bench and print the ``top`` hot spots.
 
@@ -75,32 +94,59 @@ def profile_traffic(top: int = 20, sort: str = "cumulative") -> "object":
     to a scratch file so the committed BENCH_traffic.json is untouched.
     Returns the ``pstats.Stats`` for programmatic use (tests).
     """
-    import cProfile
-    import pstats
     import tempfile
 
     from benchmarks import traffic_bench
 
-    prof = cProfile.Profile()
     with tempfile.TemporaryDirectory() as tmp:
-        prof.enable()
-        traffic_bench.run(path=os.path.join(tmp, "traffic.json"))
-        prof.disable()
-    stats = pstats.Stats(prof).sort_stats(sort)
-    print(f"\n# top {top} {sort} hot spots of benchmarks/traffic_bench.py")
-    stats.print_stats(top)
-    return stats
+        return _profile_one(
+            "benchmarks/traffic_bench.py",
+            lambda: traffic_bench.run(path=os.path.join(tmp,
+                                                        "traffic.json")),
+            top, sort)
+
+
+def profile_suite(top: int = 20, sort: str = "cumulative") -> None:
+    """Hot-spot survey across the serving-side benches: traffic, fairness
+    (fast rows — the 100k sharded cell is the scale bench's job) and the
+    scale sweep (single repeat, no budget enforcement — profiling wall
+    times are not comparable to the committed ones).  Each table is
+    followed by the cumulative host cost-cache counters so cache-behavior
+    regressions show up next to the hot spots that caused them."""
+    import tempfile
+
+    from benchmarks import fairness_bench, scale_bench, traffic_bench
+
+    with tempfile.TemporaryDirectory() as tmp:
+        _profile_one(
+            "benchmarks/traffic_bench.py",
+            lambda: traffic_bench.run(path=os.path.join(tmp,
+                                                        "traffic.json")),
+            top, sort)
+        _profile_one(
+            "benchmarks/fairness_bench.py (fast rows)",
+            lambda: fairness_bench.run(
+                path=os.path.join(tmp, "fairness.json"),
+                include_scale=False),
+            top, sort)
+        _profile_one(
+            "benchmarks/scale_bench.py (1 repeat)",
+            lambda: scale_bench.run(
+                path=os.path.join(tmp, "scale.json"),
+                check_budget=False, time_traffic=False, repeats=1),
+            top, sort)
 
 
 def main() -> int:
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument(
         "--profile", action="store_true",
-        help="cProfile the traffic bench and print the top-20 cumulative "
-             "hot spots instead of running the full suite")
+        help="cProfile the traffic, fairness and scale benches and print "
+             "the top-20 cumulative hot spots of each (plus the host "
+             "cost-cache counters) instead of running the full suite")
     args = parser.parse_args()
     if args.profile:
-        profile_traffic()
+        profile_suite()
         return 0
     t0 = time.time()
     from benchmarks import (

@@ -17,11 +17,11 @@ vs p2c) on a 4-array fleet.
 
 Everything is seeded; two runs of this script are byte-identical.
 
-The run also reports end-to-end wall time and the ``ws_cost``/``layer_cost``
-LRU hit rates (stdout only — the JSON stays byte-stable): the scheduler
-re-prices the same (layer, partition) pairs on every arrival/completion
-rebalance, and the memoized cost path serves the vast majority of those
-oracle calls from cache.
+The run also reports end-to-end wall time and the host cost-cache hit
+rates via the `repro.obs` registry renderer (stdout only — the JSON stays
+byte-stable): the scheduler re-prices the same (layer, partition) pairs on
+every arrival/completion rebalance, and the memoized cost path serves the
+vast majority of those oracle calls from cache.
 """
 
 from __future__ import annotations
@@ -59,7 +59,19 @@ def mean_service_s(pool: str) -> float:
     return sum(times) / len(times)
 
 
-def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
+def run(pool: str = "light", path: str = BENCH_JSON, obs=None,
+        keep_trace: bool = False) -> dict:
+    """``obs=`` (None / True / an ``Observability``) arms tracing on every
+    cell — used by ``obs_bench.py`` to price the armed overhead.  The JSON
+    stays byte-identical either way: the timeline is detached before a
+    row serializes, so armed rows never even compute the gated ``obs``
+    digest (the bench measures instrumentation, not digest rendering).
+    ``keep_trace=True`` retains per-layer schedules on every node (the
+    obs span source) — obs_bench prices that path as a separate paired
+    ratio; ``as_dict`` never serializes schedules, so the JSON is
+    byte-identical either way."""
+    import dataclasses
+
     from repro.traffic import TrafficSimulator, get_arrival_process
 
     t_start = time.perf_counter()
@@ -83,10 +95,14 @@ def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
             for pol in POLICIES:
                 res = TrafficSimulator(
                     arr, policy=pol, backend="sim",
-                    max_concurrent=4, queue_cap=8, seed=SEED).run()
+                    max_concurrent=4, queue_cap=8, seed=SEED,
+                    obs=obs, keep_trace=keep_trace).run()
                 m = res.metrics
-                rows.append({"load": load, "rate_jobs_per_s": rate,
-                             "slo_s": slo, **res.as_dict()})
+                if res.timeline is not None:   # profiling aid, not an artifact
+                    res = dataclasses.replace(res, timeline=None)
+                row = {"load": load, "rate_jobs_per_s": rate,
+                       "slo_s": slo, **res.as_dict()}
+                rows.append(row)
                 print(f"{proc:>8}{pol:>14}{load:>6.1f}{m.jobs_arrived:>6}"
                       f"{m.rejection_rate*100:>6.1f}"
                       f"{m.p50_latency_s*1e3:>8.2f}"
@@ -107,10 +123,14 @@ def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
         res = TrafficSimulator(arr, policy="equal", backend="sim",
                                n_arrays=n_arrays, dispatch=dispatch,
                                max_concurrent=4, queue_cap=8,
-                               seed=SEED).run()
+                               seed=SEED, obs=obs,
+                               keep_trace=keep_trace).run()
         m = res.metrics
-        cluster_rows.append({"load": 0.9, "rate_jobs_per_s": rate,
-                             "slo_s": slo, **res.as_dict()})
+        if res.timeline is not None:
+            res = dataclasses.replace(res, timeline=None)
+        row = {"load": 0.9, "rate_jobs_per_s": rate,
+               "slo_s": slo, **res.as_dict()}
+        cluster_rows.append(row)
         print(f"{'poisson':>8}{'equal/' + dispatch:>14}{0.9:>6.1f}"
               f"{m.jobs_arrived:>6}{m.rejection_rate*100:>6.1f}"
               f"{m.p50_latency_s*1e3:>8.2f}{m.p95_latency_s*1e3:>8.2f}"
@@ -125,14 +145,10 @@ def run(pool: str = "light", path: str = BENCH_JSON) -> dict:
     with open(path, "w") as f:
         json.dump(blob, f, indent=1)
         f.write("\n")
-    from repro.core.dataflow import ws_cost_cache_stats
-    from repro.sim.systolic import layer_cost
-    ws, lc = ws_cost_cache_stats(), layer_cost.cache_info()
-    lc_total = lc.hits + lc.misses
-    print(f"end-to-end {time.perf_counter() - t_start:.2f}s; cost-path "
-          f"memoization: layer_cost {lc.hits}/{lc_total} hits "
-          f"({100 * lc.hits / lc_total if lc_total else 0:.1f}%), "
-          f"ws_cost {ws['hits']}/{ws['hits'] + ws['misses']} hits")
+    from repro.obs.render import render_summary, snapshot_host_caches
+    print(f"end-to-end {time.perf_counter() - t_start:.2f}s")
+    print(render_summary(snapshot_host_caches(),
+                         title="cost-path caches (cumulative)"))
     print(f"wrote {path}")
     return blob
 

@@ -1,0 +1,63 @@
+"""Export a Perfetto-loadable trace from a bursty heavy-mix serve run.
+
+The cell is deliberately hostile: an MMPP burst process over the heavy
+model pool at 4.4x the per-array service rate, deadline-driven preemption
+armed, and an aggressive rebalance cadence — so the exported timeline
+shows everything the tracer captures: per-tenant stage-in / compute /
+stage-out slices on each array node's track, drain spans where a
+preemption cut a segment short, and instant markers for every dispatch
+choice, preemption and cross-node migration.
+
+    PYTHONPATH=src python examples/trace_viewer.py
+    # then open trace_viewer.perfetto-trace.json at https://ui.perfetto.dev
+
+Spans derive from the scheduler's ``keep_trace=True`` records; per-job
+instants derive from the job records the run builds anyway — so the run
+itself pays almost nothing for the trace (see ``benchmarks/obs_bench.py``
+for the gated overhead numbers).
+"""
+
+from repro.api import Session, resolve_backend
+from repro.core.partition import Partition
+from repro.obs import Observability
+from repro.sim.workloads import MODEL_POOLS, MODELS
+
+OUT = "trace_viewer.perfetto-trace.json"
+
+
+def mean_service_s(pool):
+    """Mean full-array sequential time of one job from ``pool`` — the
+    load normaliser (arrival rate = per-array load / service time)."""
+    b = resolve_backend("sim")
+    time_fn, stage = b.time_fn(), b.stage_model()
+    full = Partition(rows=b.array.rows, col_start=0, cols=b.array.cols)
+    times = []
+    for name in MODEL_POOLS[pool]:
+        g = MODELS[name]()
+        times.append(sum(stage.stage_in_s(ls) + time_fn(ls, full)
+                         + stage.stage_out_s(ls) for ls in g.layers))
+    return sum(times) / len(times)
+
+
+svc = mean_service_s("heavy")
+rate = 4 * 1.1 / svc  # 1.1x load across 4 arrays
+
+res = Session(policy="deadline_preempt", backend="sim").serve(
+    "mmpp", rate=rate, horizon=240 / rate, seed=0,
+    pool="heavy", slo_s=3 * svc, burst_factor=6.0,
+    n_arrays=4, dispatch="jsq", max_concurrent=4, queue_cap=8,
+    preemption=True, rebalance_interval=1e-3,
+    keep_trace=True, obs=Observability(sample_every=1))
+
+print(res.timeline.render(title="bursty heavy mix, 4 arrays"))
+
+blob = res.timeline.write_chrome_trace(OUT)
+kinds = res.timeline.tracer.counts_by_kind()
+print(f"\nwrote {OUT}: {len(blob['traceEvents'])} trace events "
+      f"({kinds.get('preempt', 0)} preemptions, "
+      f"{kinds.get('migrate', 0)} migrations) "
+      f"-- open it at https://ui.perfetto.dev")
+
+with open("trace_viewer.timeline.csv", "w") as f:
+    f.write(res.timeline.timeline_csv())
+print("wrote trace_viewer.timeline.csv (per-node utilization/queue series)")

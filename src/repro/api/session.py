@@ -205,7 +205,7 @@ class Session:
               rebalance_interval: "float | None" = None,
               rebalancer="migrate_on_pressure", migration=None,
               check_invariants: bool = False, fairness=False,
-              **arrival_kwargs):
+              obs=None, **arrival_kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
         :class:`repro.traffic.ServeResult` (latency percentiles,
@@ -239,6 +239,16 @@ class Session:
         :class:`~repro.fairness.drf.ResourceModel`) arms per-tenant
         fairness accounting — Jain index, per-model slowdown vs isolated
         baselines, dominant-share series (`repro.fairness.accounting`).
+
+        ``obs`` (``True`` or a :class:`~repro.obs.Observability`) arms
+        structured tracing + the time-series metrics registry
+        (`repro.obs`): scheduler lifecycle spans, preemption/migration
+        markers, per-node/per-tenant series.  The collected state comes
+        back as ``ServeResult.timeline`` with terminal-render /
+        Perfetto-trace / CSV exporters.  Per-layer spans derive from the
+        scheduler's ``keep_trace=True`` records — pass both flags for a
+        span-level Perfetto timeline.  Pure observation: disabled adds
+        no work, armed never changes any serialized result byte.
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
@@ -249,7 +259,7 @@ class Session:
             keep_trace=keep_trace, preemption=preemption,
             rebalance_interval=rebalance_interval, rebalancer=rebalancer,
             migration=migration, check_invariants=check_invariants,
-            fairness=fairness, **arrival_kwargs).run()
+            fairness=fairness, obs=obs, **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

@@ -280,6 +280,12 @@ class DynamicScheduler:
       after every event (O(tenants log tenants) — a debug net, off by
       default on the serving hot path; :func:`schedule_dynamic` keeps it
       on for closed workloads).
+    * ``obs``             — a :class:`repro.obs.Observability` arms the
+      ring-buffered structured tracer on this scheduler: arrival /
+      completion / preemption instants, stage-in / compute / stage-out /
+      drain spans, and per-round policy decision audits.  ``node_index``
+      labels this scheduler's track in fleet traces.  Pure observation —
+      arming it never changes the event stream.
 
     The event engine is *incremental*: the ready set, per-tenant demand
     vectors, and DAG-predecessor tables are maintained by delta at the
@@ -294,7 +300,8 @@ class DynamicScheduler:
                  on_complete: Callable[[str, float], None] | None = None,
                  keep_trace: bool = True, start_time: float = 0.0,
                  preemption: "PreemptionModel | None" = None,
-                 check_invariants: bool = False):
+                 check_invariants: bool = False,
+                 obs=None, node_index: int = 0):
         # lazy import: repro.api builds on this module (no import cycle)
         from repro.api.policy import AssignContext, PartitionPolicy, \
             TenantDemand, resolve_policy
@@ -306,6 +313,14 @@ class DynamicScheduler:
         self.keep_trace = keep_trace
         self.preemption = preemption
         self.check_invariants = check_invariants
+        # observability (repro.obs.Observability) — pure observation: every
+        # emit below is behind an `is not None` guard and never touches
+        # event order, rng or scheduler state.  ``node_index`` labels this
+        # scheduler's track in fleet traces (ArrayNode passes its index).
+        self.node_index = node_index
+        self._tr = getattr(obs, "tracer", None)
+        self._audit = (self._tr is not None
+                       and bool(getattr(obs, "audit", False)))
         self.tenants: dict[str, _Tenant] = {}
         self.deadlines: dict[str, float] = {}
         self.pset = PartitionSet(array)
@@ -488,6 +503,9 @@ class DynamicScheduler:
             si_start=si_start, c_start=si_end, c_end=c_end,
             base_frac=base, share=share,
             resumed=layer_idx in t.done_frac, token=token)
+        # no tracer emit here: stage-in/compute/stage-out spans derive
+        # lazily from the keep_trace record (Tracer.attach) — re-recording
+        # them live would double the hot-path cost for zero information
         heapq.heappush(self._events, (c_end, next(self._seq), "cdone",
                                       (tenant, token)))
 
@@ -574,6 +592,15 @@ class DynamicScheduler:
         busy = pset.busy_view()
         ctx = self._ctx
         free = pset.free_partitions
+        audit = self._audit
+        if audit:
+            # pre-round snapshot for the decision audit: candidates the
+            # policy will score, the offered free widths, and the oracle
+            # memo size (probe count = its growth over the round)
+            cand = tuple((name, layer.name or f"L{idx}")
+                         for name, idx, layer in ready)
+            offer_cols = tuple(p.cols for p in free)
+            before = set(self._inflight)
         if not busy and len(free) == 1:
             if len(ready) == 1:
                 # Fig. 5 lines 5–6: single available task -> offer all PEs
@@ -585,21 +612,33 @@ class DynamicScheduler:
             for a in pol.assign(ready, offered, ctx):
                 got = pset.allocate_exact(a.tenant, a.partition)
                 self._launch(now, a.tenant, a.layer_index, a.layer, got)
-            return
-        # steady state: policy matches ready layers to merged free slices,
-        # one grant at a time (trimmed grants change the free list, so
-        # re-offer after every allocation).
-        while free and ready:
-            progressed = False
-            for a in pol.assign(ready, free, ctx):
-                got = pset.allocate_exact(a.tenant, a.partition)
-                self._launch(now, a.tenant, a.layer_index, a.layer, got)
-                progressed = True
-                break  # free list changed; re-sort and re-match
-            if not progressed:
-                break
-            free = pset.free_partitions
-            ready = self._ready_tenants(now)
+        else:
+            # steady state: policy matches ready layers to merged free
+            # slices, one grant at a time (trimmed grants change the free
+            # list, so re-offer after every allocation).
+            while free and ready:
+                progressed = False
+                for a in pol.assign(ready, free, ctx):
+                    got = pset.allocate_exact(a.tenant, a.partition)
+                    self._launch(now, a.tenant, a.layer_index, a.layer, got)
+                    progressed = True
+                    break  # free list changed; re-sort and re-match
+                if not progressed:
+                    break
+                free = pset.free_partitions
+                ready = self._ready_tenants(now)
+        if audit:
+            grants = tuple((name, inf.part.cols)
+                           for name, inf in self._inflight.items()
+                           if name not in before)
+            granted = {n for n, _c in grants}
+            self._tr.instant(
+                "decision", now, self.node_index, None,
+                (("ready", cand), ("free_cols", offer_cols),
+                 ("grants", grants),
+                 ("declined", tuple(n for n, _l in cand
+                                    if n not in granted)),
+                 ("oracle_probes", len(cost_cache))))
 
     def _stage_costs(self, layer: LayerShape) -> tuple[float, float]:
         """(stage_in_s, stage_out_s) memoized per layer shape — jobs of one
@@ -663,6 +702,13 @@ class DynamicScheduler:
                 compute_start=min(inf.c_start, now), compute_end=now,
                 fraction=frac_seg, resumed=inf.resumed,
                 preempted=True))
+        if self._tr is not None:
+            # emitted live (not derived from the keep_trace record) so the
+            # marker survives keep_trace=False bounded-memory runs; the
+            # partial compute span and drain window derive from the record
+            self._tr.instant("preempt", now, self.node_index, tenant,
+                             (("layer_index", inf.idx),
+                              ("fraction_done", inf.base_frac + frac_seg)))
         heapq.heappush(self._events, (dr_end, next(self._seq), "pfree",
                                       tenant))
 
@@ -683,6 +729,8 @@ class DynamicScheduler:
             # retired tenants never become ready again; drop them so the
             # ready scan stays O(live tenants) over open-loop horizons
             del self.tenants[tenant]
+            # no tracer emit here: completion instants derive lazily from
+            # the simulator's job records (Tracer.attach_source)
             if self.on_complete is not None:
                 self.on_complete(tenant, now)
         else:
@@ -705,6 +753,8 @@ class DynamicScheduler:
             self._mark_ready(payload, now)
         else:  # "arrive": the tenant's layers become schedulable now
             self._dirty = True
+            # no tracer emit here: arrival instants derive lazily from
+            # the simulator's job records (Tracer.attach_source)
             self._mark_ready(payload, now)
 
     def _step(self) -> None:

@@ -80,14 +80,18 @@ class FairnessAccounting:
     per job.  ``sample(now, nodes)`` (every arrival, optional) folds the
     fleet's in-flight allocations into per-model dominant shares,
     normalized by the fleet column count (``n_arrays ×`` per-array
-    capacity).  ``report(records)`` folds everything into a
-    :class:`FairnessReport`.
+    capacity); the retained series is bounded at ``max_samples`` points
+    by deterministic stride-doubling decimation, so open-ended serving
+    runs hold constant memory.  ``report(records)`` folds everything into
+    a :class:`FairnessReport`.
     """
 
     def __init__(self, array: ArrayShape, time_fn: TimeFn,
                  stage: StageModel | None = None, n_arrays: int = 1,
                  resources: ResourceModel | None = None,
-                 backend_name: str = ""):
+                 backend_name: str = "", max_samples: int = 8192):
+        if max_samples < 2:
+            raise ValueError(f"max_samples must be >= 2, got {max_samples}")
         self.array = array
         self.time_fn = time_fn
         self.stage = stage
@@ -96,7 +100,14 @@ class FairnessAccounting:
         self.backend_name = backend_name
         self._templates: dict = {}   # model -> DNNG (arrival_time 0)
         self._baselines: dict[str, BaselineRun] = {}
+        # bounded dominant-share reservoir: every stride-th offered sample
+        # is kept; at max_samples the odd-index points drop and the stride
+        # doubles — a uniform subsample with no RNG, so an open-ended run
+        # holds O(max_samples) memory yet report() statistics stay unbiased
         self._samples: list[tuple] = []
+        self.max_samples = max_samples
+        self._stride = 1
+        self._n_offered = 0
 
     # -- isolated baselines --------------------------------------------------
     def observe(self, job) -> None:
@@ -128,9 +139,11 @@ class FairnessAccounting:
         return base.schedule.makespan if base is not None else None
 
     # -- dominant-share sampling ---------------------------------------------
-    def sample(self, now: float, nodes) -> None:
+    def sample(self, now: float, nodes) -> dict[str, float]:
         """Record per-model dominant shares of the live fleet occupancy at
-        ``now`` (the paper's A_t arrival instants)."""
+        ``now`` (the paper's A_t arrival instants); returns the shares so
+        callers (the simulator's obs registry) can fold them elsewhere
+        without recomputing."""
         shares: dict[str, float] = {}
         total_cols = self.array.cols
         res = self.resources
@@ -141,7 +154,13 @@ class FairnessAccounting:
                 share = (part.cols * res.dominant_per_col(layer, total_cols)
                          / self.n_arrays)
                 shares[model] = shares.get(model, 0.0) + share
-        self._samples.append((now, tuple(sorted(shares.items()))))
+        if self._n_offered % self._stride == 0:
+            self._samples.append((now, tuple(sorted(shares.items()))))
+            if len(self._samples) >= self.max_samples:
+                del self._samples[1::2]
+                self._stride *= 2
+        self._n_offered += 1
+        return shares
 
     # -- folding -------------------------------------------------------------
     def report(self, records) -> FairnessReport:

@@ -137,6 +137,28 @@ class FusedGemmStats:
                 **self.accounting.as_dict()}
 
 
+def record_gemm_stats(registry, stats: FusedGemmStats) -> None:
+    """Fold one fused-call :class:`FusedGemmStats` into a
+    `repro.obs` :class:`~repro.obs.registry.MetricsRegistry`.
+
+    Block/traffic accounting accumulates as ``kernel.gemm.*`` counters
+    (monotone totals across calls); the chosen block geometry lands in
+    last-write gauges and the per-call schedule efficiency in a histogram,
+    so a serving run's kernel-side dead-work fraction shows up next to the
+    scheduler metrics in one ``res.timeline.render()``."""
+    registry.counter("kernel.gemm.calls").inc()
+    registry.gauge("kernel.gemm.block_t").set(stats.block_t)
+    registry.gauge("kernel.gemm.block_k").set(stats.block_k)
+    registry.gauge("kernel.gemm.block_n").set(stats.block_n)
+    registry.histogram("kernel.gemm.schedule_efficiency").observe(
+        stats.accounting.schedule_efficiency)
+    acc = stats.accounting
+    for key in ("blocks_total", "blocks_scheduled", "blocks_live",
+                "blocks_skipped", "x_bytes_fetched", "w_bytes_fetched",
+                "out_bytes_written"):
+        registry.counter(f"kernel.gemm.{key}").inc(getattr(acc, key))
+
+
 # ---------------------------------------------------------------------------
 # fused multi-tenant GEMM
 # ---------------------------------------------------------------------------

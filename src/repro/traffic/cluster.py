@@ -60,7 +60,7 @@ class ArrayNode:
                  keep_trace: bool = False,
                  preemption: PreemptionModel | None = None,
                  on_load_change: Callable[["ArrayNode"], None] | None = None,
-                 check_invariants: bool = False):
+                 check_invariants: bool = False, obs=None):
         if max_concurrent < 1 or queue_cap < 0:
             raise ValueError(f"need max_concurrent >= 1 (got {max_concurrent})"
                              f" and queue_cap >= 0 (got {queue_cap})")
@@ -80,7 +80,8 @@ class ArrayNode:
         self.scheduler = DynamicScheduler(
             array, time_fn, stage=stage, policy=policy,
             on_complete=self._job_done, keep_trace=keep_trace,
-            preemption=preemption, check_invariants=check_invariants)
+            preemption=preemption, check_invariants=check_invariants,
+            obs=obs, node_index=index)
 
     @property
     def in_system(self) -> int:

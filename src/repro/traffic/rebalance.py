@@ -77,6 +77,9 @@ class Rebalancer(abc.ABC):
     def __init__(self, migration: MigrationModel | None = None):
         self.migration = migration or MigrationModel()
         self.n_migrations = 0
+        # optional repro.obs.Observability, set by the traffic simulator;
+        # strategies emit a "migrate" instant marker per move through it
+        self.obs = None
 
     @abc.abstractmethod
     def rebalance(self, nodes: Sequence, now: float, periodic: bool = False) -> int:
@@ -148,6 +151,15 @@ class MigrateOnPressure(Rebalancer):
         delay = self.migration.migrate_s(job.dnng)
         target.admit_migrated(job, now, ready_at=now + delay)
         self.n_migrations += 1
+        tracer = getattr(self.obs, "tracer", None)
+        if tracer is not None:
+            tracer.instant(
+                "migrate",
+                now,
+                target.index,
+                name,
+                (("src", src.index), ("dst", target.index), ("delay_s", delay)),
+            )
         return True
 
     # -- the strategy -------------------------------------------------------

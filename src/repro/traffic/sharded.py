@@ -98,7 +98,7 @@ class _Pod:
     def __init__(self, base: int, count: int, n_arrays: int, jobs, *,
                  policy: str, backend: str, dispatch: str,
                  max_concurrent: int, queue_cap: int, seed: int,
-                 preemption, check_invariants: bool):
+                 preemption, check_invariants: bool, obs_cfg=None):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
         self.base = base
@@ -108,6 +108,19 @@ class _Pod:
         pol = resolve_policy(policy)
         time_fn = bk.time_fn()
         stage = bk.stage_model()
+        # pod-local observability: each pod owns a private bundle (built
+        # from the coordinator's arm flags — an object could not cross
+        # fork + pipe), folded back picklably via finish()["obs"] and
+        # merged by the coordinator
+        self.obs = None
+        self._tracer = None
+        self._registry = None
+        self._node_series = None
+        if obs_cfg is not None:
+            from repro.obs import Observability
+            self.obs = Observability(**obs_cfg)
+            self._tracer = self.obs.tracer
+            self._registry = self.obs.registry
         self.nodes = [
             ArrayNode(base + i, bk.array, time_fn, stage, pol,
                       max_concurrent=max_concurrent, queue_cap=queue_cap,
@@ -115,8 +128,14 @@ class _Pod:
                       on_submit=self._on_submit,
                       preemption=preemption,
                       on_load_change=self._on_load_change,
-                      check_invariants=check_invariants)
+                      check_invariants=check_invariants, obs=self.obs)
             for i in range(count)]
+        if self._registry is not None:
+            reg = self._registry
+            self._node_series = [
+                (reg.series(f"node{base + i}.in_system"),
+                 reg.series(f"node{base + i}.queue_depth"))
+                for i in range(count)]
         self.dispatcher = resolve_dispatcher(dispatch)
         self.rng = random.Random(seed)
         self.view = _RoutedLoads(n_arrays)
@@ -170,6 +189,20 @@ class _Pod:
                 status = self.nodes[target - base].offer(job)
                 if status != "rejected":
                     b.array = target
+                # owned arrivals only: each dispatch is emitted by exactly
+                # one pod, so merged counters/traces match a global view
+                if self._tracer is not None:
+                    self._tracer.instant(
+                        "dispatch", job.arrival, target, job.dnng.name,
+                        (("status", status), ("tier", job.tier)))
+                if self._registry is not None:
+                    self._registry.counter("serve.arrivals").inc()
+                    self._registry.counter(
+                        f"serve.dispatch.{status}").inc()
+                    for node, (s_in, s_q) in zip(self.nodes,
+                                                 self._node_series):
+                        s_in.sample(job.arrival, node.in_system)
+                        s_q.sample(job.arrival, len(node.queue))
             self.depth_samples.append(self._queued_total)
         return [n.in_system for n in self.nodes]
 
@@ -177,7 +210,17 @@ class _Pod:
         """Drain all owned queues and fold the pod's results."""
         for node in self.nodes:
             node.scheduler.run()
+        if self._registry is not None:
+            reg = self._registry
+            reg.counter("sched.events").inc(
+                sum(n.scheduler.n_events for n in self.nodes))
+            reg.counter("sched.preemptions").inc(
+                sum(n.scheduler.n_preemptions for n in self.nodes))
+            reg.counter("sched.completions").inc(
+                sum(1 for _idx, b in self._builders
+                    if b.completed is not None))
         return {
+            "obs": self.obs.state() if self.obs is not None else None,
             "records": [(idx, b.build()) for idx, b in self._builders],
             "depth_samples": self.depth_samples,
             # per-node, not pre-summed: the coordinator adds them flat in
@@ -219,6 +262,14 @@ class ShardedTrafficSimulator:
     cross-pod load more tightly (jsq quality), larger syncs less.
     ``parallel=False`` runs the identical epoch protocol in-process —
     bit-identical results, useful for tests and when fork is unavailable.
+
+    ``obs`` (``True`` or a :class:`~repro.obs.Observability`) arms
+    observability per pod: each pod runs a private tracer/registry replica
+    (same arm flags and caps), returns its picklable state with the final
+    fold, and the coordinator merges everything into one
+    ``ServeResult.timeline`` — counters add, series interleave, trace
+    rings merge by timestamp.  Owned arrivals only are counted per pod, so
+    merged totals match a global view.
     """
 
     def __init__(self, arrivals, policy: str = "equal",
@@ -228,7 +279,7 @@ class ShardedTrafficSimulator:
                  seed: int = 0, sync_every: int = 64,
                  parallel: bool = True, preemption=None,
                  check_invariants: bool = False, fairness=False,
-                 **arrival_kwargs):
+                 obs=None, **arrival_kwargs):
         from repro.core.scheduler import PreemptionModel
         for label, v in (("policy", policy), ("backend", backend),
                          ("dispatch", dispatch)):
@@ -266,6 +317,12 @@ class ShardedTrafficSimulator:
         self.parallel = parallel
         self.check_invariants = check_invariants
         self.fairness = fairness
+        # coordinator-side bundle: pods run private replicas (same arm
+        # flags), whose picklable states fold into this one at _fold time
+        self._obs = None
+        if obs:
+            from repro.obs import resolve_obs
+            self._obs = resolve_obs(obs)
 
     # -- pod/epoch layout ---------------------------------------------------
     def _pod_spans(self) -> list[tuple[int, int]]:
@@ -278,13 +335,27 @@ class ShardedTrafficSimulator:
         return [(lo, min(lo + e, n_jobs)) for lo in range(0, n_jobs, e)]
 
     def _make_pod(self, base: int, count: int, jobs) -> _Pod:
+        obs_cfg = None
+        if self._obs is not None:
+            o = self._obs
+            obs_cfg = {
+                "tracer": o.tracer is not None,
+                "metrics": o.registry is not None,
+                "audit": bool(o.audit),
+                "max_events": (o.tracer.max_events
+                               if o.tracer is not None else 65536),
+                "max_samples": (o.registry.max_samples
+                                if o.registry is not None else 4096),
+                "sample_every": o.sample_every,
+            }
         return _Pod(base, count, self.n_arrays, jobs,
                     policy=self.policy_name, backend=self.backend_name,
                     dispatch=self.dispatch_name,
                     max_concurrent=self.max_concurrent,
                     queue_cap=self.queue_cap, seed=self.seed,
                     preemption=self.preemption,
-                    check_invariants=self.check_invariants)
+                    check_invariants=self.check_invariants,
+                    obs_cfg=obs_cfg)
 
     # -- execution ----------------------------------------------------------
     def run(self) -> ServeResult:
@@ -372,6 +443,13 @@ class ShardedTrafficSimulator:
             queue_depth_samples=depth,
             preemptions=sum(f["preemptions"] for f in folds),
             fairness=fairness)
+        timeline = None
+        if self._obs is not None:
+            for f in folds:
+                if f.get("obs") is not None:
+                    self._obs.absorb(f["obs"])
+            from repro.obs import Timeline
+            timeline = Timeline(self._obs)
         return ServeResult(
             policy=self.policy_name, backend=self.backend_name,
             arrivals=getattr(self.arrivals, "name",
@@ -380,7 +458,7 @@ class ShardedTrafficSimulator:
             records=records, metrics=metrics,
             preemption=(type(self.preemption).__name__
                         if self.preemption is not None else None),
-            fairness=fairness)
+            fairness=fairness, timeline=timeline)
 
     def _fairness_report(self, jobs, records):
         """Coordinator-side fairness fold: per-tenant slowdowns from the

@@ -57,6 +57,10 @@ class ServeResult:
     # fairness accounting; its headline numbers also live in the gated
     # metrics fields — this keeps the raw dominant-share series
     fairness: Optional[object] = None
+    # repro.obs.Timeline when the run armed observability (obs=):
+    # the collected tracer + time-series registry, with exporter
+    # shortcuts (render / chrome trace / CSV); None = obs disabled
+    timeline: Optional[object] = None
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -79,9 +83,10 @@ class ServeResult:
     def as_dict(self) -> dict:
         """Machine-readable summary (the BENCH_traffic.json row format).
 
-        The ``preemptions``/``migrations`` counters appear only when the
-        corresponding feature was enabled, so records from runs predating
-        the feature regenerate byte-identically.
+        The ``preemptions``/``migrations`` counters — and the ``obs``
+        digest — appear only when the corresponding feature was enabled,
+        so records from runs predating the features regenerate
+        byte-identically.
         """
         out = {
             "policy": self.policy,
@@ -97,11 +102,17 @@ class ServeResult:
         if self.rebalance is not None:
             out["rebalance"] = self.rebalance
             out["migrations"] = self.metrics.migrations
+        if self.timeline is not None:
+            out["obs"] = self.timeline.summary()
         return out
 
 
 class _RecordBuilder:
-    __slots__ = ("job", "array", "submitted", "completed")
+    # dispatch_node/status0 are assigned only when tracing is armed
+    # (two attribute stores per arrival — the tracer's entire hot-path
+    # cost); `_derive_job_instants` reads them back lazily
+    __slots__ = ("job", "array", "submitted", "completed",
+                 "dispatch_node", "status0")
 
     def __init__(self, job: Job):
         self.job = job
@@ -114,6 +125,45 @@ class _RecordBuilder:
                          tier=self.job.tier, arrival=self.job.arrival,
                          deadline=self.job.deadline, array=self.array,
                          submitted=self.submitted, completed=self.completed)
+
+
+def _derive_job_instants(builders: dict) -> list[tuple]:
+    """Convert the run's job-record builders into raw tracer instants.
+
+    Registered via ``Tracer.attach_source`` at end of run and evaluated
+    only when the trace is read — the serving loop itself records
+    nothing per job.  Kinds match ``repro.obs.tracer`` constants:
+    ``dispatch`` at the arrival instant on the dispatcher's chosen node
+    (with the offer status and tier), ``arrive`` at the (last)
+    scheduler-submission instant, ``complete`` at the completion
+    instant.  A migrated job carries its final submission here — the
+    hop itself is a live ``migrate`` marker from the rebalancer."""
+    out = []
+    for name, b in builders.items():
+        job = b.job
+        t = job.arrival
+        out.append(("dispatch", t, t, b.dispatch_node, name,
+                    (("status", b.status0), ("tier", job.tier))))
+        s = b.submitted
+        if s is not None:
+            out.append(("arrive", s, s, b.array, name, ()))
+        c = b.completed
+        if c is not None:
+            out.append(("complete", c, c, b.array, name, ()))
+    return out
+
+
+def _host_oracle_calls() -> int:
+    """Cumulative host-side cost-oracle invocations (memo hits + misses).
+
+    The memo counters are process-global (``lru_cache`` has no per-run
+    view), so :meth:`TrafficSimulator.run` snapshots a delta around its
+    event loop to report oracle calls per scheduler event."""
+    from repro.core.dataflow import ws_cost_cache_stats
+    from repro.sim.systolic import layer_cost
+    ws = ws_cost_cache_stats()
+    info = layer_cost.cache_info()
+    return ws["hits"] + ws["misses"] + info.hits + info.misses
 
 
 class TrafficSimulator:
@@ -148,6 +198,15 @@ class TrafficSimulator:
       :class:`~repro.traffic.metrics.TrafficMetrics` fields and the raw
       report on ``ServeResult.fairness``.  Off (default) keeps every
       record byte-identical to pre-fairness runs.
+    * ``obs`` — ``True`` (or a :class:`~repro.obs.Observability`) arms
+      structured tracing + the time-series metrics registry across the
+      whole run: scheduler lifecycle spans and preemption/migration
+      markers in the ring-buffered tracer, per-node/per-tenant series
+      (utilization, queue depth, ready-set size, bus occupancy, dominant
+      share, slowdown) in the registry, surfaced as
+      ``ServeResult.timeline``.  Pure observation — the disabled path
+      adds no work and armed runs serialize the identical base record
+      (the gated ``obs`` key appends after the stable prefix).
     """
 
     def __init__(self, arrivals, policy="equal", backend="sim",
@@ -157,7 +216,7 @@ class TrafficSimulator:
                  preemption=None, rebalance_interval: float | None = None,
                  rebalancer="migrate_on_pressure", migration=None,
                  check_invariants: bool = False, fairness=False,
-                 **arrival_kwargs):
+                 obs=None, **arrival_kwargs):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
         from repro.core.scheduler import PreemptionModel
@@ -206,6 +265,20 @@ class TrafficSimulator:
         self.keep_trace = keep_trace
         self._rng = random.Random(seed)
         self._builders: dict[str, _RecordBuilder] = {}
+        # observability: resolved before node construction so every
+        # scheduler shares the one tracer/registry bundle.  All hooks are
+        # None when disabled — the hot path stays guard-only.
+        self._obs = None
+        self._tracer = None
+        self._registry = None
+        self._pulse_nodes = None
+        if obs:
+            # local import: repro.traffic stays importable without
+            # repro.obs until the feature is actually armed
+            from repro.obs import resolve_obs
+            self._obs = resolve_obs(obs)
+            self._tracer = self._obs.tracer
+            self._registry = self._obs.registry
         time_fn = self.backend.time_fn()
         stage = self.backend.stage_model()
         self.nodes = [
@@ -215,8 +288,29 @@ class TrafficSimulator:
                       on_submit=self._on_submit, keep_trace=keep_trace,
                       preemption=preemption,
                       on_load_change=self._on_load_change,
-                      check_invariants=check_invariants)
+                      check_invariants=check_invariants, obs=self._obs)
             for i in range(n_arrays)]
+        if self.rebalancer is not None and self._obs is not None:
+            self.rebalancer.obs = self._obs   # migration instant markers
+        if self._registry is not None:
+            # hoisted bound handles: the arrival pulse appends via
+            # pre-resolved `.sample`/`.inc` methods — no name lookups,
+            # no attribute chases in the loop body
+            reg = self._registry
+            self._pulse_nodes = [
+                (node, node.scheduler,
+                 reg.series(f"node{i}.in_system").sample,
+                 reg.series(f"node{i}.queue_depth").sample,
+                 reg.series(f"node{i}.ready").sample,
+                 reg.series(f"node{i}.bus_busy_s").sample,
+                 reg.series(f"node{i}.utilization").sample)
+                for i, node in enumerate(self.nodes)]
+            self._pulse_fleet = (reg.series("fleet.queue_depth").sample,
+                                 reg.series("fleet.in_system").sample)
+            self._ctr_arrivals = reg.counter("serve.arrivals")
+            self._ctr_dispatch = {
+                s: reg.counter(f"serve.dispatch.{s}")
+                for s in ("run", "queued", "rejected")}
         # delta-maintained fleet loads: dispatch reads this instead of
         # scanning every node per arrival (O(N) -> O(log N) for jsq)
         self.fleet = FleetLoads(self.nodes)
@@ -239,7 +333,16 @@ class TrafficSimulator:
 
     # -- node callbacks -----------------------------------------------------
     def _on_complete(self, node: ArrayNode, tenant: str, t: float) -> None:
-        self._builders[tenant].completed = t
+        b = self._builders[tenant]
+        b.completed = t
+        if self._registry is not None and self.accounting is not None:
+            # slowdown-vs-isolated sample at completion instant; observe()
+            # at arrival guarantees the isolated baseline exists by now
+            iso = self.accounting.isolated_s(b.job.model)
+            if iso:
+                self._registry.series(
+                    f"tenant.{b.job.model}.slowdown").sample(
+                        t, (t - b.job.arrival) / iso)
 
     def _on_submit(self, node: ArrayNode, job: Job, t: float) -> None:
         b = self._builders[job.dnng.name]
@@ -263,6 +366,19 @@ class TrafficSimulator:
         last_arrival = 0.0
         interval = self.rebalance_interval
         next_tick = interval if interval is not None else None
+        registry = self._registry
+        tracer = self._tracer
+        node_pes = self.backend.array.rows * self.backend.array.cols
+        oracle0 = _host_oracle_calls() if registry is not None else 0
+        if registry is not None:
+            pulse_nodes = self._pulse_nodes
+            fleet_q, fleet_in = self._pulse_fleet
+            sample_every = self._obs.sample_every
+            i_arr = 0
+            # dispatch-status tallies kept in locals and folded into the
+            # counters after the loop — two Counter.inc() calls per
+            # arrival are measurable against the overhead gate
+            n_run = n_queued = n_rejected = 0
         for job in self.arrivals:
             last_arrival = job.arrival
             # periodic rebalance ticks up to the arrival instant
@@ -284,18 +400,57 @@ class TrafficSimulator:
             status = target.offer(job)
             if status != "rejected":
                 b.array = target.index
+            if tracer is not None:
+                # the tracer's entire per-arrival cost: the dispatch
+                # choice is parked on the builder and derived into
+                # dispatch/arrive/complete instants only when the trace
+                # is read (`_derive_job_instants`)
+                b.dispatch_node = target.index
+                b.status0 = status
+            if registry is not None:
+                if status == "run":
+                    n_run += 1
+                elif status == "queued":
+                    n_queued += 1
+                else:
+                    n_rejected += 1
             if self.rebalancer is not None:
                 # deadline-pressure check at every arrival (pressure moves
                 # only — full balancing happens on the periodic ticks)
                 self.rebalancer.rebalance(self.nodes, job.arrival,
                                           periodic=False)
             depth_samples.append(self.fleet.queued_total)
+            if registry is not None:
+                # time-series pulse: fleet + every node (post-dispatch
+                # occupancy) at every `sample_every`-th arrival instant —
+                # source-strided so the armed pulse stays inside the
+                # traffic-bench overhead gate (Observability docstring)
+                if i_arr % sample_every == 0:
+                    t = job.arrival
+                    fleet_q(t, self.fleet.queued_total)
+                    fleet_in(t, sum(self.fleet.loads))
+                    for node, sched, s_in, s_q, s_ready, s_bus, s_util \
+                            in pulse_nodes:
+                        q = len(node.queue)
+                        s_in(t, len(sched.tenants) + q)
+                        s_q(t, q)
+                        s_ready(t, len(sched._ready))
+                        s_bus(t, sched.bus.busy_s)
+                        if t > 0.0:
+                            s_util(t, sched.pe_seconds_busy
+                                   / (t * node_pes))
+                i_arr += 1
             if self.accounting is not None:
                 # fold this arrival into the fairness books: template for
                 # the isolated baseline + a dominant-share sample of the
                 # post-dispatch fleet occupancy (the paper's A_t instants)
                 self.accounting.observe(job)
-                self.accounting.sample(job.arrival, self.nodes)
+                shares = self.accounting.sample(job.arrival, self.nodes)
+                if registry is not None:
+                    for model, share in shares.items():
+                        registry.series(
+                            f"tenant.{model}.dominant_share").sample(
+                                job.arrival, share)
         # arrivals exhausted: keep ticking while queues drain, then flush
         if next_tick is not None:
             while any(n.queue for n in self.nodes):
@@ -321,6 +476,38 @@ class TrafficSimulator:
             migrations=(self.rebalancer.n_migrations
                         if self.rebalancer is not None else 0),
             fairness=fairness)
+        timeline = None
+        if self._obs is not None:
+            if tracer is not None:
+                # lazy sources: per-job instants from the run's record
+                # builders, per-layer spans from the schedulers'
+                # keep_trace records — both converted at read/export
+                # time (never on the benched serving path)
+                builders = self._builders
+                tracer.attach_source(
+                    lambda: _derive_job_instants(builders))
+                if self.keep_trace:
+                    for node in self.nodes:
+                        tracer.attach(node.index, node.scheduler.trace)
+            if registry is not None:
+                self._ctr_arrivals.inc(n_run + n_queued + n_rejected)
+                self._ctr_dispatch["run"].inc(n_run)
+                self._ctr_dispatch["queued"].inc(n_queued)
+                self._ctr_dispatch["rejected"].inc(n_rejected)
+                events = sum(n.scheduler.n_events for n in self.nodes)
+                registry.counter("sched.events").inc(events)
+                registry.counter("sched.preemptions").inc(
+                    metrics.preemptions)
+                registry.counter("sched.completions").inc(
+                    sum(1 for r in records if r.completed is not None))
+                if self.rebalancer is not None:
+                    registry.counter("sched.migrations").inc(
+                        self.rebalancer.n_migrations)
+                if events:
+                    registry.gauge("oracle.calls_per_event").set(
+                        (_host_oracle_calls() - oracle0) / events)
+            from repro.obs import Timeline
+            timeline = Timeline(self._obs)
         return ServeResult(
             policy=getattr(self.policy, "name", type(self.policy).__name__),
             backend=getattr(self.backend, "name",
@@ -337,7 +524,7 @@ class TrafficSimulator:
             rebalance=(getattr(self.rebalancer, "name", None)
                        or type(self.rebalancer).__name__
                        if self.rebalancer is not None else None),
-            fairness=fairness)
+            fairness=fairness, timeline=timeline)
 
 
 def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:

@@ -1,0 +1,322 @@
+"""repro.obs: tracer ring + lazy derivation, metrics registry, exporters,
+and — the load-bearing contract — observation purity: arming obs never
+changes a serialized byte of any run."""
+
+import json
+
+import pytest
+
+from repro.obs import Observability, Timeline, resolve_obs
+from repro.obs.registry import MetricsRegistry
+from repro.obs.tracer import SPAN_KINDS, Tracer, _trace_spans
+from repro.traffic import TrafficSimulator
+from repro.traffic.arrivals import PoissonArrivals
+
+
+def _small_run(obs=None, **kwargs):
+    arr = PoissonArrivals(rate=2000.0, horizon=0.01, seed=3, pool="light",
+                          slo_s=0.01)
+    return TrafficSimulator(arr, policy="equal", backend="sim",
+                            max_concurrent=2, queue_cap=4, seed=3,
+                            obs=obs, **kwargs).run()
+
+
+class TestTracerRing:
+    def test_ring_bounds_memory_and_counts_drops(self):
+        tr = Tracer(max_events=8)
+        for i in range(20):
+            tr.instant("dispatch", float(i))
+        assert len(tr) == 8
+        assert tr.n_recorded == 20
+        assert tr.n_dropped == 12
+        # newest events win: the oldest 12 fell out
+        assert [r[1] for r in tr.raw()] == [float(i) for i in range(12, 20)]
+
+    def test_max_events_validated(self):
+        with pytest.raises(ValueError):
+            Tracer(max_events=0)
+
+    def test_counts_by_kind_sorted(self):
+        tr = Tracer()
+        tr.instant("migrate", 1.0)
+        tr.instant("dispatch", 0.0)
+        tr.span("compute", 0.0, 1.0)
+        tr.instant("dispatch", 2.0)
+        assert tr.counts_by_kind() == {
+            "compute": 1, "dispatch": 2, "migrate": 1}
+        assert list(tr.counts_by_kind()) == ["compute", "dispatch",
+                                             "migrate"]
+
+    def test_state_absorb_round_trip(self):
+        a, b = Tracer(), Tracer()
+        a.instant("dispatch", 0.5, 0, "t0")
+        b.instant("dispatch", 0.25, 1, "t1")
+        b.absorb(a.state())
+        assert b.n_recorded == 2
+        # merged stream interleaves by start time
+        assert [r[4] for r in b.raw()] == ["t1", "t0"]
+
+
+class TestSpanDerivation:
+    class _Ev:
+        # the scheduler TraceEvent surface _trace_spans reads
+        def __init__(self, start, compute_start, compute_end, end,
+                     preempted=False):
+            self.tenant = "t"
+            self.layer_name = "conv1"
+            self.fraction = 1.0
+            self.resumed = False
+            self.preempted = preempted
+            self.start = start
+            self.compute_start = compute_start
+            self.compute_end = compute_end
+            self.end = end
+            self.partition = type("P", (), {"cols": 4, "col_start": 0})()
+
+    def test_record_fans_out_to_three_spans(self):
+        spans = _trace_spans(2, [self._Ev(0.0, 1.0, 3.0, 3.5)])
+        assert [s[0] for s in spans] == ["stage_in", "compute", "stage_out"]
+        assert [(s[1], s[2]) for s in spans] == [
+            (0.0, 1.0), (1.0, 3.0), (3.0, 3.5)]
+        assert all(s[3] == 2 and s[4] == "t" for s in spans)
+        assert dict(spans[1][5])["cols"] == 4
+
+    def test_preempted_tail_is_drain(self):
+        spans = _trace_spans(0, [self._Ev(0.0, 1.0, 2.0, 2.5,
+                                          preempted=True)])
+        assert [s[0] for s in spans] == ["stage_in", "compute", "drain"]
+        assert dict(spans[1][5])["preempted"] is True
+
+    def test_zero_width_phases_are_skipped(self):
+        spans = _trace_spans(0, [self._Ev(1.0, 1.0, 2.0, 2.0)])
+        assert [s[0] for s in spans] == ["compute"]
+
+    def test_attach_is_lazy_and_cached(self):
+        tr = Tracer()
+        trace = [self._Ev(0.0, 1.0, 2.0, 2.5)]
+        tr.attach(0, trace)
+        assert tr._attached[0][1] is None  # nothing converted yet
+        assert tr.n_recorded == 3
+        cached = tr._attached[0][1]
+        assert cached is not None
+        assert tr._attached[0][1] is cached  # second read reuses it
+
+    def test_attach_source_derives_arbitrary_records(self):
+        tr = Tracer()
+        tr.attach_source(lambda: [("dispatch", 0.0, 0.0, 1, "j0", ())])
+        assert tr.counts_by_kind() == {"dispatch": 1}
+        assert tr.n_dropped == 0  # derived records never drop
+
+
+class TestDerivedJobInstants:
+    def test_instants_match_job_records(self):
+        res = _small_run(obs=True)
+        tr = res.timeline.tracer
+        counts = tr.counts_by_kind()
+        m = res.metrics
+        assert counts["dispatch"] == m.jobs_arrived
+        assert counts["arrive"] == m.jobs_arrived - m.jobs_rejected
+        assert counts["complete"] == m.jobs_completed
+        by_kind = {}
+        for e in tr.events():
+            by_kind.setdefault(e.kind, []).append(e)
+        statuses = {dict(e.args)["status"] for e in by_kind["dispatch"]}
+        assert statuses <= {"run", "queued", "rejected"}
+        got = sorted((e.t0, e.node) for e in by_kind["complete"])
+        want = sorted((r.completed, r.array) for r in res.records
+                      if r.completed is not None)
+        assert got == want
+
+    def test_instants_survive_keep_trace_false(self):
+        res = _small_run(obs=True)  # keep_trace defaults off in serving
+        counts = res.timeline.tracer.counts_by_kind()
+        assert "dispatch" in counts and "complete" in counts
+        assert not set(counts) & set(SPAN_KINDS)
+
+    def test_spans_ride_keep_trace(self):
+        res = _small_run(obs=True, keep_trace=True)
+        counts = res.timeline.tracer.counts_by_kind()
+        assert counts["compute"] > 0 and counts["stage_in"] > 0
+
+
+class TestObservationPurity:
+    @pytest.mark.parametrize("keep_trace", [False, True])
+    def test_armed_run_serializes_byte_identically(self, keep_trace):
+        plain = _small_run(keep_trace=keep_trace)
+        armed = _small_run(obs=True, keep_trace=keep_trace)
+        assert armed.timeline is not None
+        import dataclasses
+        detached = dataclasses.replace(armed, timeline=None)
+        assert json.dumps(detached.as_dict()) == json.dumps(plain.as_dict())
+
+    def test_obs_key_appends_last(self):
+        plain = _small_run()
+        armed = _small_run(obs=True)
+        keys = list(armed.as_dict())
+        assert keys[-1] == "obs"
+        assert keys[:-1] == list(plain.as_dict())
+
+    def test_resolve_obs_front_door(self):
+        assert resolve_obs(None) is None
+        assert resolve_obs(False) is None
+        assert isinstance(resolve_obs(True), Observability)
+        o = Observability()
+        assert resolve_obs(o) is o
+        with pytest.raises(ValueError):
+            resolve_obs("yes")
+
+    def test_sample_every_validated(self):
+        with pytest.raises(ValueError):
+            Observability(sample_every=0)
+
+
+class TestMetricsRegistry:
+    def test_series_decimation_keeps_running_mean(self):
+        reg = MetricsRegistry(max_samples=8)
+        s = reg.series("x")
+        for i in range(100):
+            s.sample(float(i), float(i))
+        assert len(s.samples) < 8
+        assert s.stride > 1
+        assert s.n_offered == 100
+        assert s.mean == pytest.approx(
+            sum(v for _, v in s.samples) / len(s.samples))
+
+    def test_merge_folds_counters_gauges_series(self):
+        a, b = MetricsRegistry(max_samples=8), MetricsRegistry(max_samples=8)
+        a.counter("c").inc(3)
+        b.counter("c").inc(4)
+        a.gauge("g").set(2.0)
+        b.gauge("g").set(5.0)
+        a.histogram("h").observe(1.0)
+        b.histogram("h").observe(9.0)
+        a.series("s").sample(0.0, 1.0)
+        b.series("s").sample(0.5, 3.0)
+        a.merge(b.state())
+        assert a.counter("c").value == 7
+        assert a.gauge("g").value == 5.0
+        h = a.histogram("h")
+        assert (h.count, h.min, h.max) == (2, 1.0, 9.0)
+        assert a.series("s").samples == [(0.0, 1.0), (0.5, 3.0)]
+
+    def test_registry_records_serving_series(self):
+        res = _small_run(obs=Observability(sample_every=1))
+        reg = res.timeline.registry
+        m = res.metrics
+        assert reg.counter("serve.arrivals").value == m.jobs_arrived
+        assert (reg.counter("serve.dispatch.rejected").value
+                == m.jobs_rejected)
+        assert reg.series("node0.queue_depth").n_offered > 0
+        assert reg.series("fleet.in_system").n_offered > 0
+
+
+class TestExport:
+    def _trace_run(self):
+        return _small_run(obs=True, keep_trace=True, n_arrays=2,
+                          dispatch="jsq")
+
+    def test_chrome_trace_structure(self):
+        trace = self._trace_run().timeline.chrome_trace()
+        ev = trace["traceEvents"]
+        body = [e for e in ev if e["ph"] != "M"]
+        assert {e["pid"] for e in body} <= {0, 1}
+        assert any(e["ph"] == "X" for e in body)     # tenant spans
+        assert any(e["ph"] == "i" for e in body)     # instants
+        assert any(e["tid"] > 0 for e in body)       # tenant lanes
+        names = [e["args"]["name"] for e in ev
+                 if e["ph"] == "M" and e["name"] == "process_name"]
+        assert names == sorted(f"array-node-{p}"
+                               for p in {e["pid"] for e in body})
+
+    def test_export_deterministic(self):
+        a = self._trace_run().timeline.chrome_trace()
+        b = self._trace_run().timeline.chrome_trace()
+        assert json.dumps(a, sort_keys=True) == json.dumps(b, sort_keys=True)
+
+    def test_preempt_and_migrate_markers_export_live(self):
+        tr = Tracer()
+        tr.instant("preempt", 1.0, 0, "t0", (("layer_index", 2),))
+        tr.instant("migrate", 2.0, 1, "t0", (("src", 0), ("dst", 1)))
+        from repro.obs.export import chrome_trace
+        cats = {e["cat"] for e in chrome_trace(tr)["traceEvents"]
+                if e.get("ph") == "i"}
+        assert cats == {"preempt", "migrate"}
+
+    def test_timeline_csv(self):
+        res = _small_run(obs=Observability(sample_every=1))
+        csv = res.timeline.timeline_csv()
+        lines = csv.strip().splitlines()
+        assert lines[0] == "series,t,value"
+        assert any(line.startswith("node0.queue_depth,")
+                   for line in lines[1:])
+
+    def test_render_summary_smoke(self):
+        res = _small_run(obs=True)
+        out = res.timeline.render(title="serve obs")
+        assert "# serve obs" in out
+        assert "serve.arrivals" in out
+
+    def test_disarmed_surfaces_raise(self):
+        t = Timeline(Observability(tracer=False))
+        with pytest.raises(ValueError):
+            t.chrome_trace()
+        t = Timeline(Observability(metrics=False))
+        with pytest.raises(ValueError):
+            t.timeline_csv()
+
+
+class TestShardedObs:
+    def _run(self, parallel):
+        from repro.traffic import ShardedTrafficSimulator
+        return ShardedTrafficSimulator(
+            "poisson", policy="equal", backend="sim", n_arrays=2,
+            n_shards=2, dispatch="rr", max_concurrent=2, queue_cap=4,
+            seed=3, parallel=parallel, obs=True,
+            rate=2000.0, horizon=0.01, pool="light", slo_s=0.01).run()
+
+    def test_pod_states_merge_into_one_timeline(self):
+        res = self._run(parallel=False)
+        assert res.timeline is not None
+        reg = res.timeline.registry
+        assert reg.counter("serve.arrivals").value == res.metrics.jobs_arrived
+        assert res.timeline.tracer.n_recorded > 0
+
+    def test_parallel_merge_matches_serial(self):
+        serial = self._run(parallel=False)
+        parallel = self._run(parallel=True)
+        assert (serial.timeline.summary()
+                == parallel.timeline.summary())
+
+
+class TestSessionFrontDoor:
+    def test_serve_obs_threads_through(self):
+        from repro.api import Session
+        res = Session(policy="equal", backend="sim").serve(
+            "poisson", rate=2000.0, horizon=0.01, pool="light",
+            slo_s=0.01, max_concurrent=2, queue_cap=4, seed=3, obs=True)
+        assert res.timeline is not None
+        assert list(res.as_dict())[-1] == "obs"
+        assert res.timeline.summary()["events_recorded"] > 0
+
+
+class TestFairnessReservoir:
+    def test_accounting_sample_cap_bounds_memory(self):
+        from repro.api.backend import resolve_backend
+        from repro.fairness.accounting import FairnessAccounting
+
+        b = resolve_backend("sim")
+        acct = FairnessAccounting(b.array, b.time_fn(),
+                                  stage=b.stage_model(), max_samples=16)
+        for i in range(200):
+            acct.sample(float(i), [])
+        assert len(acct._samples) < 16
+        assert acct._stride > 1
+        assert acct._n_offered == 200
+
+    def test_max_samples_validated(self):
+        from repro.api.backend import resolve_backend
+        from repro.fairness.accounting import FairnessAccounting
+
+        b = resolve_backend("sim")
+        with pytest.raises(ValueError):
+            FairnessAccounting(b.array, b.time_fn(), max_samples=1)

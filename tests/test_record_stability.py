@@ -9,10 +9,15 @@ metric-value gate but break every committed record's byte identity.
 """
 
 import json
+import os
+import sys
 
 from repro.traffic import TrafficSimulator
 from repro.traffic.arrivals import PoissonArrivals
 from repro.traffic.metrics import TrafficMetrics, summarize
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, ROOT)  # make `benchmarks.*` importable under pytest
 
 # the exact serialized field orders; editing either list is a
 # record-format change and must regenerate every committed BENCH_*.json
@@ -87,6 +92,27 @@ class TestAsDictKeyOrder:
         assert list(res.as_dict()) == (
             SERVE_PREFIX_KEYS + METRICS_KEYS + FAIRNESS_SLOWDOWN_KEYS)
 
+    def test_obs_key_appends_last(self):
+        # the gated obs digest is the LAST key, after every other gated
+        # block, so pre-obs records regenerate byte-identically
+        res = _small_run(obs=True, fairness=True)
+        keys = list(res.as_dict())
+        assert keys[-1] == "obs"
+        assert keys[:-1] == (SERVE_PREFIX_KEYS + METRICS_KEYS
+                             + FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS)
+
+    def test_obs_key_absent_when_disabled(self):
+        assert "obs" not in _small_run().as_dict()
+
+    def test_obs_does_not_perturb_base_metrics(self):
+        # observation purity at the record layer: arming obs leaves every
+        # pre-existing key's serialized value identical
+        plain = _small_run(preemption=True, n_arrays=2,
+                           rebalance_interval=0.5).as_dict()
+        armed = _small_run(preemption=True, n_arrays=2,
+                           rebalance_interval=0.5, obs=True).as_dict()
+        assert json.dumps({k: armed[k] for k in plain}) == json.dumps(plain)
+
     def test_metrics_counters_stay_out_of_as_dict(self):
         m = TrafficMetrics(
             jobs_arrived=1, jobs_rejected=0, jobs_completed=1,
@@ -110,6 +136,46 @@ class TestByteStability:
         fast = _small_run()
         checked = _small_run(check_invariants=True)
         assert json.dumps(fast.as_dict()) == json.dumps(checked.as_dict())
+
+
+class TestBenchRecordsRegenerate:
+    """The committed BENCH_*.json records regenerate byte-identically with
+    obs disabled (the null path records nothing and perturbs nothing).
+    check_regression covers this via a metric-value gate; these tests pin
+    the stronger byte contract directly for the deterministic records."""
+
+    def _committed(self, name):
+        with open(os.path.join(ROOT, name), "rb") as f:
+            return f.read()
+
+    def test_fig9_bytes(self, tmp_path):
+        from benchmarks.run import emit_bench_json
+
+        path = tmp_path / "fig9.json"
+        emit_bench_json(str(path))
+        assert path.read_bytes() == self._committed("BENCH_fig9.json")
+
+    def test_traffic_bytes(self, tmp_path, capsys):
+        from benchmarks import traffic_bench
+
+        path = tmp_path / "traffic.json"
+        traffic_bench.run(path=str(path))
+        capsys.readouterr()
+        assert path.read_bytes() == self._committed("BENCH_traffic.json")
+
+    def test_fairness_blocks_bytes(self, tmp_path, capsys):
+        # the sharded_scale cell is wall-clock-bound (scale-bench CI
+        # re-validates it); the seeded policy/trace/identity blocks must
+        # match the committed record byte-for-byte
+        from benchmarks import fairness_bench
+
+        path = tmp_path / "fairness.json"
+        fresh = fairness_bench.run(path=str(path), include_scale=False)
+        capsys.readouterr()
+        committed = json.loads(self._committed("BENCH_fairness.json"))
+        for block in ("policy_results", "trace_results", "identity"):
+            assert (json.dumps(fresh[block], indent=1)
+                    == json.dumps(committed[block], indent=1))
 
 
 class TestFleetLoadsEquivalence:
