@@ -1,0 +1,246 @@
+"""Chaos benchmark — BENCH_chaos.json.
+
+    PYTHONPATH=src python benchmarks/chaos_bench.py
+
+Four questions, one record:
+
+1. **Is the chaos subsystem invisible when unarmed?**  A purity flag:
+   two ``faults=None`` runs of a traffic cell must serialize
+   byte-identically and carry none of the gated chaos keys (the
+   committed BENCH_traffic.json byte contract is pinned separately by
+   ``tests/test_record_stability.py``).
+2. **Is fault injection deterministic?**  Identical seeds and plans must
+   produce identical serialized records, identical ChaosReports and an
+   identical belief-transition trace — recorded as 0/1 flags the
+   regression gate pins at 1.
+3. **Does recovery preserve the SLA?**  The crash cell drives the same
+   seeded Poisson stream through ``retry_restart`` and the ``none``
+   control arm.  Tier-0 jobs must miss *strictly less* with recovery
+   (lost jobs count as misses; the SLO is generous enough that a warm
+   restart completes in time) — the headline flag plus the raw per-arm
+   miss rates and availability, all gated.
+4. **Is degradation graceful?**  Degrade (dead columns) and straggler
+   (slow node) cells record tier-0 miss inflation over the fault-free
+   baseline; the sharded pod_kill cell asserts the failure surface is a
+   named RuntimeError, not a hang.
+
+Deterministic fields are byte-stable across runs/platforms and gated by
+``benchmarks/check_regression.py`` (``check_chaos``); ``wall_s`` is
+machine-dependent and informational only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_chaos.json")
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (mean_service_s reuse) importable
+
+SEED = 0
+N_ARRAYS = 4
+LOAD = 0.65                  # ρ per array; 3 survivors stay under water
+JOBS = 800
+SLO_FACTOR = 10.0            # generous: a warm restart can still make it
+TIERS = (0, 1, 2)
+
+
+def _cell_kwargs(svc: float) -> tuple[dict, dict, float]:
+    rate = N_ARRAYS * LOAD / svc
+    horizon = JOBS / rate
+    sim_kw = dict(policy="equal", backend="sim", n_arrays=N_ARRAYS,
+                  dispatch="jsq", max_concurrent=4, queue_cap=16, seed=SEED)
+    arr_kw = dict(rate=rate, horizon=horizon, pool="light",
+                  slo_s=SLO_FACTOR * svc, tiers=TIERS)
+    return sim_kw, arr_kw, horizon
+
+
+def _tier_miss(res, tier: int) -> float:
+    rows = [r for r in res.records if r.tier == tier]
+    miss = [r for r in rows
+            if r.completed is None or r.completed > r.deadline]
+    return len(miss) / len(rows) if rows else 0.0
+
+
+def _serve(sim_kw: dict, arr_kw: dict, **extra):
+    from repro.traffic import TrafficSimulator
+
+    return TrafficSimulator("poisson", **extra, **sim_kw, **arr_kw).run()
+
+
+def purity_flags(sim_kw: dict, arr_kw: dict) -> dict:
+    """Unarmed runs must be byte-stable and free of gated chaos keys."""
+    a = _serve(sim_kw, arr_kw).as_dict()
+    b = _serve(sim_kw, arr_kw).as_dict()
+    gated = {"faults", "recovery", "faults_injected", "jobs_lost",
+             "jobs_retried", "jobs_recovered", "retries_exhausted",
+             "jobs_shed", "availability_by_tier"}
+    return {
+        "unarmed_byte_stable": int(
+            json.dumps(a, indent=1) == json.dumps(b, indent=1)),
+        "unarmed_has_no_chaos_keys": int(not gated & set(a)),
+    }
+
+
+def determinism_flags(sim_kw: dict, arr_kw: dict, horizon: float) -> dict:
+    """Identical seed + plan => identical records, report and trace."""
+    from repro.chaos import FaultPlan
+
+    plan = FaultPlan.seeded(SEED, horizon=horizon, n_nodes=N_ARRAYS,
+                            crashes=1, blackouts=1, stragglers=1)
+    a = _serve(sim_kw, arr_kw, faults=plan)
+    b = _serve(sim_kw, arr_kw, faults=plan)
+    return {
+        "same_seed_same_records": int(
+            json.dumps(a.as_dict()) == json.dumps(b.as_dict())),
+        "same_seed_same_report": int(a.chaos.as_dict() == b.chaos.as_dict()),
+        "same_seed_same_transitions": int(
+            a.chaos.transitions == b.chaos.transitions),
+    }
+
+
+def crash_cell(sim_kw: dict, arr_kw: dict, horizon: float) -> dict:
+    """retry_restart vs the none control arm on one mid-run crash."""
+    from repro.chaos import FaultPlan
+
+    plan = FaultPlan.single("crash", t=horizon * 0.3, node=1)
+    rec = _serve(sim_kw, arr_kw, faults=plan)
+    non = _serve(sim_kw, arr_kw, faults=plan, recovery="none")
+    rec_miss, non_miss = _tier_miss(rec, 0), _tier_miss(non, 0)
+    rec_av = rec.metrics.availability_by_tier[0]
+    non_av = non.metrics.availability_by_tier[0]
+    return {
+        "fault": "crash",
+        "jobs_lost": rec.chaos.jobs_lost,
+        "jobs_recovered": rec.chaos.jobs_recovered,
+        "tier0_miss_recovery": rec_miss,
+        "tier0_miss_none": non_miss,
+        "tier0_miss_delta": rec_miss - non_miss,
+        "tier0_availability_recovery": rec_av,
+        "tier0_availability_none": non_av,
+        "recovery_beats_none_tier0": int(
+            rec_miss < non_miss and rec_av >= non_av),
+    }
+
+
+def degrade_cell(sim_kw: dict, arr_kw: dict, horizon: float,
+                 base_miss: float) -> dict:
+    """Half the columns of one node die; service continues on the rest."""
+    from repro.chaos import FaultPlan
+
+    plan = FaultPlan.single("degrade", t=horizon * 0.3, node=1,
+                            dead_cols=64)
+    res = _serve(sim_kw, arr_kw, faults=plan)
+    miss = _tier_miss(res, 0)
+    return {
+        "fault": "degrade",
+        "dead_cols": 64,
+        "jobs_completed": res.metrics.jobs_completed,
+        "tier0_miss": miss,
+        "tier0_miss_inflation": miss - base_miss,
+        "still_serving": int(res.metrics.jobs_completed > 0),
+    }
+
+
+def straggler_cell(sim_kw: dict, arr_kw: dict, horizon: float,
+                   base_miss: float) -> dict:
+    """One node runs 4x slow for a window; the monitor must notice."""
+    from repro.chaos import FaultPlan
+
+    plan = FaultPlan.single("straggler", t=horizon * 0.3, node=2,
+                            factor=4.0, duration_s=horizon * 0.3)
+    res = _serve(sim_kw, arr_kw, faults=plan)
+    causes = [tr[4] for tr in res.chaos.transitions]
+    miss = _tier_miss(res, 0)
+    return {
+        "fault": "straggler",
+        "factor": 4.0,
+        "tier0_miss": miss,
+        "tier0_miss_inflation": miss - base_miss,
+        "straggler_detected": int("service_outlier" in causes),
+    }
+
+
+def pod_kill_flag() -> dict:
+    """A dead pod must surface as a named RuntimeError, not a hang."""
+    from repro.chaos import FaultEvent
+    from repro.traffic import ShardedTrafficSimulator
+
+    sim = ShardedTrafficSimulator(
+        "poisson", policy="equal", backend="sim", n_arrays=4, n_shards=2,
+        seed=SEED, sync_every=16, parallel=False,
+        faults=FaultEvent(t=0.0, kind="pod_kill", node=1, epoch=1),
+        rate=3000.0, horizon=0.05, pool="light", slo_s=0.05)
+    try:
+        sim.run()
+    except RuntimeError as exc:
+        return {"pod_kill_raises_named_error": int(
+            "pod 1" in str(exc) and "epoch 1" in str(exc))}
+    return {"pod_kill_raises_named_error": 0}
+
+
+def run(path: str = BENCH_JSON) -> dict:
+    from benchmarks.traffic_bench import mean_service_s
+
+    t0 = time.perf_counter()
+    svc = mean_service_s("light")
+    sim_kw, arr_kw, horizon = _cell_kwargs(svc)
+
+    flags = purity_flags(sim_kw, arr_kw)
+    flags.update(determinism_flags(sim_kw, arr_kw, horizon))
+    flags.update(pod_kill_flag())
+
+    base_miss = _tier_miss(_serve(sim_kw, arr_kw), 0)
+    crash = crash_cell(sim_kw, arr_kw, horizon)
+    flags["recovery_beats_none_tier0"] = crash.pop(
+        "recovery_beats_none_tier0")
+    degrade = degrade_cell(sim_kw, arr_kw, horizon, base_miss)
+    flags["degrade_still_serving"] = degrade.pop("still_serving")
+    straggler = straggler_cell(sim_kw, arr_kw, horizon, base_miss)
+    flags["straggler_detected"] = straggler.pop("straggler_detected")
+
+    for k, v in flags.items():
+        print(f"# flag {k}: {v}")
+    print(f"# crash: tier0 miss {crash['tier0_miss_recovery']:.4f} "
+          f"(retry_restart) vs {crash['tier0_miss_none']:.4f} (none), "
+          f"{crash['jobs_recovered']}/{crash['jobs_lost']} recovered")
+    print(f"# degrade: tier0 miss {degrade['tier0_miss']:.4f} "
+          f"(+{degrade['tier0_miss_inflation']:.4f} over fault-free)")
+    print(f"# straggler: tier0 miss {straggler['tier0_miss']:.4f} "
+          f"(+{straggler['tier0_miss_inflation']:.4f} over fault-free)")
+
+    blob = {
+        "benchmark": "chaos", "backend": "sim", "seed": SEED,
+        "n_arrays": N_ARRAYS, "load": LOAD, "jobs": JOBS,
+        "slo_factor": SLO_FACTOR,
+        "flags": flags,
+        "tier0_miss_fault_free": base_miss,
+        "crash": crash,
+        "degrade": degrade,
+        "straggler": straggler,
+        # -- informational (machine-dependent, not gated) --
+        "wall_s": time.perf_counter() - t0,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    bad = [k for k, v in flags.items() if v != 1]
+    if bad:
+        print(f"FAIL: chaos contract flags broken: {bad}", file=sys.stderr)
+        raise SystemExit(1)
+    return blob
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--out", default=BENCH_JSON)
+    args = parser.parse_args()
+    run(path=args.out)
+    sys.exit(0)

@@ -26,6 +26,12 @@ root:
   The 100k-job sharded cell is wall-clock-bound and re-validated by the
   scale-bench CI job instead (its deterministic fields are committed in
   the record; regeneration here skips it to keep the gate fast);
+* ``BENCH_chaos.json``   — the fault-injection contract flags (unarmed
+  byte purity, seeded determinism, pod_kill error surface, straggler
+  detection, and the headline recovery-beats-none tier-0 flag) are
+  pinned at 1; the crash cell's tier-0 miss rates and miss-inflation
+  deltas must not rise and tier-0 availability under recovery must not
+  drop.  ``wall_s`` is informational;
 * ``BENCH_obs.json``     — the observability contract flags (observation
   purity byte-identity, deterministic Perfetto export, one track per
   node, tenant lanes, span/preempt/migrate content) are pinned at 1,
@@ -230,6 +236,42 @@ def check_fairness(gate: Gate, committed: dict, fresh: dict) -> None:
         )
 
 
+def check_chaos(gate: Gate, committed: dict, fresh: dict) -> None:
+    # contract flags are pinned at 1: purity/determinism/recovery breakage
+    # is an engine-correctness regression, not drift
+    for key in sorted(committed["flags"]):
+        gate.check(
+            "chaos contract",
+            key,
+            1.0,
+            float(fresh["flags"].get(key, 0)),
+            higher_is_better=True,
+        )
+    for metric in ("tier0_miss_recovery", "tier0_miss_delta"):
+        gate.check(
+            "chaos crash",
+            metric,
+            committed["crash"][metric],
+            fresh["crash"][metric],
+            higher_is_better=False,
+        )
+    gate.check(
+        "chaos crash",
+        "tier0_availability_recovery",
+        committed["crash"]["tier0_availability_recovery"],
+        fresh["crash"]["tier0_availability_recovery"],
+        higher_is_better=True,
+    )
+    for cell in ("degrade", "straggler"):
+        gate.check(
+            f"chaos {cell}",
+            "tier0_miss_inflation",
+            committed[cell]["tier0_miss_inflation"],
+            fresh[cell]["tier0_miss_inflation"],
+            higher_is_better=False,
+        )
+
+
 def check_obs(gate: Gate, committed: dict, fresh: dict) -> None:
     # contract flags are pinned at 1: purity/export/structure breakage is
     # an engine-correctness regression, not drift
@@ -258,6 +300,7 @@ def main(argv=None) -> int:
     sys.path.insert(0, os.path.join(ROOT, "src"))
     sys.path.insert(0, ROOT)
     from benchmarks import (
+        chaos_bench,
         fairness_bench,
         kernel_bench,
         obs_bench,
@@ -285,6 +328,14 @@ def main(argv=None) -> int:
             path=os.path.join(tmp, "fairness.json"),
             include_scale=False,  # wall-bound cell lives in scale-bench CI
         )
+        print("# regenerating BENCH_chaos.json ...")
+        chaos_path = os.path.join(tmp, "chaos.json")
+        try:
+            fresh_chaos = chaos_bench.run(path=chaos_path)
+        except SystemExit:
+            # the bench's own flag gate tripped; fold its record into
+            # the diff table anyway so the failure is itemized
+            fresh_chaos = _load(chaos_path)
         print("# regenerating BENCH_obs.json ...")
         obs_path = os.path.join(tmp, "obs.json")
         try:
@@ -301,6 +352,7 @@ def main(argv=None) -> int:
     check_fairness(
         gate, _load(os.path.join(ROOT, "BENCH_fairness.json")), fresh_fairness
     )
+    check_chaos(gate, _load(os.path.join(ROOT, "BENCH_chaos.json")), fresh_chaos)
     check_obs(gate, _load(os.path.join(ROOT, "BENCH_obs.json")), fresh_obs)
 
     print()

@@ -205,7 +205,8 @@ class Session:
               rebalance_interval: "float | None" = None,
               rebalancer="migrate_on_pressure", migration=None,
               check_invariants: bool = False, fairness=False,
-              obs=None, **arrival_kwargs):
+              obs=None, faults=None, recovery="retry_restart",
+              monitor=None, **arrival_kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
         :class:`repro.traffic.ServeResult` (latency percentiles,
@@ -249,6 +250,18 @@ class Session:
         scheduler's ``keep_trace=True`` records — pass both flags for a
         span-level Perfetto timeline.  Pure observation: disabled adds
         no work, armed never changes any serialized result byte.
+
+        ``faults`` (a :class:`~repro.chaos.FaultPlan`, a single
+        :class:`~repro.chaos.FaultEvent`, or a sequence of events) arms
+        seeded fault injection (`repro.chaos`): node crashes, transient
+        blackouts, column-loss degradation, bus stalls and stragglers.
+        ``monitor`` (default :class:`~repro.chaos.HealthMonitor`) detects
+        failures at dispatch boundaries; ``recovery`` (registry name or
+        :class:`~repro.chaos.RecoveryPolicy`, default ``retry_restart``)
+        re-dispatches lost jobs with backoff + checkpoint warm restarts.
+        The fault/recovery accounting comes back on
+        ``ServeResult.chaos``; ``faults=None`` (default) keeps every
+        serialized record byte-identical to fault-free runs.
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
@@ -259,7 +272,8 @@ class Session:
             keep_trace=keep_trace, preemption=preemption,
             rebalance_interval=rebalance_interval, rebalancer=rebalancer,
             migration=migration, check_invariants=check_invariants,
-            fairness=fairness, obs=obs, **arrival_kwargs).run()
+            fairness=fairness, obs=obs, faults=faults, recovery=recovery,
+            monitor=monitor, **arrival_kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

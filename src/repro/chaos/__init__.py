@@ -1,0 +1,52 @@
+"""`repro.chaos` — seeded fault injection, detection, and recovery.
+
+The serving stack assumes a healthy fleet; this package breaks it on
+purpose, deterministically:
+
+* :mod:`repro.chaos.faults`   — :class:`FaultPlan` schedules (crash,
+  blackout, degrade, bus_stall, straggler, pod_kill);
+* :mod:`repro.chaos.monitor`  — :class:`HealthMonitor` belief tracking
+  (heartbeat staleness, dispatch failures, service outliers);
+* :mod:`repro.chaos.recovery` — :class:`RecoveryPolicy` registry
+  (``retry_restart`` backoff + checkpoint warm restart + watermark
+  shedding; ``none`` for the unrecovered control arm);
+* :mod:`repro.chaos.controller` — :class:`ChaosController`, the loop the
+  :class:`~repro.traffic.simulator.TrafficSimulator` drives when its
+  ``faults=`` knob is armed.
+
+With ``faults=None`` (the default) nothing here is even imported and
+every serialized record stays byte-identical to pre-chaos runs — the
+purity contract ``BENCH_chaos.json`` and the record-stability tests pin.
+"""
+
+from repro.chaos.controller import ChaosController, ChaosReport
+from repro.chaos.faults import FAULT_KINDS, FaultEvent, FaultPlan, resolve_faults
+from repro.chaos.monitor import HealthMonitor
+from repro.chaos.recovery import (
+    NoRecovery,
+    RecoveryPolicy,
+    RetryPolicy,
+    RetryRestart,
+    list_recoveries,
+    register_recovery,
+    resolve_recovery,
+    truncate_dnng,
+)
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultEvent",
+    "FaultPlan",
+    "resolve_faults",
+    "HealthMonitor",
+    "RetryPolicy",
+    "RecoveryPolicy",
+    "RetryRestart",
+    "NoRecovery",
+    "register_recovery",
+    "list_recoveries",
+    "resolve_recovery",
+    "truncate_dnng",
+    "ChaosController",
+    "ChaosReport",
+]

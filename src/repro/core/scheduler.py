@@ -369,12 +369,24 @@ class DynamicScheduler:
         self._seq = itertools.count()
         self._tokens = itertools.count()
         self._events: list[tuple] = []
+        # fault-injection multipliers (repro.chaos): straggler compute
+        # inflation and bus-stall transfer inflation.  At the 1.0 default
+        # every ``x * scale`` is IEEE-exact (x * 1.0 == x), so the
+        # fault-free path produces bit-identical schedules.
+        self.time_scale = 1.0
+        self.bus_scale = 1.0
 
     # -- queries ------------------------------------------------------------
     @property
     def n_active(self) -> int:
         """DNNGs submitted but not yet complete (the in-system count)."""
         return len(self.tenants)
+
+    def progress(self) -> dict[str, int]:
+        """Checkpoint surface: completed-layer count per live tenant (the
+        layers whose outputs have been staged out — what a warm restart
+        can skip).  In-flight fractions are deliberately not counted."""
+        return {name: t.next_layer for name, t in self.tenants.items()}
 
     def pending(self) -> bool:
         return bool(self._events)
@@ -487,11 +499,11 @@ class DynamicScheduler:
         # this IS the restore cost: stationary weights were lost with the
         # columns (PreemptionModel docstring).
         if self.stage is not None:
-            si_start, si_end = self.bus.acquire(now,
-                                                self._stage_costs(layer)[0])
+            si_start, si_end = self.bus.acquire(
+                now, self._stage_costs(layer)[0] * self.bus_scale)
         else:
             si_start = si_end = now
-        c_dur = self.time_fn(layer, part)
+        c_dur = self.time_fn(layer, part) * self.time_scale
         if c_dur <= 0:
             raise ValueError(f"time_fn returned non-positive duration {c_dur}")
         base = t.done_frac.get(layer_idx, 0.0)
@@ -652,8 +664,8 @@ class DynamicScheduler:
     def _compute_done(self, tenant: str, now: float) -> None:
         inf = self._inflight[tenant]
         if self.stage is not None:
-            _, so_end = self.bus.acquire(now,
-                                         self._stage_costs(inf.layer)[1])
+            _, so_end = self.bus.acquire(
+                now, self._stage_costs(inf.layer)[1] * self.bus_scale)
         else:
             so_end = now
         self.pe_seconds_busy += (inf.c_end - inf.c_start) * inf.part.n_pes
@@ -693,7 +705,7 @@ class DynamicScheduler:
             # transfers behind it keep their windows)
             self.bus.abort_reservation(now, inf.si_start, inf.c_start)
             drain = self.preemption.fixed_overhead_s
-        _, dr_end = self.bus.acquire(now, drain)
+        _, dr_end = self.bus.acquire(now, drain * self.bus_scale)
         if self.keep_trace:
             self.trace.append(TraceEvent(
                 tenant=tenant, layer_index=inf.idx,

@@ -56,9 +56,15 @@ DECISION = "decision"
 PREEMPT = "preempt"
 MIGRATE = "migrate"
 COMPLETE = "complete"
+# fault-injection instants (repro.chaos): fault applied, belief
+# transition detected, lost job's first post-retry completion
+FAULT = "fault"
+DETECT = "detect"
+RECOVER = "recover"
 
 SPAN_KINDS = (STAGE_IN, COMPUTE, STAGE_OUT, DRAIN)
-INSTANT_KINDS = (ARRIVE, DISPATCH, DECISION, PREEMPT, MIGRATE, COMPLETE)
+INSTANT_KINDS = (ARRIVE, DISPATCH, DECISION, PREEMPT, MIGRATE, COMPLETE,
+                 FAULT, DETECT, RECOVER)
 
 
 def _ORDER(r: tuple) -> tuple:

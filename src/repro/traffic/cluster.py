@@ -25,6 +25,7 @@ on another after a checkpoint-transit delay (:meth:`admit_migrated`).
 from __future__ import annotations
 
 import abc
+import dataclasses
 import heapq
 import random
 from typing import Callable, Optional, Sequence
@@ -75,18 +76,48 @@ class ArrayNode:
         self._notify_load = on_load_change or (lambda node: None)
         self._time_fn = time_fn
         self._stage = stage
+        self.array = array               # current (possibly degraded) shape
         self._full = Partition(rows=array.rows, col_start=0, cols=array.cols)
         self._svc_cache: dict = {}
-        self.scheduler = DynamicScheduler(
-            array, time_fn, stage=stage, policy=policy,
-            on_complete=self._job_done, keep_trace=keep_trace,
-            preemption=preemption, check_invariants=check_invariants,
-            obs=obs, node_index=index)
+        # fault state (repro.chaos): `alive` is ground truth set by fault
+        # injection; `health` is the HealthMonitor's *belief* — dispatch
+        # acts on belief, so an undetected failure still eats jobs
+        self.alive = True
+        self.health = "healthy"
+        self.down_since = 0.0
+        self._pe_busy_carry = 0.0        # busy PE-seconds of retired schedulers
+        self._time_scale = 1.0           # straggler compute inflation
+        self._bus_scale = 1.0            # stage bus stall inflation
+        # constructor args retained so a fault can rebuild the scheduler
+        self._policy = policy
+        self._keep_trace = keep_trace
+        self._preemption = preemption
+        self._check_invariants = check_invariants
+        self._obs = obs
+        self.scheduler = self._new_scheduler(0.0)
+
+    def _new_scheduler(self, start_time: float) -> DynamicScheduler:
+        sched = DynamicScheduler(
+            self.array, self._time_fn, stage=self._stage,
+            policy=self._policy, on_complete=self._job_done,
+            keep_trace=self._keep_trace, preemption=self._preemption,
+            check_invariants=self._check_invariants, obs=self._obs,
+            node_index=self.index, start_time=start_time)
+        sched.time_scale = self._time_scale
+        sched.bus_scale = self._bus_scale
+        return sched
 
     @property
     def in_system(self) -> int:
         """Jobs on this array: executing + waiting (the dispatch load key)."""
         return self.scheduler.n_active + len(self.queue)
+
+    @property
+    def pe_seconds_busy(self) -> float:
+        """Busy PE-seconds over the node's whole life, including work done
+        on schedulers retired by a fault (``0.0 + x`` is IEEE-exact, so
+        the fault-free path reads the same bits as before)."""
+        return self._pe_busy_carry + self.scheduler.pe_seconds_busy
 
     def offer(self, job: Job) -> str:
         """Admission control at ``job.arrival``.
@@ -184,6 +215,89 @@ class ArrayNode:
         raise ValueError(f"migration target {self.index} cannot accept "
                          f"{job.dnng.name!r}: queue full")
 
+    # -- fault surface (driven by repro.chaos) ------------------------------
+    def _evacuate(self) -> list[tuple[Job, int]]:
+        """Pull every resident job off the node with its checkpointed
+        (completed-layer) progress; running jobs first in submit order,
+        then the FIFO queue.  Leaves queue/jobs/ready empty and banks the
+        retired scheduler's busy PE-seconds."""
+        progress = self.scheduler.progress()
+        queued = {j.dnng.name for j in self.queue}
+        lost = [(job, progress.get(name, 0))
+                for name, job in self.jobs.items() if name not in queued]
+        lost.extend((job, 0) for job in self.queue)
+        self.queue.clear()
+        self.jobs.clear()
+        self._ready_at.clear()
+        self._pe_busy_carry += self.scheduler.pe_seconds_busy
+        return lost
+
+    def fail(self, now: float) -> list[tuple[Job, int]]:
+        """Kill the node at ``now``.  Every resident job is lost (returned
+        as ``(job, checkpointed_layers)`` — completed layers were staged
+        out to DRAM and survive; in-flight fractions do not).  The node
+        gets a fresh empty scheduler so it can be repaired later."""
+        lost = self._evacuate()
+        self.scheduler = self._new_scheduler(now)
+        self.alive = False
+        self.down_since = now
+        self._notify_load(self)
+        return lost
+
+    def repair(self, now: float) -> None:
+        """Bring a failed node back (empty) at ``now``."""
+        self.alive = True
+        self.down_since = 0.0
+        self._notify_load(self)
+
+    def degrade(self, now: float, dead_cols: int) -> list[tuple[Job, int]]:
+        """Lose ``dead_cols`` columns at ``now``: the array shrinks, and
+        resident tenants are re-admitted onto a fresh scheduler over the
+        surviving columns — the partition policy re-fits them on the next
+        assignment round.  Checkpointed layers are dropped from the
+        re-submitted graphs (their outputs sit in DRAM); returns any jobs
+        that no longer fit (queue overflow) as ``(job, done)`` pairs."""
+        if not 1 <= dead_cols < self.array.cols:
+            raise ValueError(f"node {self.index} has {self.array.cols} "
+                             f"columns; cannot lose {dead_cols}")
+        from repro.chaos.recovery import truncate_dnng
+        evacuated = self._evacuate()
+        self.array = ArrayShape(rows=self.array.rows,
+                                cols=self.array.cols - dead_cols)
+        self._full = Partition(rows=self.array.rows, col_start=0,
+                               cols=self.array.cols)
+        self._svc_cache.clear()
+        self.scheduler = self._new_scheduler(now)
+        overflow: list[tuple[Job, int]] = []
+        for job, done in evacuated:
+            if done > 0:
+                job = dataclasses.replace(
+                    job, dnng=truncate_dnng(job.dnng, done, arrival_time=now))
+            if self.scheduler.n_active < self.max_concurrent:
+                self.scheduler.submit(job.dnng.clone(arrival_time=now),
+                                      deadline=job.deadline)
+                self.jobs[job.dnng.name] = job
+                self._notify_submit(self, job, now)
+            elif len(self.queue) < self.queue_cap:
+                self.queue.append(job)
+                self.jobs[job.dnng.name] = job
+            else:
+                overflow.append((job, done))
+        self._notify_load(self)
+        return overflow
+
+    def set_compute_scale(self, factor: float) -> None:
+        """Straggler injection: newly launched layers run ``factor``×
+        slower (1.0 restores nominal speed)."""
+        self._time_scale = factor
+        self.scheduler.time_scale = factor
+
+    def set_bus_scale(self, factor: float) -> None:
+        """Bus-stall injection: newly acquired stage transfers take
+        ``factor``× longer (1.0 restores nominal bandwidth)."""
+        self._bus_scale = factor
+        self.scheduler.bus_scale = factor
+
 
 # ---------------------------------------------------------------------------
 # fleet load tracking + dispatchers
@@ -203,7 +317,8 @@ class FleetLoads:
     deterministic tie-break as the linear scan it replaces.
     """
 
-    __slots__ = ("loads", "queued", "_heap", "_queued_total")
+    __slots__ = ("loads", "queued", "_heap", "_queued_total",
+                 "_excluded", "_n_excluded")
 
     def __init__(self, nodes: Sequence["ArrayNode"]):
         self.loads = [n.in_system for n in nodes]
@@ -211,6 +326,8 @@ class FleetLoads:
         self._queued_total = sum(self.queued)
         self._heap = [(load, i) for i, load in enumerate(self.loads)]
         heapq.heapify(self._heap)
+        self._excluded = [False] * len(self.loads)
+        self._n_excluded = 0
 
     def update(self, node: "ArrayNode") -> None:
         """The node's ``on_load_change`` target."""
@@ -233,14 +350,51 @@ class FleetLoads:
         """Fleet-wide queue depth (the per-arrival depth sample)."""
         return self._queued_total
 
+    # -- health exclusion (driven by repro.chaos.HealthMonitor) -------------
+    def exclude(self, i: int) -> None:
+        """Take node ``i`` out of routing (belief: suspect or dead)."""
+        if not self._excluded[i]:
+            self._excluded[i] = True
+            self._n_excluded += 1
+
+    def readmit(self, i: int) -> None:
+        """Return node ``i`` to routing; its heap entries were consumed
+        while excluded, so push a fresh one."""
+        if self._excluded[i]:
+            self._excluded[i] = False
+            self._n_excluded -= 1
+            heapq.heappush(self._heap, (self.loads[i], i))
+
+    @property
+    def routing_loads(self) -> Sequence[float]:
+        """The load view dispatchers route on: the live ``loads`` list
+        itself while nothing is excluded (the common, fault-free case —
+        same object, zero cost), else a copy with excluded nodes pinned
+        to +inf so load-comparing dispatchers avoid them."""
+        if self._n_excluded == 0:
+            return self.loads
+        inf = float("inf")
+        return [inf if self._excluded[i] else ld
+                for i, ld in enumerate(self.loads)]
+
     def min_index(self) -> int:
         heap = self._heap
         loads = self.loads
-        while True:
+        if self._n_excluded == 0:
+            while True:
+                load, i = heap[0]
+                if loads[i] == load:
+                    return i
+                heapq.heappop(heap)  # stale: the node's load moved on
+        excluded = self._excluded
+        while heap:
             load, i = heap[0]
-            if loads[i] == load:
+            if not excluded[i] and loads[i] == load:
                 return i
-            heapq.heappop(heap)  # stale: the node's load moved on
+            heapq.heappop(heap)  # stale, or excluded (readmit re-pushes)
+        # every node excluded: fall back to the linear argmin so routing
+        # still returns a target (the dispatch then fails realistically)
+        return min(range(len(loads)), key=lambda i: (loads[i], i))
 
 
 class Dispatcher(abc.ABC):
@@ -257,8 +411,11 @@ class Dispatcher(abc.ABC):
         instead of a freshly scanned load list.  The default delegates to
         :meth:`choose` on the tracker's load array (correct for any
         dispatcher); jsq/p2c override with heap / O(1) reads.  Must be
-        decision-identical to ``choose`` — including rng consumption."""
-        return self.choose(fleet.loads, rng)
+        decision-identical to ``choose`` — including rng consumption.
+        Routes on ``routing_loads`` so health-excluded nodes (pinned to
+        +inf) lose every load comparison; with no exclusions that is the
+        plain load list itself."""
+        return self.choose(fleet.routing_loads, rng)
 
 
 _REGISTRY = Registry("dispatcher")

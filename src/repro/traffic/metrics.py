@@ -100,6 +100,15 @@ class TrafficMetrics:
     per_tenant_slowdown: Optional[dict] = None
     jain_dominant_share: Optional[float] = None
     dominant_share_mean: Optional[dict] = None
+    # fault/recovery accounting (None unless the run armed ``faults=`` —
+    # see repro.chaos); same append-only as_dict contract as fairness
+    faults_injected: Optional[int] = None
+    jobs_lost: Optional[int] = None
+    jobs_retried: Optional[int] = None
+    jobs_recovered: Optional[int] = None
+    retries_exhausted: Optional[int] = None
+    jobs_shed: Optional[int] = None
+    availability_by_tier: Optional[dict] = None
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -139,6 +148,16 @@ class TrafficMetrics:
             out["jain_dominant_share"] = self.jain_dominant_share
             out["dominant_share_mean"] = dict(
                 sorted((self.dominant_share_mean or {}).items()))
+        # chaos keys: appended only when fault injection was armed
+        if self.faults_injected is not None:
+            out["faults_injected"] = self.faults_injected
+            out["jobs_lost"] = self.jobs_lost
+            out["jobs_retried"] = self.jobs_retried
+            out["jobs_recovered"] = self.jobs_recovered
+            out["retries_exhausted"] = self.retries_exhausted
+            out["jobs_shed"] = self.jobs_shed
+            out["availability_by_tier"] = dict(
+                sorted((self.availability_by_tier or {}).items()))
         return out
 
 
@@ -146,7 +165,7 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
               pe_seconds_busy: float = 0.0, total_pes: int = 0,
               queue_depth_samples: Sequence[int] = (),
               preemptions: int = 0, migrations: int = 0,
-              fairness=None) -> TrafficMetrics:
+              fairness=None, chaos=None) -> TrafficMetrics:
     """Fold job records into :class:`TrafficMetrics`.
 
     ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
@@ -159,12 +178,27 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
     `repro.fairness` dependency) is a
     :class:`~repro.fairness.accounting.FairnessReport`-shaped object; its
     numbers populate the gated fairness fields.
+
+    ``chaos`` (optional, duck-typed likewise) is a
+    :class:`~repro.chaos.controller.ChaosController`-shaped object; its
+    counters populate the gated fault/recovery fields, and per-tier
+    availability (completed / arrived) is computed from the records.
     """
     lats = [r.latency for r in records if r.latency is not None]
     completed = [r for r in records if r.completed is not None]
     met = sum(1 for r in completed if r.met_deadline)
     misses = sum(1 for r in records if not r.met_deadline)
     cap = duration_s * total_pes
+    availability = None
+    if chaos is not None:
+        arrived_by_tier: dict = {}
+        done_by_tier: dict = {}
+        for r in records:
+            arrived_by_tier[r.tier] = arrived_by_tier.get(r.tier, 0) + 1
+            if r.completed is not None:
+                done_by_tier[r.tier] = done_by_tier.get(r.tier, 0) + 1
+        availability = {t: done_by_tier.get(t, 0) / n
+                        for t, n in arrived_by_tier.items()}
     return TrafficMetrics(
         jobs_arrived=len(records),
         jobs_rejected=sum(1 for r in records if r.rejected),
@@ -192,6 +226,16 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
             dict(fairness.dominant_share_mean)
             if fairness is not None and fairness.dominant_share_mean
             is not None else None),
+        faults_injected=(chaos.faults_injected
+                         if chaos is not None else None),
+        jobs_lost=chaos.jobs_lost if chaos is not None else None,
+        jobs_retried=chaos.jobs_retried if chaos is not None else None,
+        jobs_recovered=(chaos.jobs_recovered
+                        if chaos is not None else None),
+        retries_exhausted=(chaos.retries_exhausted
+                           if chaos is not None else None),
+        jobs_shed=chaos.jobs_shed if chaos is not None else None,
+        availability_by_tier=availability,
     )
 
 

@@ -137,6 +137,8 @@ class MigrateOnPressure(Rebalancer):
         for node in nodes:
             if node is src:
                 continue
+            if not node.alive or node.health != "healthy":
+                continue  # never migrate onto a failed/suspect node
             if node.scheduler.n_active >= node.max_concurrent:
                 continue
             key = (node.in_system, node.index)

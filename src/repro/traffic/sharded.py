@@ -45,7 +45,9 @@ from __future__ import annotations
 
 import heapq
 import multiprocessing
+import os
 import random
+import time
 from typing import Sequence
 
 from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
@@ -79,6 +81,12 @@ class _RoutedLoads:
         self.loads[i] += 1
         heapq.heappush(self._heap, (self.loads[i], i))
 
+    @property
+    def routing_loads(self) -> Sequence[int]:
+        # FleetLoads surface parity (Dispatcher.choose_tracked routes on
+        # it); pods have no health exclusion, so it is the plain view
+        return self.loads
+
     def min_index(self) -> int:
         heap = self._heap
         loads = self.loads
@@ -98,12 +106,14 @@ class _Pod:
     def __init__(self, base: int, count: int, n_arrays: int, jobs, *,
                  policy: str, backend: str, dispatch: str,
                  max_concurrent: int, queue_cap: int, seed: int,
-                 preemption, check_invariants: bool, obs_cfg=None):
+                 preemption, check_invariants: bool, obs_cfg=None,
+                 kill_at_epoch: "int | None" = None):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
         self.base = base
         self.count = count
         self.jobs = jobs
+        self.kill_at_epoch = kill_at_epoch  # pod_kill fault (repro.chaos)
         bk = resolve_backend(backend)
         pol = resolve_policy(policy)
         time_fn = bk.time_fn()
@@ -226,7 +236,7 @@ class _Pod:
             # per-node, not pre-summed: the coordinator adds them flat in
             # global node order so the float total is byte-identical to
             # the single-process left-to-right sum
-            "pe_busy": [n.scheduler.pe_seconds_busy for n in self.nodes],
+            "pe_busy": [n.pe_seconds_busy for n in self.nodes],
             "preemptions": sum(n.scheduler.n_preemptions
                                for n in self.nodes),
             "max_now": max(n.scheduler.now for n in self.nodes),
@@ -238,8 +248,13 @@ def _pod_worker(pod: _Pod, epochs, conn) -> None:
     materialized job list arrive via ``fork`` (copy-on-write), so only the
     small per-epoch snapshots and the final fold cross the pipe."""
     try:
-        for lo, hi in epochs:
+        for ei, (lo, hi) in enumerate(epochs):
             snapshot = conn.recv()
+            if ei == pod.kill_at_epoch:
+                # pod_kill fault: hard process death mid-epoch — no error
+                # message crosses the pipe, the coordinator must detect
+                # the dead worker itself (ShardedTrafficSimulator._recv)
+                os._exit(13)
             conn.send(pod.run_epoch(lo, hi, snapshot))
         conn.send(pod.finish())
     except BaseException as exc:   # surface the failure, don't hang the sync
@@ -270,6 +285,14 @@ class ShardedTrafficSimulator:
     ``ServeResult.timeline`` — counters add, series interleave, trace
     rings merge by timestamp.  Owned arrivals only are counted per pod, so
     merged totals match a global view.
+
+    ``faults`` accepts a `repro.chaos` plan of **pod_kill** events only
+    (``node`` = pod index, ``epoch`` = sync epoch): the targeted worker
+    process dies hard mid-epoch (``os._exit``), and the coordinator —
+    rather than hanging on the pipe — raises a RuntimeError naming the
+    dead pod within ``pod_timeout_s``.  The serial path raises the same
+    error at the same epoch.  In-fleet fault kinds (crash/degrade/...)
+    need the single-process :class:`TrafficSimulator`.
     """
 
     def __init__(self, arrivals, policy: str = "equal",
@@ -279,7 +302,8 @@ class ShardedTrafficSimulator:
                  seed: int = 0, sync_every: int = 64,
                  parallel: bool = True, preemption=None,
                  check_invariants: bool = False, fairness=False,
-                 obs=None, **arrival_kwargs):
+                 obs=None, faults=None, pod_timeout_s: float = 120.0,
+                 **arrival_kwargs):
         from repro.core.scheduler import PreemptionModel
         for label, v in (("policy", policy), ("backend", backend),
                          ("dispatch", dispatch)):
@@ -317,6 +341,30 @@ class ShardedTrafficSimulator:
         self.parallel = parallel
         self.check_invariants = check_invariants
         self.fairness = fairness
+        if pod_timeout_s <= 0:
+            raise ValueError(f"pod_timeout_s must be positive, got "
+                             f"{pod_timeout_s}")
+        self.pod_timeout_s = pod_timeout_s
+        # pod_kill fault injection: e.node indexes the POD (shard), e.epoch
+        # the sync epoch the worker dies in.  The only chaos kind that
+        # makes sense here — in-fleet faults need the single-process
+        # simulator's global view (TrafficSimulator faults=).
+        self._kill_epochs: dict[int, int] = {}
+        if faults is not None:
+            from repro.chaos import resolve_faults
+            plan = resolve_faults(faults)
+            for e in plan.events:
+                if e.kind != "pod_kill":
+                    raise ValueError(
+                        f"sharded runs only support pod_kill faults, got "
+                        f"{e.kind!r}; use TrafficSimulator faults= for "
+                        f"in-fleet fault injection")
+                if not 0 <= e.node < n_shards:
+                    raise ValueError(f"pod_kill targets pod {e.node}, run "
+                                     f"has {n_shards} shards")
+                cur = self._kill_epochs.get(e.node)
+                if cur is None or e.epoch < cur:
+                    self._kill_epochs[e.node] = e.epoch
         # coordinator-side bundle: pods run private replicas (same arm
         # flags), whose picklable states fold into this one at _fold time
         self._obs = None
@@ -334,7 +382,8 @@ class ShardedTrafficSimulator:
         e = self.sync_every
         return [(lo, min(lo + e, n_jobs)) for lo in range(0, n_jobs, e)]
 
-    def _make_pod(self, base: int, count: int, jobs) -> _Pod:
+    def _make_pod(self, pod_index: int, base: int, count: int,
+                  jobs) -> _Pod:
         obs_cfg = None
         if self._obs is not None:
             o = self._obs
@@ -355,14 +404,15 @@ class ShardedTrafficSimulator:
                     queue_cap=self.queue_cap, seed=self.seed,
                     preemption=self.preemption,
                     check_invariants=self.check_invariants,
-                    obs_cfg=obs_cfg)
+                    obs_cfg=obs_cfg,
+                    kill_at_epoch=self._kill_epochs.get(pod_index))
 
     # -- execution ----------------------------------------------------------
     def run(self) -> ServeResult:
         jobs = list(self.arrivals)
         epochs = self._epochs(len(jobs))
-        pods = [self._make_pod(base, count, jobs)
-                for base, count in self._pod_spans()]
+        pods = [self._make_pod(pi, base, count, jobs)
+                for pi, (base, count) in enumerate(self._pod_spans())]
         use_fork = self.parallel and self.n_shards > 1 and \
             "fork" in multiprocessing.get_all_start_methods()
         if use_fork:
@@ -373,9 +423,15 @@ class ShardedTrafficSimulator:
 
     def _run_serial(self, pods, epochs) -> list[dict]:
         snapshot = [0] * self.n_arrays
-        for lo, hi in epochs:
+        for ei, (lo, hi) in enumerate(epochs):
             nxt: list[int] = []
-            for pod in pods:
+            for pi, pod in enumerate(pods):
+                if ei == pod.kill_at_epoch:
+                    # same failure surface as the forked path: the epoch
+                    # sync cannot complete once a pod is gone
+                    raise RuntimeError(
+                        f"sharded pod {pi} died at epoch {ei} "
+                        f"(pod_kill fault)")
                 nxt.extend(pod.run_epoch(lo, hi, snapshot))
             snapshot = nxt
         return [pod.finish() for pod in pods]
@@ -394,13 +450,20 @@ class ShardedTrafficSimulator:
                 procs.append(p)
             snapshot = [0] * self.n_arrays
             for _lo, _hi in epochs:
-                for conn in conns:
-                    conn.send(snapshot)
+                for pi, conn in enumerate(conns):
+                    try:
+                        conn.send(snapshot)
+                    except BrokenPipeError:
+                        raise RuntimeError(
+                            f"sharded pod {pi} (pid {procs[pi].pid}) died "
+                            f"mid-epoch: snapshot pipe is broken"
+                        ) from None
                 nxt: list[int] = []
-                for conn in conns:
-                    nxt.extend(self._recv(conn))
+                for pi, conn in enumerate(conns):
+                    nxt.extend(self._recv(conn, procs[pi], pi))
                 snapshot = nxt
-            return [self._recv(conn) for conn in conns]
+            return [self._recv(conn, procs[pi], pi)
+                    for pi, conn in enumerate(conns)]
         finally:
             for conn in conns:
                 conn.close()
@@ -409,12 +472,31 @@ class ShardedTrafficSimulator:
                 if p.is_alive():
                     p.terminate()
 
-    @staticmethod
-    def _recv(conn):
-        msg = conn.recv()
+    def _recv(self, conn, proc, pod_index: int):
+        """Receive one pod message without hanging the sync: poll with a
+        deadline, and turn a dead worker (EOF / exited process with no
+        buffered reply) into a RuntimeError naming the pod."""
+        deadline = time.monotonic() + self.pod_timeout_s
+        while not conn.poll(0.05):
+            if not proc.is_alive() and not conn.poll(0):
+                raise RuntimeError(
+                    f"sharded pod {pod_index} (pid {proc.pid}) died "
+                    f"mid-epoch with exit code {proc.exitcode}")
+            if time.monotonic() >= deadline:
+                raise RuntimeError(
+                    f"sharded pod {pod_index} (pid {proc.pid}) sent no "
+                    f"reply within {self.pod_timeout_s:g}s; aborting the "
+                    f"epoch sync")
+        try:
+            msg = conn.recv()
+        except EOFError:
+            raise RuntimeError(
+                f"sharded pod {pod_index} (pid {proc.pid}) died "
+                f"mid-epoch with exit code {proc.exitcode}") from None
         if isinstance(msg, tuple) and len(msg) == 2 \
                 and msg[0] == "__error__":
-            raise RuntimeError(f"sharded pod failed: {msg[1]}")
+            raise RuntimeError(
+                f"sharded pod {pod_index} failed: {msg[1]}")
         return msg
 
     def _fold(self, jobs, folds: list[dict]) -> ServeResult:

@@ -61,6 +61,12 @@ class ServeResult:
     # the collected tracer + time-series registry, with exporter
     # shortcuts (render / chrome trace / CSV); None = obs disabled
     timeline: Optional[object] = None
+    # fault injection (repro.chaos) when the run armed faults=: plan and
+    # recovery-policy names plus the full ChaosReport (counters + belief
+    # transitions); all None on fault-free runs
+    faults: Optional[str] = None
+    recovery: Optional[str] = None
+    chaos: Optional[object] = None
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -102,6 +108,9 @@ class ServeResult:
         if self.rebalance is not None:
             out["rebalance"] = self.rebalance
             out["migrations"] = self.metrics.migrations
+        if self.faults is not None:
+            out["faults"] = self.faults
+            out["recovery"] = self.recovery
         if self.timeline is not None:
             out["obs"] = self.timeline.summary()
         return out
@@ -198,6 +207,19 @@ class TrafficSimulator:
       :class:`~repro.traffic.metrics.TrafficMetrics` fields and the raw
       report on ``ServeResult.fairness``.  Off (default) keeps every
       record byte-identical to pre-fairness runs.
+    * ``faults`` — a :class:`~repro.chaos.FaultPlan` (or
+      :class:`~repro.chaos.FaultEvent` / sequence of events) arms seeded
+      fault injection: crashes, blackouts, column-loss degradation, bus
+      stalls and stragglers hit the fleet mid-run; a
+      :class:`~repro.chaos.HealthMonitor` (``monitor=``) detects failures
+      at dispatch boundaries and excludes non-healthy nodes from routing;
+      the ``recovery`` policy (registry name or
+      :class:`~repro.chaos.RecoveryPolicy`, default ``retry_restart``)
+      re-dispatches lost jobs under capped exponential backoff with
+      checkpoint warm restarts, and sheds low tiers below its capacity
+      watermark.  Off (default) keeps every record byte-identical to
+      pre-chaos runs; the report lands on ``ServeResult.chaos`` and the
+      gated metrics fields.
     * ``obs`` — ``True`` (or a :class:`~repro.obs.Observability`) arms
       structured tracing + the time-series metrics registry across the
       whole run: scheduler lifecycle spans and preemption/migration
@@ -216,7 +238,8 @@ class TrafficSimulator:
                  preemption=None, rebalance_interval: float | None = None,
                  rebalancer="migrate_on_pressure", migration=None,
                  check_invariants: bool = False, fairness=False,
-                 obs=None, **arrival_kwargs):
+                 obs=None, faults=None, recovery="retry_restart",
+                 monitor=None, **arrival_kwargs):
         from repro.api.backend import resolve_backend
         from repro.api.policy import resolve_policy
         from repro.core.scheduler import PreemptionModel
@@ -297,8 +320,10 @@ class TrafficSimulator:
             # pre-resolved `.sample`/`.inc` methods — no name lookups,
             # no attribute chases in the loop body
             reg = self._registry
+            # node.scheduler is read inside the pulse loop (not hoisted
+            # here): fault injection replaces a failed node's scheduler
             self._pulse_nodes = [
-                (node, node.scheduler,
+                (node,
                  reg.series(f"node{i}.in_system").sample,
                  reg.series(f"node{i}.queue_depth").sample,
                  reg.series(f"node{i}.ready").sample,
@@ -314,6 +339,21 @@ class TrafficSimulator:
         # delta-maintained fleet loads: dispatch reads this instead of
         # scanning every node per arrival (O(N) -> O(log N) for jsq)
         self.fleet = FleetLoads(self.nodes)
+        self.chaos = None
+        if faults is not None:
+            # local import: repro.traffic stays importable without
+            # repro.chaos until fault injection is actually armed
+            from repro.chaos import (ChaosController, HealthMonitor,
+                                     resolve_faults, resolve_recovery)
+            self.chaos = ChaosController(
+                resolve_faults(faults), self.nodes, self.fleet,
+                monitor=monitor or HealthMonitor(),
+                recovery=resolve_recovery(recovery),
+                seed=seed, tracer=self._tracer)
+        elif recovery != "retry_restart" or monitor is not None:
+            raise ValueError(
+                "recovery=/monitor= have no effect without faults=; pass "
+                "a FaultPlan to arm fault injection")
         self.accounting = None
         if fairness:
             # local import: repro.traffic stays importable without
@@ -335,6 +375,9 @@ class TrafficSimulator:
     def _on_complete(self, node: ArrayNode, tenant: str, t: float) -> None:
         b = self._builders[tenant]
         b.completed = t
+        if self.chaos is not None:
+            # service-ratio observation (straggler rule) + recovered marker
+            self.chaos.note_completion(node, b, t)
         if self._registry is not None and self.accounting is not None:
             # slowdown-vs-isolated sample at completion instant; observe()
             # at arrival guarantees the isolated baseline exists by now
@@ -350,6 +393,35 @@ class TrafficSimulator:
         b.array = node.index  # migration may have re-homed the job
 
     # -- execution ----------------------------------------------------------
+    def _chaos_stream(self):
+        """Merge the arrival stream with released retry re-dispatches, in
+        non-decreasing time order; once both drain, apply any faults still
+        scheduled past the last arrival (they may release new retries)."""
+        chaos = self.chaos
+        cursor = 0.0
+        arrivals = iter(self.arrivals)
+        job = next(arrivals, None)
+        while True:
+            rt = chaos.next_retry_time()
+            if job is not None:
+                if rt is not None and rt <= job.arrival:
+                    r = chaos.pop_retry(cursor)
+                    cursor = r.arrival
+                    yield r
+                else:
+                    cursor = max(cursor, job.arrival)
+                    yield job
+                    job = next(arrivals, None)
+            elif rt is not None:
+                r = chaos.pop_retry(cursor)
+                cursor = r.arrival
+                yield r
+            else:
+                ft = chaos.next_fault_time()
+                if ft is None:
+                    return
+                chaos.advance_to(ft, self._advance)
+
     def _advance(self, t: float) -> None:
         for node in self.nodes:
             sched = node.scheduler
@@ -368,6 +440,7 @@ class TrafficSimulator:
         next_tick = interval if interval is not None else None
         registry = self._registry
         tracer = self._tracer
+        chaos = self.chaos
         node_pes = self.backend.array.rows * self.backend.array.cols
         oracle0 = _host_oracle_calls() if registry is not None else 0
         if registry is not None:
@@ -379,7 +452,8 @@ class TrafficSimulator:
             # counters after the loop — two Counter.inc() calls per
             # arrival are measurable against the overhead gate
             n_run = n_queued = n_rejected = 0
-        for job in self.arrivals:
+        stream = self.arrivals if chaos is None else self._chaos_stream()
+        for job in stream:
             last_arrival = job.arrival
             # periodic rebalance ticks up to the arrival instant
             while next_tick is not None and next_tick <= job.arrival:
@@ -387,25 +461,37 @@ class TrafficSimulator:
                 self.rebalancer.rebalance(self.nodes, next_tick,
                                           periodic=True)
                 next_tick += interval
-            # advance every array to the arrival instant first, so slots
-            # freed by completions before t are visible to the dispatcher
+            # apply faults scheduled before the arrival, then advance every
+            # array to the arrival instant, so slots freed by completions
+            # before t are visible to the dispatcher
+            if chaos is not None:
+                chaos.advance_to(job.arrival, self._advance)
             self._advance(job.arrival)
-            if job.dnng.name in self._builders:
-                raise ValueError(f"duplicate job name {job.dnng.name!r} in "
+            name = job.dnng.name
+            b = self._builders.get(name)
+            if b is None:
+                b = _RecordBuilder(job)
+                self._builders[name] = b
+            elif chaos is None or not chaos.is_retry(name):
+                raise ValueError(f"duplicate job name {name!r} in "
                                  "arrival stream")
-            b = _RecordBuilder(job)
-            self._builders[job.dnng.name] = b
-            target = self.nodes[self.dispatcher.choose_tracked(self.fleet,
-                                                               self._rng)]
-            status = target.offer(job)
-            if status != "rejected":
-                b.array = target.index
+            if chaos is None:
+                target = self.nodes[
+                    self.dispatcher.choose_tracked(self.fleet, self._rng)]
+                status = target.offer(job)
+                if status != "rejected":
+                    b.array = target.index
+            else:
+                target, status = chaos.dispatch(
+                    job, self.nodes, self.dispatcher, self.fleet, self._rng)
+                if target is not None and status in ("run", "queued"):
+                    b.array = target.index
             if tracer is not None:
                 # the tracer's entire per-arrival cost: the dispatch
                 # choice is parked on the builder and derived into
                 # dispatch/arrive/complete instants only when the trace
                 # is read (`_derive_job_instants`)
-                b.dispatch_node = target.index
+                b.dispatch_node = target.index if target is not None else -1
                 b.status0 = status
             if registry is not None:
                 if status == "run":
@@ -429,15 +515,16 @@ class TrafficSimulator:
                     t = job.arrival
                     fleet_q(t, self.fleet.queued_total)
                     fleet_in(t, sum(self.fleet.loads))
-                    for node, sched, s_in, s_q, s_ready, s_bus, s_util \
+                    for node, s_in, s_q, s_ready, s_bus, s_util \
                             in pulse_nodes:
+                        sched = node.scheduler
                         q = len(node.queue)
                         s_in(t, len(sched.tenants) + q)
                         s_q(t, q)
                         s_ready(t, len(sched._ready))
                         s_bus(t, sched.bus.busy_s)
                         if t > 0.0:
-                            s_util(t, sched.pe_seconds_busy
+                            s_util(t, node.pe_seconds_busy
                                    / (t * node_pes))
                 i_arr += 1
             if self.accounting is not None:
@@ -460,22 +547,24 @@ class TrafficSimulator:
                 next_tick += interval
         for node in self.nodes:
             node.scheduler.run()
-        end = max([n.scheduler.now for n in self.nodes]
-                  + [last_arrival, getattr(self.arrivals, "horizon", 0.0)])
+        ends = ([n.scheduler.now for n in self.nodes]
+                + [last_arrival, getattr(self.arrivals, "horizon", 0.0)])
+        if chaos is not None:
+            ends.append(chaos.last_event_t)
+        end = max(ends)
         records = tuple(b.build() for b in self._builders.values())
         pes = self.backend.array.rows * self.backend.array.cols
         fairness = (self.accounting.report(records)
                     if self.accounting is not None else None)
         metrics = summarize(
             records, duration_s=end,
-            pe_seconds_busy=sum(n.scheduler.pe_seconds_busy
-                                for n in self.nodes),
+            pe_seconds_busy=sum(n.pe_seconds_busy for n in self.nodes),
             total_pes=pes * self.n_arrays,
             queue_depth_samples=depth_samples,
             preemptions=sum(n.scheduler.n_preemptions for n in self.nodes),
             migrations=(self.rebalancer.n_migrations
                         if self.rebalancer is not None else 0),
-            fairness=fairness)
+            fairness=fairness, chaos=chaos)
         timeline = None
         if self._obs is not None:
             if tracer is not None:
@@ -524,7 +613,10 @@ class TrafficSimulator:
             rebalance=(getattr(self.rebalancer, "name", None)
                        or type(self.rebalancer).__name__
                        if self.rebalancer is not None else None),
-            fairness=fairness, timeline=timeline)
+            fairness=fairness, timeline=timeline,
+            faults=chaos.plan.name if chaos is not None else None,
+            recovery=chaos.recovery.name if chaos is not None else None,
+            chaos=chaos.report() if chaos is not None else None)
 
 
 def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:

@@ -1,0 +1,732 @@
+"""`repro.chaos` — fault injection, detection, and recovery.
+
+Covers the unit surfaces (FaultPlan schedules, RetryPolicy backoff,
+truncate_dnng warm-restart graphs, ArrayNode fail/degrade/repair,
+HealthMonitor classification, FleetLoads exclusion) and the end-to-end
+contracts the chaos bench gates: seeded determinism, fault-free byte
+purity, recovery strictly beating no-recovery on availability, and the
+sharded pod_kill failure surface (no pipe hang — a RuntimeError names the
+dead pod).
+"""
+
+import dataclasses
+import json
+import random
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.chaos import (
+    FAULT_KINDS,
+    FaultEvent,
+    FaultPlan,
+    HealthMonitor,
+    NoRecovery,
+    RetryPolicy,
+    RetryRestart,
+    list_recoveries,
+    resolve_faults,
+    resolve_recovery,
+    truncate_dnng,
+)
+from repro.core.dnng import DNNG, LayerShape
+from repro.traffic.arrivals import PoissonArrivals
+from repro.traffic.cluster import FleetLoads, JoinShortestQueue
+from repro.traffic.simulator import TrafficSimulator, serve
+
+
+def _small_serve(**kwargs):
+    kwargs.setdefault("rate", 3000.0)
+    kwargs.setdefault("horizon", 0.05)
+    kwargs.setdefault("n_arrays", 4)
+    kwargs.setdefault("seed", 7)
+    kwargs.setdefault("pool", "light")
+    kwargs.setdefault("slo_s", 0.05)
+    return serve("poisson", **kwargs)
+
+
+def _layer(i):
+    return LayerShape(M=8, N=8, C=8, R=1, S=1, H=8, W=8, P=8, Q=8, name=f"L{i}")
+
+
+def _dnng(n_layers=4, edges=None, name="g"):
+    return DNNG(name=name, layers=tuple(_layer(i) for i in range(n_layers)),
+                edges=edges)
+
+
+# ---------------------------------------------------------------------------
+# fault plans
+# ---------------------------------------------------------------------------
+
+
+class TestFaultPlan:
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            FaultEvent(t=0.0, kind="meltdown")
+        with pytest.raises(ValueError):
+            FaultEvent(t=-1.0, kind="crash")
+        with pytest.raises(ValueError):
+            FaultEvent(t=0.0, kind="blackout")  # needs duration_s > 0
+        with pytest.raises(ValueError):
+            FaultEvent(t=0.0, kind="degrade")  # needs dead_cols >= 1
+        with pytest.raises(ValueError):
+            FaultEvent(t=0.0, kind="straggler", factor=1.0)  # needs > 1
+        with pytest.raises(ValueError):
+            FaultEvent(t=0.0, kind="bus_stall", factor=0.5)
+
+    def test_plan_sorts_events_by_time(self):
+        e1 = FaultEvent(t=0.5, kind="crash", node=1)
+        e2 = FaultEvent(t=0.1, kind="crash", node=2)
+        plan = FaultPlan((e1, e2))
+        assert [e.t for e in plan.events] == [0.1, 0.5]
+        assert len(plan) == 2
+        assert plan.kinds() == {"crash": 2}
+
+    def test_seeded_plan_is_deterministic(self):
+        kw = dict(horizon=1.0, n_nodes=8, crashes=2, blackouts=1,
+                  degrades=1, bus_stalls=1, stragglers=1)
+        a = FaultPlan.seeded(42, **kw)
+        b = FaultPlan.seeded(42, **kw)
+        assert a == b
+        assert FaultPlan.seeded(43, **kw) != a
+        assert len(a) == 6
+        assert all(0.25 <= e.t <= 0.75 for e in a.events)
+        assert all(e.node < 8 for e in a.events)
+
+    def test_resolve_faults_coercions(self):
+        e = FaultEvent(t=0.1, kind="crash")
+        assert resolve_faults(e).events == (e,)
+        assert resolve_faults([e, e]).events == (e, e)
+        plan = FaultPlan((e,), name="p")
+        assert resolve_faults(plan) is plan
+        with pytest.raises(ValueError):
+            resolve_faults("crash-everything")
+
+    def test_fault_kinds_inventory(self):
+        assert set(FAULT_KINDS) == {"crash", "blackout", "degrade",
+                                    "bus_stall", "straggler", "pod_kill"}
+
+
+# ---------------------------------------------------------------------------
+# retry policy + warm restart
+# ---------------------------------------------------------------------------
+
+
+class TestRetryPolicy:
+    def test_budget_clamps_to_last_tier(self):
+        p = RetryPolicy(budgets=(3, 2, 1))
+        assert [p.budget(t) for t in (0, 1, 2, 3, 9)] == [3, 2, 1, 1, 1]
+
+    def test_backoff_grows_and_caps(self):
+        p = RetryPolicy(base_backoff_s=1e-3, backoff_factor=2.0,
+                        max_backoff_s=3e-3, jitter_frac=0.0)
+        rng = random.Random(0)
+        delays = [p.delay_s(a, rng) for a in range(4)]
+        assert delays == [1e-3, 2e-3, 3e-3, 3e-3]
+
+    def test_jitter_stays_within_fraction(self):
+        p = RetryPolicy(base_backoff_s=1e-3, jitter_frac=0.25)
+        rng = random.Random(1)
+        for _ in range(100):
+            d = p.delay_s(0, rng)
+            assert 0.75e-3 <= d <= 1.25e-3
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RetryPolicy(base_backoff_s=0.0)
+        with pytest.raises(ValueError):
+            RetryPolicy(backoff_factor=0.5)
+        with pytest.raises(ValueError):
+            RetryPolicy(jitter_frac=1.5)
+        with pytest.raises(ValueError):
+            RetryPolicy(budgets=())
+
+
+class TestTruncateDnng:
+    def test_chain_drops_completed_prefix(self):
+        g = _dnng(4)
+        r = truncate_dnng(g, 2, arrival_time=1.5)
+        assert r.name == g.name
+        assert r.layers == g.layers[2:]
+        assert r.arrival_time == 1.5
+        assert r.edges is None
+
+    def test_zero_completed_is_a_clone(self):
+        g = _dnng(3)
+        r = truncate_dnng(g, 0, arrival_time=2.0)
+        assert r.layers == g.layers
+        assert r.arrival_time == 2.0
+
+    def test_dag_edges_remap_and_drop(self):
+        g = _dnng(4, edges=((0, 1), (0, 2), (1, 3), (2, 3)))
+        r = truncate_dnng(g, 2, arrival_time=0.0)
+        # edges out of the completed prefix are satisfied by checkpoints;
+        # only (2, 3) survives, shifted to the new index origin
+        assert r.edges == ((0, 1),)
+
+    def test_fully_completed_raises(self):
+        g = _dnng(2)
+        with pytest.raises(ValueError):
+            truncate_dnng(g, 2, arrival_time=0.0)
+
+
+class TestRecoveryPolicies:
+    def test_registry_lists_and_resolves(self):
+        names = list_recoveries()
+        assert "retry_restart" in names and "none" in names
+        assert isinstance(resolve_recovery("none"), NoRecovery)
+
+    def test_unknown_recovery_lists_registered(self):
+        with pytest.raises(ValueError, match="retry_restart"):
+            resolve_recovery("warm_fuzzies")
+
+    def test_checkpoint_granularity_floors(self):
+        r = RetryRestart(checkpoint_every=4)
+        assert [r.checkpoint_layers(k) for k in (0, 3, 4, 7, 8)] == [
+            0, 0, 4, 4, 8]
+
+    def test_tier0_never_shed(self):
+        with pytest.raises(ValueError):
+            RetryRestart(shed_below={0: 0.9})
+        r = RetryRestart(shed_below={1: 0.5, 2: 0.75})
+        assert not r.should_shed(0, 0.1)
+        assert r.should_shed(1, 0.4) and not r.should_shed(1, 0.6)
+        # a tier-2 arrival sheds below EITHER watermark at or under it
+        assert r.should_shed(2, 0.7) and r.should_shed(2, 0.4)
+        assert not r.should_shed(2, 0.8)
+
+    def test_restore_cost_uses_migration_model(self):
+        r = RetryRestart()
+        g = _dnng(3)
+        assert r.restore_s(g) == r.migration.migrate_s(g)
+
+    def test_no_recovery_has_zero_budget(self):
+        n = NoRecovery()
+        assert n.retry_budget(0) == 0
+        assert n.backoff_s(0, random.Random(0)) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# node fault surface
+# ---------------------------------------------------------------------------
+
+
+def _node(index=0, max_concurrent=2, queue_cap=4):
+    from repro.api.backend import resolve_backend
+    from repro.api.policy import resolve_policy
+    from repro.traffic.cluster import ArrayNode
+
+    bk = resolve_backend("sim")
+    return ArrayNode(index, bk.array, bk.time_fn(), bk.stage_model(),
+                     resolve_policy("equal"), max_concurrent=max_concurrent,
+                     queue_cap=queue_cap,
+                     on_complete=lambda node, tenant, t: None)
+
+
+def _jobs(n=4, horizon=0.01):
+    return list(PoissonArrivals(rate=n / horizon * 2, horizon=horizon,
+                                seed=11, pool="light", slo_s=1.0))[:n]
+
+
+class TestNodeFaultSurface:
+    def test_fail_returns_resident_jobs_with_progress(self):
+        node = _node()
+        jobs = _jobs(4)
+        for j in jobs:
+            node.offer(j)
+        lost = node.fail(jobs[-1].arrival + 1e-4)
+        assert {j.dnng.name for j, _done in lost} == {
+            j.dnng.name for j in jobs}
+        assert all(done >= 0 for _j, done in lost)
+        assert not node.alive and node.in_system == 0
+        assert node.scheduler.n_active == 0
+
+    def test_fail_banks_pe_seconds(self):
+        node = _node()
+        for j in _jobs(2):
+            node.offer(j)
+        node.scheduler.run()
+        busy = node.pe_seconds_busy
+        assert busy > 0.0
+        node.fail(node.scheduler.now)
+        assert node.pe_seconds_busy == busy  # carried across the reset
+
+    def test_repair_restores_service(self):
+        node = _node()
+        node.fail(0.0)
+        node.repair(1.0)
+        assert node.alive and node.down_since == 0.0
+        job = _jobs(1)[0]
+        job = dataclasses.replace(
+            job, arrival=1.0, dnng=job.dnng.clone(arrival_time=1.0))
+        assert node.offer(job) == "run"
+
+    def test_degrade_shrinks_and_refits(self):
+        node = _node()
+        jobs = _jobs(3)
+        for j in jobs:
+            node.offer(j)
+        cols0 = node.array.cols
+        overflow = node.degrade(jobs[-1].arrival + 1e-4, dead_cols=cols0 // 2)
+        assert node.array.cols == cols0 - cols0 // 2
+        assert node.alive
+        # everything re-fit (2 run slots + 4 queue slots >= 3 jobs)
+        assert overflow == []
+        assert node.in_system == len(jobs)
+        node.scheduler.run()
+        assert node.in_system == 0
+
+    def test_degrade_full_width_raises(self):
+        node = _node()
+        with pytest.raises(ValueError):
+            node.degrade(0.0, dead_cols=node.array.cols)
+
+    def test_scale_knobs_survive_scheduler_swap(self):
+        node = _node()
+        node.set_compute_scale(3.0)
+        node.set_bus_scale(2.0)
+        node.fail(0.0)  # installs a fresh scheduler
+        assert node.scheduler.time_scale == 3.0
+        assert node.scheduler.bus_scale == 2.0
+
+    def test_straggler_scale_slows_service(self):
+        fast, slow = _node(), _node()
+        slow.set_compute_scale(4.0)
+        job = _jobs(1)[0]
+        fast.offer(job)
+        slow.offer(job)
+        fast.scheduler.run()
+        slow.scheduler.run()
+        assert slow.scheduler.now > fast.scheduler.now
+
+
+# ---------------------------------------------------------------------------
+# health monitor
+# ---------------------------------------------------------------------------
+
+
+class _FakeNode:
+    def __init__(self, index):
+        self.index = index
+        self.alive = True
+        self.health = "healthy"
+        self.down_since = 0.0
+
+
+class _FakeFleet:
+    def __init__(self):
+        self.excluded = set()
+
+    def exclude(self, i):
+        self.excluded.add(i)
+
+    def readmit(self, i):
+        self.excluded.discard(i)
+
+
+class TestHealthMonitor:
+    def test_staleness_thresholds(self):
+        mon = HealthMonitor(suspect_after_s=1e-3, dead_after_s=3e-3)
+        nodes = [_FakeNode(0), _FakeNode(1)]
+        fleet = _FakeFleet()
+        nodes[0].alive = False
+        nodes[0].down_since = 0.0
+        mon.refresh(0.5e-3, nodes, fleet)
+        assert nodes[0].health == "healthy"  # undetectable window
+        mon.refresh(2e-3, nodes, fleet)
+        assert nodes[0].health == "suspect" and 0 in fleet.excluded
+        mon.refresh(5e-3, nodes, fleet)
+        assert nodes[0].health == "dead"
+        assert nodes[1].health == "healthy" and 1 not in fleet.excluded
+
+    def test_dispatch_failure_is_definitive_and_sticky(self):
+        mon = HealthMonitor(suspect_after_s=1e-3, dead_after_s=3e-3)
+        node, fleet = _FakeNode(0), _FakeFleet()
+        node.alive = False
+        node.down_since = 1.0
+        mon.note_dispatch_failure(node, fleet, 1.0001)
+        assert node.health == "dead" and 0 in fleet.excluded
+        # the heartbeat gap still looks fresh, but the belief must hold
+        mon.refresh(1.0002, [node], fleet)
+        assert node.health == "dead" and 0 in fleet.excluded
+
+    def test_repair_readmits(self):
+        mon = HealthMonitor(suspect_after_s=1e-3, dead_after_s=3e-3)
+        node, fleet = _FakeNode(0), _FakeFleet()
+        node.alive = False
+        node.down_since = 0.0
+        mon.refresh(5e-3, [node], fleet)
+        assert node.health == "dead"
+        node.alive = True
+        node.down_since = 0.0
+        mon.refresh(6e-3, [node], fleet)
+        assert node.health == "healthy" and 0 not in fleet.excluded
+        assert mon.transitions[-1][4] == "heartbeat_back"
+
+    def test_service_outlier_probation_cycle(self):
+        mon = HealthMonitor(outlier_factor=2.0, min_observations=3,
+                            probe_after_s=10e-3)
+        nodes = [_FakeNode(i) for i in range(3)]
+        fleet = _FakeFleet()
+        for t in range(3):
+            mon.observe(0, 1.0, t * 1e-3)
+            mon.observe(1, 1.0, t * 1e-3)
+            mon.observe(2, 10.0, t * 1e-3)  # the straggler
+        mon.refresh(4e-3, nodes, fleet)
+        assert nodes[2].health == "suspect" and 2 in fleet.excluded
+        assert mon.transitions[-1][4] == "service_outlier"
+        # probation expires: stats reset, node readmitted for re-judging
+        mon.refresh(15e-3, nodes, fleet)
+        assert nodes[2].health == "healthy" and 2 not in fleet.excluded
+        assert mon.transitions[-1][4] == "probe_ok"
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            HealthMonitor(suspect_after_s=5e-3, dead_after_s=1e-3)
+        with pytest.raises(ValueError):
+            HealthMonitor(outlier_factor=0.9)
+        with pytest.raises(ValueError):
+            HealthMonitor(ewma_alpha=0.0)
+
+
+# ---------------------------------------------------------------------------
+# fleet exclusion
+# ---------------------------------------------------------------------------
+
+
+class _LoadNode:
+    def __init__(self, index):
+        self.index = index
+        self.load = 0
+        self.queue = ()
+
+    @property
+    def in_system(self):
+        return self.load
+
+
+class TestFleetExclusion:
+    def test_routing_loads_is_the_live_list_when_clear(self):
+        fleet = FleetLoads([_LoadNode(i) for i in range(4)])
+        assert fleet.routing_loads is fleet.loads
+        fleet.exclude(2)
+        view = fleet.routing_loads
+        assert view is not fleet.loads
+        assert view[2] == float("inf") and view[0] == 0
+        fleet.readmit(2)
+        assert fleet.routing_loads is fleet.loads
+
+    def test_min_index_skips_excluded(self):
+        nodes = [_LoadNode(i) for i in range(4)]
+        fleet = FleetLoads(nodes)
+        fleet.exclude(0)
+        assert fleet.min_index() == 1
+        fleet.readmit(0)
+        assert fleet.min_index() == 0
+
+    def test_all_excluded_falls_back_to_argmin(self):
+        nodes = [_LoadNode(i) for i in range(3)]
+        nodes[1].load = -1  # force a distinct argmin
+        fleet = FleetLoads(nodes)
+        fleet.update(nodes[1])
+        for i in range(3):
+            fleet.exclude(i)
+        assert fleet.min_index() == 1
+        for i in range(3):
+            fleet.readmit(i)
+        assert fleet.min_index() == 1
+
+    def test_exclusion_churn_matches_linear_scan_seeded(self):
+        # deterministic fallback for the hypothesis property below, so
+        # the invariant is exercised even where hypothesis is absent
+        rng = random.Random(123)
+        for case in range(20):
+            n = rng.randint(2, 8)
+            ops = [rng.randint(0, 11) for _ in range(rng.randint(1, 200))]
+            self._churn(ops, n)
+
+    @settings(deadline=None, max_examples=60)
+    @given(st.lists(st.integers(min_value=0, max_value=11), min_size=1,
+                    max_size=300),
+           st.integers(min_value=2, max_value=8))
+    def test_exclusion_churn_matches_linear_scan(self, ops, n):
+        self._churn(ops, n)
+
+    def _churn(self, ops, n):
+        # property: under arbitrary interleavings of load updates,
+        # exclusions and readmissions, min_index() equals the linear
+        # argmin over non-excluded nodes (with the lowest-index
+        # tie-break), falling back to the global argmin when everything
+        # is excluded — and jsq routes identically on routing_loads
+        nodes = [_LoadNode(i) for i in range(n)]
+        fleet = FleetLoads(nodes)
+        excluded = set()
+        rng = random.Random(7)
+        jsq = JoinShortestQueue()
+        for op in ops:
+            i = op % n
+            mode = op % 3
+            if mode == 0:
+                nodes[i].load = max(0, nodes[i].load + rng.choice((-1, 1)))
+                fleet.update(nodes[i])
+            elif mode == 1:
+                fleet.exclude(i)
+                excluded.add(i)
+            else:
+                fleet.readmit(i)
+                excluded.discard(i)
+            live = [j for j in range(n) if j not in excluded] or range(n)
+            want = min(live, key=lambda j: (nodes[j].load, j))
+            assert fleet.min_index() == want
+            assert jsq.choose_tracked(fleet, rng) == want
+            view = fleet.routing_loads
+            for j in range(n):
+                if j in excluded:
+                    assert view[j] == float("inf")
+                else:
+                    assert view[j] == nodes[j].load
+
+
+# ---------------------------------------------------------------------------
+# end-to-end serving under faults
+# ---------------------------------------------------------------------------
+
+
+class TestServeUnderFaults:
+    def test_crash_recovery_beats_none_on_availability(self):
+        # underloaded on purpose: with headroom, every recovered job is a
+        # net completion (a saturated fleet would let retries crowd out
+        # fresh arrivals and wash the signal out)
+        plan = FaultPlan.single("crash", t=0.02, node=1)
+        rec = _small_serve(faults=plan, rate=2000.0)
+        none = _small_serve(faults=plan, rate=2000.0, recovery="none")
+        assert rec.chaos.jobs_recovered > 0
+        assert none.chaos.jobs_recovered == 0
+        assert rec.metrics.jobs_completed > none.metrics.jobs_completed
+        assert (rec.metrics.availability_by_tier[0]
+                > none.metrics.availability_by_tier[0])
+
+    def test_identical_seeds_identical_traces(self):
+        plan = FaultPlan.seeded(5, horizon=0.05, n_nodes=4, crashes=1,
+                                stragglers=1)
+        a = _small_serve(faults=plan)
+        b = _small_serve(faults=plan)
+        assert json.dumps(a.as_dict()) == json.dumps(b.as_dict())
+        assert a.chaos.as_dict() == b.chaos.as_dict()
+        assert a.chaos.transitions == b.chaos.transitions
+
+    def test_blackout_repairs_and_readmits(self):
+        plan = FaultPlan.single("blackout", t=0.02, node=0, duration_s=0.01)
+        res = _small_serve(faults=plan)
+        causes = [tr[4] for tr in res.chaos.transitions]
+        assert "heartbeat_back" in causes or "heartbeat_lost" in causes
+        assert res.chaos.faults_injected == 1
+
+    def test_degrade_keeps_serving_on_surviving_columns(self):
+        plan = FaultPlan.single("degrade", t=0.02, node=2, dead_cols=64)
+        res = _small_serve(faults=plan)
+        base = _small_serve()
+        assert res.metrics.jobs_completed > 0
+        # bounded inflation: the fleet lost < 1/8 of its columns
+        assert res.metrics.jobs_completed >= base.metrics.jobs_completed // 2
+
+    def test_shedding_spares_tier0(self):
+        plan = FaultPlan(
+            (FaultEvent(t=0.015, kind="crash", node=0),
+             FaultEvent(t=0.016, kind="crash", node=1)))
+        rec = RetryRestart(shed_below={1: 0.75})
+        res = _small_serve(faults=plan, recovery=rec, tiers=(0, 1))
+        assert res.chaos.jobs_shed > 0
+        # tier-0 arrivals are never shed (shed_below rejects a tier-0
+        # watermark at construction), so tier-0 availability must beat
+        # the shed tier's
+        av = res.metrics.availability_by_tier
+        assert av[0] > av[1]
+
+    def test_retry_budget_exhaustion(self):
+        # two crashes on the same node: jobs retried onto it can be lost
+        # again; tier budgets of 0 burn immediately under "none"
+        plan = FaultPlan.single("crash", t=0.02, node=1)
+        res = _small_serve(
+            faults=plan,
+            recovery=RetryRestart(retry=RetryPolicy(budgets=(1,))))
+        assert res.chaos.jobs_lost == res.chaos.jobs_retried + \
+            res.chaos.retries_exhausted
+
+    def test_chaos_report_round_trip(self):
+        res = _small_serve(faults=FaultPlan.single("crash", t=0.02, node=0))
+        d = res.as_dict()
+        assert d["faults"] == "crash"
+        assert d["recovery"] == "retry_restart"
+        assert d["jobs_lost"] == res.chaos.jobs_lost
+        assert d["availability_by_tier"] is not None
+
+    def test_pod_kill_rejected_by_single_process_sim(self):
+        with pytest.raises(ValueError, match="pod_kill"):
+            _small_serve(
+                faults=FaultEvent(t=0.0, kind="pod_kill", node=0, epoch=0))
+
+    def test_out_of_range_node_rejected(self):
+        with pytest.raises(ValueError, match="node 9"):
+            _small_serve(faults=FaultPlan.single("crash", t=0.01, node=9))
+
+    def test_recovery_knobs_require_faults(self):
+        with pytest.raises(ValueError, match="faults="):
+            _small_serve(recovery="none")
+        with pytest.raises(ValueError, match="faults="):
+            _small_serve(monitor=HealthMonitor())
+
+
+class TestFaultFreePurity:
+    def test_unarmed_serve_is_byte_stable(self):
+        # the regression the purity contract pins: with faults=None the
+        # whole chaos subsystem must be invisible — every as_dict record
+        # identical, byte for byte, to a build without repro.chaos
+        a = _small_serve()
+        b = _small_serve()
+        assert json.dumps(a.as_dict(), indent=1) == json.dumps(
+            b.as_dict(), indent=1)
+        assert a.chaos is None
+        gated = {"faults", "recovery", "faults_injected", "jobs_lost",
+                 "jobs_retried", "jobs_recovered", "retries_exhausted",
+                 "jobs_shed", "availability_by_tier"}
+        assert not gated & set(a.as_dict())
+
+    def test_armed_run_keeps_metric_key_prefix(self):
+        plan = FaultPlan.single("crash", t=0.02, node=0)
+        plain = list(_small_serve().as_dict())
+        armed = list(_small_serve(faults=plan).as_dict())
+        assert armed[: len(plain)] == plain
+
+
+# ---------------------------------------------------------------------------
+# registry error contracts (unknown names must list what IS registered)
+# ---------------------------------------------------------------------------
+
+
+class TestRegistryErrors:
+    def test_unknown_policy_lists_registered(self):
+        with pytest.raises(ValueError, match="equal"):
+            TrafficSimulator([], policy="nope")
+
+    def test_unknown_dispatcher_lists_registered(self):
+        with pytest.raises(ValueError, match="jsq"):
+            TrafficSimulator([], dispatch="nope")
+
+    def test_unknown_rebalancer_lists_registered(self):
+        with pytest.raises(ValueError, match="migrate_on_pressure"):
+            TrafficSimulator([], rebalance_interval=0.1, rebalancer="nope")
+
+    def test_unknown_arrivals_lists_registered(self):
+        with pytest.raises(ValueError, match="poisson"):
+            TrafficSimulator("nope", rate=1.0, horizon=1.0)
+
+
+# ---------------------------------------------------------------------------
+# sharded pod faults
+# ---------------------------------------------------------------------------
+
+
+def _sharded(**kwargs):
+    from repro.traffic.sharded import ShardedTrafficSimulator
+
+    kwargs.setdefault("rate", 3000.0)
+    kwargs.setdefault("horizon", 0.05)
+    kwargs.setdefault("seed", 7)
+    kwargs.setdefault("sync_every", 16)
+    kwargs.setdefault("pool", "light")
+    kwargs.setdefault("slo_s", 0.05)
+    return ShardedTrafficSimulator("poisson", n_arrays=4, n_shards=2,
+                                   **kwargs)
+
+
+class TestShardedPodFaults:
+    def test_serial_pod_kill_raises_naming_the_pod(self):
+        sim = _sharded(parallel=False,
+                       faults=FaultEvent(t=0.0, kind="pod_kill", node=1,
+                                         epoch=1))
+        with pytest.raises(RuntimeError, match=r"pod 1.*epoch 1"):
+            sim.run()
+
+    def test_forked_pod_kill_raises_instead_of_hanging(self):
+        sim = _sharded(parallel=True, pod_timeout_s=60.0,
+                       faults=FaultEvent(t=0.0, kind="pod_kill", node=1,
+                                         epoch=1))
+        with pytest.raises(RuntimeError, match="pod 1"):
+            sim.run()
+
+    def test_non_pod_kill_kinds_rejected(self):
+        with pytest.raises(ValueError, match="pod_kill"):
+            _sharded(faults=FaultEvent(t=0.01, kind="crash", node=0))
+
+    def test_pod_index_out_of_range_rejected(self):
+        with pytest.raises(ValueError, match="shards"):
+            _sharded(faults=FaultEvent(t=0.0, kind="pod_kill", node=5,
+                                       epoch=0))
+
+    def test_unkilled_run_matches_fault_free(self):
+        # a pod_kill scheduled past the last epoch never fires; the run
+        # must be byte-identical to one with no faults at all
+        a = _sharded(parallel=False).run()
+        b = _sharded(parallel=False,
+                     faults=FaultEvent(t=0.0, kind="pod_kill", node=0,
+                                       epoch=10**6)).run()
+        assert json.dumps(a.as_dict()) == json.dumps(b.as_dict())
+
+
+# ---------------------------------------------------------------------------
+# observability markers
+# ---------------------------------------------------------------------------
+
+
+class TestChaosObservability:
+    def test_fault_detect_recover_markers_in_timeline(self):
+        plan = FaultPlan.single("crash", t=0.02, node=1)
+        res = _small_serve(faults=plan, obs=True)
+        kinds = {e.kind for e in res.timeline.tracer.events()}
+        assert {"fault", "detect"} <= kinds
+        if res.chaos.jobs_recovered:
+            assert "recover" in kinds
+
+    def test_markers_export_to_chrome_trace(self):
+        plan = FaultPlan.single("blackout", t=0.02, node=0, duration_s=0.01)
+        res = _small_serve(faults=plan, obs=True)
+        data = res.timeline.chrome_trace()
+        names = {ev.get("name") for ev in data["traceEvents"]}
+        assert "fault" in names and "detect" in names
+
+    def test_controller_marks_without_tracer(self):
+        # tracer=None is the common case: the controller must not touch it
+        plan = FaultPlan.single("crash", t=0.02, node=1)
+        res = _small_serve(faults=plan)
+        assert res.timeline is None
+        assert res.chaos.faults_injected == 1
+
+
+class TestChaosStreamOrdering:
+    def test_retry_arrivals_never_go_backwards(self):
+        # pop_retry clamps releases to the stream cursor, so the merged
+        # stream stays time-ordered and submit never sees past arrivals
+        plan = FaultPlan(
+            (FaultEvent(t=0.01, kind="crash", node=0),
+             FaultEvent(t=0.02, kind="crash", node=1),
+             FaultEvent(t=0.03, kind="crash", node=2)))
+        res = _small_serve(faults=plan)
+        assert res.chaos.jobs_lost > 0
+        # every record well-formed: completion after arrival
+        for r in res.records:
+            if r.completed is not None:
+                assert r.completed >= r.arrival
+
+    def test_faults_after_last_arrival_still_apply(self):
+        plan = FaultPlan.single("crash", t=0.2, node=0)  # past horizon
+        res = _small_serve(faults=plan, horizon=0.05)
+        assert res.chaos.faults_injected == 1
+        assert res.metrics.duration_s >= 0.2
+
+    def test_controller_rejects_seeded_rng_reuse(self):
+        # two controllers with the same seed produce the same jitter
+        plan = FaultPlan.single("crash", t=0.02, node=0)
+        a = _small_serve(faults=plan, seed=3)
+        b = _small_serve(faults=plan, seed=3)
+        assert a.chaos.transitions == b.chaos.transitions

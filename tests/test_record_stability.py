@@ -34,6 +34,13 @@ SERVE_PREFIX_KEYS = ["policy", "backend", "arrivals", "dispatch",
 # AFTER the stable base keys; two independent gates — see TrafficMetrics)
 FAIRNESS_SLOWDOWN_KEYS = ["jain_fairness", "per_tenant_slowdown"]
 FAIRNESS_SHARE_KEYS = ["jain_dominant_share", "dominant_share_mean"]
+# gated chaos keys (appear ONLY when the run armed fault injection, AFTER
+# the fairness gates; the ServeResult-level faults/recovery pair follows
+# the metric counters, and the obs digest stays last)
+CHAOS_METRICS_KEYS = ["faults_injected", "jobs_lost", "jobs_retried",
+                      "jobs_recovered", "retries_exhausted", "jobs_shed",
+                      "availability_by_tier"]
+CHAOS_RESULT_KEYS = ["faults", "recovery"]
 
 
 def _small_run(**kwargs):
@@ -112,6 +119,33 @@ class TestAsDictKeyOrder:
         armed = _small_run(preemption=True, n_arrays=2,
                            rebalance_interval=0.5, obs=True).as_dict()
         assert json.dumps({k: armed[k] for k in plain}) == json.dumps(plain)
+
+    def test_chaos_keys_absent_when_unarmed(self):
+        res = _small_run()
+        got = set(res.as_dict())
+        assert not got & set(CHAOS_METRICS_KEYS + CHAOS_RESULT_KEYS)
+
+    def test_chaos_keys_append_after_fairness_gates(self):
+        from repro.chaos import FaultPlan
+        res = _small_run(fairness=True, obs=True,
+                         faults=FaultPlan.single("crash", t=0.005, node=0))
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS
+            + CHAOS_METRICS_KEYS + CHAOS_RESULT_KEYS + ["obs"])
+
+    def test_chaos_unarmed_run_byte_identical_to_pre_chaos(self):
+        # `serve(faults=None)` must be invisible at the byte level: the
+        # chaos subsystem exists in the process, but an unarmed run
+        # serializes exactly as one from a build that predates it
+        plain = _small_run(preemption=True, n_arrays=2,
+                           rebalance_interval=0.5).as_dict()
+        assert list(plain) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + ["preemption", "preemptions", "rebalance", "migrations"])
+        again = _small_run(preemption=True, n_arrays=2,
+                           rebalance_interval=0.5).as_dict()
+        assert json.dumps(plain, indent=1) == json.dumps(again, indent=1)
 
     def test_metrics_counters_stay_out_of_as_dict(self):
         m = TrafficMetrics(
