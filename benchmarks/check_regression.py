@@ -38,7 +38,12 @@ root:
   and the freshly measured armed-tracing overhead ratios (default and
   span-source serving paths) must stay within the committed
   ``overhead_budget``.  The informational audit ratio and CPU-seconds
-  fields are machine-dependent and not gated.
+  fields are machine-dependent and not gated;
+* ``BENCH_moca.json``    — the memory-contention contract flags (unarmed
+  byte purity, armed determinism, stall observed, and the headline
+  moca-beats-equal / moca-beats-width_aware tier-0 flags) are pinned at
+  1; every arm's tier-0 p99 latency and deadline-miss rate must not
+  rise.  ``wall_s`` is informational.
 
 Every comparison is printed as a metric-by-metric diff table; when
 ``$GITHUB_STEP_SUMMARY`` is set the table is also appended there as
@@ -292,6 +297,31 @@ def check_obs(gate: Gate, committed: dict, fresh: dict) -> None:
         )
 
 
+def check_moca(gate: Gate, committed: dict, fresh: dict) -> None:
+    # contract flags are pinned at 1: purity/determinism/tier-0 breakage
+    # is an engine-correctness regression, not drift
+    for key in sorted(committed["flags"]):
+        gate.check(
+            "moca contract",
+            key,
+            1.0,
+            float(fresh["flags"].get(key, 0)),
+            higher_is_better=True,
+        )
+    for policy in sorted(committed["arms"]):
+        if policy not in fresh["arms"]:
+            gate.check(f"moca {policy}", "row-present", 1.0, 0.0, True)
+            continue
+        for metric in ("tier0_p99_latency_s", "tier0_miss_rate"):
+            gate.check(
+                f"moca {policy}",
+                metric,
+                committed["arms"][policy][metric],
+                fresh["arms"][policy][metric],
+                higher_is_better=False,
+            )
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument("--tolerance", type=float, default=0.02)
@@ -303,6 +333,7 @@ def main(argv=None) -> int:
         chaos_bench,
         fairness_bench,
         kernel_bench,
+        moca_bench,
         obs_bench,
         scale_bench,
         traffic_bench,
@@ -344,6 +375,14 @@ def main(argv=None) -> int:
             # the bench's own gate tripped; fold its record into the
             # diff table anyway so the failure is itemized
             fresh_obs = _load(obs_path)
+        print("# regenerating BENCH_moca.json ...")
+        moca_path = os.path.join(tmp, "moca.json")
+        try:
+            fresh_moca = moca_bench.run(path=moca_path)
+        except SystemExit:
+            # the bench's own flag gate tripped; fold its record into
+            # the diff table anyway so the failure is itemized
+            fresh_moca = _load(moca_path)
 
     check_fig9(gate, _load(os.path.join(ROOT, "BENCH_fig9.json")), fresh_fig9)
     check_traffic(gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic)
@@ -354,6 +393,7 @@ def main(argv=None) -> int:
     )
     check_chaos(gate, _load(os.path.join(ROOT, "BENCH_chaos.json")), fresh_chaos)
     check_obs(gate, _load(os.path.join(ROOT, "BENCH_obs.json")), fresh_obs)
+    check_moca(gate, _load(os.path.join(ROOT, "BENCH_moca.json")), fresh_moca)
 
     print()
     print(gate.table())

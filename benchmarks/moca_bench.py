@@ -1,0 +1,181 @@
+"""MoCA benchmark — BENCH_moca.json.
+
+    PYTHONPATH=src python benchmarks/moca_bench.py
+
+Three questions, one record:
+
+1. **Is the memory subsystem invisible when unarmed?**  A purity flag:
+   two ``memory=None`` runs of the contention cell must serialize
+   byte-identically and carry none of the gated memory keys (the
+   committed BENCH_traffic.json byte contract is pinned separately by
+   ``tests/test_record_stability.py``).
+2. **Is the armed contention model deterministic?**  Two identical runs
+   with the fleet-shared bandwidth ledger armed must produce identical
+   serialized records — the window-indexed demand booking has no hidden
+   iteration-order dependence.
+3. **Does joint compute+memory partitioning pay?**  A bursty (MMPP)
+   heavy-model mix with one latency-critical tenant in three, overdriven
+   past the shared DRAM capacity, runs under ``equal``, ``width_aware``
+   and ``moca`` on identical streams.  ``moca`` — the only policy that
+   also caps batch tenants' bandwidth shares — must beat *both* compute-
+   only baselines on tier-0 p99 latency (strictly) and tier-0 deadline
+   miss rate (no worse), while every armed arm observes non-zero bus
+   stall.
+
+Deterministic fields are byte-stable across runs/platforms and gated by
+``benchmarks/check_regression.py`` (``check_moca``); ``wall_s`` is
+machine-dependent and informational only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_moca.json")
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (mean_service_s reuse) importable
+
+SEED = 0
+N_ARRAYS = 4
+LOAD = 1.2                   # ρ per array; the fleet is overcommitted
+JOBS = 600
+SLO_FACTOR = 4.0             # tight: contention stalls turn into misses
+TIERS = (0, 1, 1)            # one latency tenant : two batch tenants
+WINDOW_S = 1e-4              # contention accounting window
+CAPACITY = 0.5               # shared DRAM derated to half nominal
+POLICIES = ("equal", "width_aware", "moca")
+
+
+def _cell_kwargs(svc: float) -> tuple[dict, dict]:
+    rate = N_ARRAYS * LOAD / svc
+    horizon = JOBS / rate
+    sim_kw = dict(n_arrays=N_ARRAYS, dispatch="jsq", max_concurrent=4,
+                  queue_cap=8, seed=SEED)
+    arr_kw = dict(rate=rate, horizon=horizon, pool="heavy",
+                  slo_s=SLO_FACTOR * svc, tiers=TIERS)
+    return sim_kw, arr_kw
+
+
+def _tier_miss(res, tier: int) -> float:
+    rows = [r for r in res.records if r.tier == tier]
+    miss = [r for r in rows
+            if r.completed is None or r.completed > r.deadline]
+    return len(miss) / len(rows) if rows else 0.0
+
+
+def _serve(policy: str, sim_kw: dict, arr_kw: dict, armed: bool):
+    from repro.api import MemoryConfig, SchedulingConfig, ServeConfig
+    from repro.core.scheduler import ContentionModel
+    from repro.traffic import TrafficSimulator
+
+    contention = (ContentionModel(window_s=WINDOW_S, capacity=CAPACITY)
+                  if armed else None)
+    cfg = ServeConfig(scheduling=SchedulingConfig(**sim_kw),
+                      memory=MemoryConfig(contention=contention))
+    return TrafficSimulator("mmpp", policy=policy, backend="sim",
+                            config=cfg, **arr_kw).run()
+
+
+def purity_flags(sim_kw: dict, arr_kw: dict) -> dict:
+    """Unarmed runs must be byte-stable and free of gated memory keys."""
+    a = _serve("equal", sim_kw, arr_kw, armed=False).as_dict()
+    b = _serve("equal", sim_kw, arr_kw, armed=False).as_dict()
+    gated = {"memory", "memory_stall_s", "memory_stall_by_node",
+             "memory_peak_pressure"}
+    return {
+        "unarmed_byte_stable": int(
+            json.dumps(a, indent=1) == json.dumps(b, indent=1)),
+        "unarmed_has_no_memory_keys": int(not gated & set(a)),
+    }
+
+
+def determinism_flag(sim_kw: dict, arr_kw: dict) -> dict:
+    """Identical seed + contention model => identical records."""
+    a = _serve("moca", sim_kw, arr_kw, armed=True).as_dict()
+    b = _serve("moca", sim_kw, arr_kw, armed=True).as_dict()
+    return {"armed_deterministic": int(
+        json.dumps(a, indent=1) == json.dumps(b, indent=1))}
+
+
+def contention_cell(sim_kw: dict, arr_kw: dict) -> tuple[dict, dict]:
+    """equal / width_aware / moca on one overdriven contended stream."""
+    arms = {}
+    for policy in POLICIES:
+        res = _serve(policy, sim_kw, arr_kw, armed=True)
+        tier0 = res.per("tier")[0]
+        arms[policy] = {
+            "tier0_p99_latency_s": tier0.p99_latency_s,
+            "tier0_miss_rate": _tier_miss(res, 0),
+            "fleet_miss_rate": res.metrics.deadline_miss_rate,
+            "memory_stall_s": res.metrics.memory_stall_s,
+            "memory_peak_pressure": res.metrics.memory_peak_pressure,
+        }
+    moca, equal, width = (arms[p] for p in ("moca", "equal", "width_aware"))
+
+    def beats(base: dict) -> int:
+        return int(moca["tier0_p99_latency_s"] < base["tier0_p99_latency_s"]
+                   and moca["tier0_miss_rate"] <= base["tier0_miss_rate"])
+
+    flags = {
+        "contention_stall_observed": int(
+            all(a["memory_stall_s"] > 0.0 for a in arms.values())),
+        "moca_beats_equal_tier0": beats(equal),
+        "moca_beats_width_aware_tier0": beats(width),
+    }
+    return arms, flags
+
+
+def run(path: str = BENCH_JSON) -> dict:
+    from benchmarks.traffic_bench import mean_service_s
+
+    t0 = time.perf_counter()
+    svc = mean_service_s("heavy")
+    sim_kw, arr_kw = _cell_kwargs(svc)
+
+    flags = purity_flags(sim_kw, arr_kw)
+    flags.update(determinism_flag(sim_kw, arr_kw))
+    arms, cell_flags = contention_cell(sim_kw, arr_kw)
+    flags.update(cell_flags)
+
+    for k, v in flags.items():
+        print(f"# flag {k}: {v}")
+    for policy in POLICIES:
+        a = arms[policy]
+        print(f"# {policy:>12}: tier0 p99 {a['tier0_p99_latency_s']:.4f}s "
+              f"miss {a['tier0_miss_rate']:.4f} "
+              f"stall {a['memory_stall_s']:.4f}s "
+              f"peak {a['memory_peak_pressure']:.1f}")
+
+    blob = {
+        "benchmark": "moca", "backend": "sim", "seed": SEED,
+        "n_arrays": N_ARRAYS, "load": LOAD, "jobs": JOBS,
+        "slo_factor": SLO_FACTOR, "tiers": list(TIERS),
+        "window_s": WINDOW_S, "capacity": CAPACITY,
+        "flags": flags,
+        "arms": arms,
+        # -- informational (machine-dependent, not gated) --
+        "wall_s": time.perf_counter() - t0,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    bad = [k for k, v in flags.items() if v != 1]
+    if bad:
+        print(f"FAIL: moca contract flags broken: {bad}", file=sys.stderr)
+        raise SystemExit(1)
+    return blob
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--out", default=BENCH_JSON)
+    args = parser.parse_args()
+    run(path=args.out)
+    sys.exit(0)

@@ -17,7 +17,8 @@ itself pays almost nothing for the trace (see ``benchmarks/obs_bench.py``
 for the gated overhead numbers).
 """
 
-from repro.api import Session, resolve_backend
+from repro.api import (RebalanceConfig, SchedulingConfig, ServeConfig,
+                       Session, resolve_backend)
 from repro.core.partition import Partition
 from repro.obs import Observability
 from repro.sim.workloads import MODEL_POOLS, MODELS
@@ -42,12 +43,16 @@ def mean_service_s(pool):
 svc = mean_service_s("heavy")
 rate = 4 * 1.1 / svc  # 1.1x load across 4 arrays
 
+cfg = ServeConfig(
+    scheduling=SchedulingConfig(n_arrays=4, dispatch="jsq",
+                                max_concurrent=4, queue_cap=8, seed=0,
+                                preemption=True, keep_trace=True),
+    rebalance=RebalanceConfig(interval=1e-3),
+    obs=Observability(sample_every=1))
+
 res = Session(policy="deadline_preempt", backend="sim").serve(
-    "mmpp", rate=rate, horizon=240 / rate, seed=0,
-    pool="heavy", slo_s=3 * svc, burst_factor=6.0,
-    n_arrays=4, dispatch="jsq", max_concurrent=4, queue_cap=8,
-    preemption=True, rebalance_interval=1e-3,
-    keep_trace=True, obs=Observability(sample_every=1))
+    "mmpp", config=cfg, rate=rate, horizon=240 / rate,
+    pool="heavy", slo_s=3 * svc, burst_factor=6.0)
 
 print(res.timeline.render(title="bursty heavy mix, 4 arrays"))
 

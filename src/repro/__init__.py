@@ -1,0 +1,50 @@
+"""`repro` — dynamic resource partitioning for multi-tenant systolic arrays.
+
+The stable top-level surface:
+
+    from repro import Session, ServeConfig, serve, list_policies
+
+    res = Session(policy="moca").serve("mmpp", rate=40.0, horizon=1.0,
+                                       memory=True)
+
+Everything here is a lazy re-export (PEP 562): ``import repro`` stays
+cheap, and each subsystem (`repro.traffic`, `repro.chaos`, `repro.obs`)
+is only imported when its name is actually touched — the package keeps
+the "api importable without traffic" layering the submodules promise.
+"""
+
+from __future__ import annotations
+
+__all__ = [
+    "Session",
+    "serve",
+    "ServeConfig",
+    "list_policies",
+    "FaultPlan",
+    "Observability",
+]
+
+#: public name -> defining module (resolved on first attribute access)
+_EXPORTS = {
+    "Session": "repro.api.session",
+    "ServeConfig": "repro.api.config",
+    "list_policies": "repro.api.policy",
+    "serve": "repro.traffic.simulator",
+    "FaultPlan": "repro.chaos",
+    "Observability": "repro.obs",
+}
+
+
+def __getattr__(name: str):
+    module = _EXPORTS.get(name)
+    if module is None:
+        raise AttributeError(f"module {__name__!r} has no attribute "
+                             f"{name!r}")
+    import importlib
+    value = getattr(importlib.import_module(module), name)
+    globals()[name] = value       # cache: next access skips __getattr__
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -14,15 +14,26 @@ Three pieces:
   (Scale-Sim/Accelergy analogue) and ``mesh`` (device-grid latency)
   backends;
 * :mod:`repro.api.session` — the :class:`Session` facade binding one
-  policy to one backend and running workloads by name.
+  policy to one backend and running workloads by name;
+* :mod:`repro.api.config`  — the :class:`ServeConfig` value object
+  grouping every ``serve()`` knob by subsystem.
 """
 
+from repro.api.config import (
+    ChaosConfig,
+    MemoryConfig,
+    RebalanceConfig,
+    SchedulingConfig,
+    ServeConfig,
+    resolve_serve_config,
+)
 from repro.api.policy import (
     AssignContext,
     BestFitPolicy,
     DeadlinePreemptPolicy,
     EqualPolicy,
     InFlightLayer,
+    MocaPolicy,
     PartitionPolicy,
     PreemptContext,
     PriorityPolicy,
@@ -51,11 +62,14 @@ __all__ = [
     "PartitionPolicy", "TenantDemand", "AssignContext",
     "PreemptContext", "InFlightLayer",
     "EqualPolicy", "ProportionalPolicy", "BestFitPolicy", "PriorityPolicy",
-    "WidthAwarePolicy", "DeadlinePreemptPolicy",
+    "WidthAwarePolicy", "DeadlinePreemptPolicy", "MocaPolicy",
     "register_policy", "get_policy", "list_policies", "resolve_policy",
     # backends
     "Accelerator", "EnergyReport", "SimBackend", "MeshBackend",
     "register_backend", "get_backend", "list_backends", "resolve_backend",
     # session
     "Session", "SessionResult", "BaselineRun",
+    # serve config
+    "ServeConfig", "SchedulingConfig", "RebalanceConfig",
+    "ChaosConfig", "MemoryConfig", "resolve_serve_config",
 ]

@@ -34,6 +34,10 @@ Registered implementations (``list_policies()``):
                 first
 ``width_aware`` the seed scheduler's beyond-paper refinement: equal splits
                 with demand-trimmed grants and hold-for-width declines
+``moca``        MoCA-style joint compute + memory partitioning: tier-0
+                tenants first (floors + largest slices) with guaranteed
+                memory bandwidth, batch tenants throttled via the
+                ``bandwidth(ctx)`` hook while a tier-0 tenant is live
 ==============  ============================================================
 
 Adding a policy is ~30 lines: subclass :class:`PartitionPolicy`, implement
@@ -155,6 +159,11 @@ class PreemptContext:
     drain_s: Callable[[Partition], float]
     stage_in_s: Callable[[LayerShape], float]
     cost_cache: Optional[MutableMapping] = None
+    # latency class per live tenant (0 = latency-critical) and the
+    # currently-enforced per-tenant bandwidth caps — same semantics as the
+    # AssignContext fields of the same names
+    tiers: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    bandwidth: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def time(self, layer: LayerShape, part: Partition) -> float:
         """Memoized ``time_fn(layer, part)`` — shares the rebalance round's
@@ -199,6 +208,15 @@ class AssignContext:
     that carry one (supplied by ``DynamicScheduler.submit(...,
     deadline=)``); deadline-aware policies (``deadline_preempt``) use it
     for earliest-deadline-first assignment ordering.
+
+    ``tiers`` maps every live (submitted, unfinished) tenant to its
+    latency class (0 = latency-critical; supplied by ``submit(...,
+    tier=)``).  ``bandwidth`` is a live view of the per-tenant memory
+    caps currently enforced by the scheduler's
+    :class:`~repro.core.scheduler.MemorySystem` — the output of the
+    policy's own ``bandwidth(ctx)`` hook from the previous round.  Both
+    are state, not clock: policies may depend on them without breaking
+    the scheduler's dirty-round skip.
     """
 
     array: ArrayShape
@@ -206,6 +224,8 @@ class AssignContext:
     busy: Mapping[str, Partition] = dataclasses.field(default_factory=dict)
     cost_cache: Optional[MutableMapping] = None
     deadlines: Mapping[str, float] = dataclasses.field(default_factory=dict)
+    tiers: Mapping[str, int] = dataclasses.field(default_factory=dict)
+    bandwidth: Mapping[str, float] = dataclasses.field(default_factory=dict)
 
     def time(self, layer: LayerShape, part: Partition) -> float:
         """Memoized ``time_fn(layer, part)`` (falls through when no cache)."""
@@ -304,6 +324,22 @@ class PartitionPolicy(abc.ABC):
         the model configured.
         """
         return ()
+
+    def bandwidth(self, ctx: AssignContext) -> "Mapping[str, float] | None":
+        """Per-tenant memory-bandwidth caps: tenant name → share in
+        ``(0, 1)`` of the node's DRAM bandwidth; tenants absent from the
+        mapping are uncapped.
+
+        Called by the scheduler after every policy round; the returned
+        caps govern every bus transfer until the next round
+        (:meth:`repro.core.scheduler.MemorySystem.set_caps`).  The default
+        returns ``None`` — no caps, byte-identical to the cap-free bus —
+        so memory throttling is strictly opt-in per policy.  Overrides
+        must depend only on context *state* (``busy``/``tiers``/
+        ``bandwidth``), never on a clock, to keep the scheduler's
+        dirty-round skip exact.
+        """
+        return None
 
     # -- conveniences ------------------------------------------------------
     def place(self, array: ArrayShape,
@@ -735,3 +771,80 @@ class DeadlinePreemptPolicy(EqualPolicy):
         if not victims:
             return ()
         return (min(victims)[1],)
+
+
+@register_policy("moca")
+class MocaPolicy(PartitionPolicy):
+    """MoCA-style joint compute + memory partitioning per latency class
+    (Kim et al., 2023: dynamically throttling co-resident tenants' memory
+    access rates to QoS targets beats pure compute partitioning).
+
+    **Compute side** — priority-by-tier: tenants are served tier-by-tier
+    (tier 0 = latency-critical, from ``submit(..., tier=)`` via
+    ``TenantDemand.tier`` / ``AssignContext.tiers``), every placed tenant
+    gets its ``min_cols`` floor, leftover columns split equally with
+    extras to the highest tiers; ``assign`` hands the largest slices to
+    the most urgent (lowest-tier, then heaviest) layers, so a tier-0
+    arrival reaches the bus ahead of co-resident batch work.
+
+    **Memory side** — the :meth:`bandwidth` hook: while at least one
+    tier-0 tenant is live alongside batch (tier > 0) tenants, each batch
+    tenant is capped at ``max(min_share, (1 - tier0_guarantee) /
+    n_batch)`` of the node's DRAM bandwidth.  Throttled transfers spread
+    their demand over time instead of adding to it
+    (:class:`~repro.core.scheduler.MemorySystem`), which relieves the
+    shared per-window pressure exactly when the guaranteed tier needs
+    it.  With no tier mix — all tier-0 or all batch — no caps apply and
+    the memory system runs cap-free.
+
+    The hook reads only live-tenant state (``ctx.tiers``), never the
+    clock, so the scheduler's dirty-round skip stays exact.
+    """
+
+    def __init__(self, tier0_guarantee: float = 0.7,
+                 min_share: float = 0.1):
+        if not 0.0 <= tier0_guarantee < 1.0:
+            raise ValueError(
+                f"tier0_guarantee must be in [0, 1), got {tier0_guarantee}")
+        if not 0.0 < min_share <= 1.0:
+            raise ValueError(
+                f"min_share must be in (0, 1], got {min_share}")
+        self.tier0_guarantee = tier0_guarantee
+        self.min_share = min_share
+
+    def order(self, tenants: Sequence[TenantDemand]) -> list[TenantDemand]:
+        return sorted(tenants, key=lambda t: (t.tier, -t.demand))
+
+    def widths(self, total_cols: int,
+               tenants: Sequence[TenantDemand]) -> dict[str, int]:
+        placed = _admit_by_floor(self.order(tenants), total_cols, _floor_cols)
+        if not placed:
+            return {}
+        spare = total_cols - sum(_floor_cols(t) for t in placed)
+        per, extra = divmod(spare, len(placed))
+        return {t.name: _floor_cols(t) + per + (1 if i < extra else 0)
+                for i, t in enumerate(placed)}
+
+    def assign(self, ready: Sequence[ReadyLayer],
+               partitions: Sequence[Partition],
+               ctx: AssignContext | None = None) -> list[Assignment]:
+        tiers = ctx.tiers if ctx is not None else {}
+        layers = sorted(ready, key=lambda t: (tiers.get(t[0], 0),
+                                              -t[2].opr))
+        parts = sorted(partitions, key=lambda p: p.n_pes, reverse=True)
+        return [Assignment(tenant=tenant, layer_index=idx, layer=layer,
+                           partition=part)
+                for (tenant, idx, layer), part in zip(layers, parts)]
+
+    def bandwidth(self, ctx: AssignContext) -> "dict[str, float] | None":
+        tiers = ctx.tiers
+        if not tiers:
+            return None
+        batch = [name for name, tier in tiers.items() if tier > 0]
+        if not batch or len(batch) == len(tiers):
+            return None  # no tier mix: nothing to protect, nothing to cap
+        share = max(self.min_share,
+                    (1.0 - self.tier0_guarantee) / len(batch))
+        if share >= 1.0:
+            return None
+        return {name: share for name in batch}

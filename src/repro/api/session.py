@@ -199,14 +199,7 @@ class Session:
             partitioned=part, baseline=base,
             partitioned_energy=e_part, baseline_energy=e_base)
 
-    def serve(self, arrivals, *, n_arrays: int = 1, dispatch: str = "jsq",
-              max_concurrent: int = 4, queue_cap: int = 16, seed: int = 0,
-              keep_trace: bool = False, preemption=None,
-              rebalance_interval: "float | None" = None,
-              rebalancer="migrate_on_pressure", migration=None,
-              check_invariants: bool = False, fairness=False,
-              obs=None, faults=None, recovery="retry_restart",
-              monitor=None, **arrival_kwargs):
+    def serve(self, arrivals, *, config=None, **kwargs):
         """Open-loop serving: drive an arrival process through this
         session's policy × backend and return a
         :class:`repro.traffic.ServeResult` (latency percentiles,
@@ -218,6 +211,15 @@ class Session:
         ``"trace"`` — constructor kwargs such as ``rate=``/``horizon=``
         forwarded), or any time-ordered iterable of
         :class:`~repro.traffic.arrivals.Job`.
+
+        Serving knobs go in a :class:`~repro.api.config.ServeConfig`
+        (``config=``, grouped by subsystem) **or** as the historical flat
+        keywords below — one spelling per call, never both; the keywords
+        are coerced into a config in one place
+        (:func:`repro.api.config.resolve_serve_config`), so validation
+        and behavior are identical either way.  Any remaining keyword
+        arguments (``rate=``/``horizon=``/...) are forwarded to the
+        arrivals registry when ``arrivals`` is a name.
 
         ``preemption`` arms layer-granular preemption: ``True`` for the
         default :class:`~repro.core.scheduler.PreemptionModel`, or a model
@@ -262,18 +264,21 @@ class Session:
         The fault/recovery accounting comes back on
         ``ServeResult.chaos``; ``faults=None`` (default) keeps every
         serialized record byte-identical to fault-free runs.
+
+        ``memory`` (``True`` or a
+        :class:`~repro.core.scheduler.ContentionModel`) arms fleet-shared
+        DRAM bandwidth contention: concurrent partitions' stage traffic
+        draws from one per-window pool and demand beyond capacity
+        stretches transfers superlinearly; policies with a ``bandwidth``
+        hook (``moca``) throttle per-tenant memory rates on top.
+        ``memory=None`` (default) keeps every serialized record
+        byte-identical to pre-contention runs.
         """
         # local import: repro.api must stay importable without repro.traffic
         from repro.traffic.simulator import TrafficSimulator
         return TrafficSimulator(
             arrivals, policy=self.policy, backend=self.backend,
-            n_arrays=n_arrays, dispatch=dispatch,
-            max_concurrent=max_concurrent, queue_cap=queue_cap, seed=seed,
-            keep_trace=keep_trace, preemption=preemption,
-            rebalance_interval=rebalance_interval, rebalancer=rebalancer,
-            migration=migration, check_invariants=check_invariants,
-            fairness=fairness, obs=obs, faults=faults, recovery=recovery,
-            monitor=monitor, **arrival_kwargs).run()
+            config=config, **kwargs).run()
 
     def run_all(self, workloads: Sequence[str] | None = None
                 ) -> dict[str, SessionResult]:

@@ -172,6 +172,11 @@ class BatchCost:
     active_pe_cycles: "np.ndarray"
     feed_pe_cycles: "np.ndarray"
     load_pe_cycles: "np.ndarray"
+    # extra DRAM element-transfer slots lost to a reduced bandwidth share
+    # (float64; all-zero at share 1.0).  None unless the batch was priced
+    # with ``bw_shares=`` — the int64 DataflowCost columns above are
+    # computed identically either way.
+    dram_stall_elems: "np.ndarray | None" = None
 
     def __len__(self) -> int:
         return len(self.cycles)
@@ -201,7 +206,9 @@ _BATCH_STATS = {"calls": 0, "pairs": 0}
 
 
 def ws_cost_batch(gemms: "Sequence[GEMM] | np.ndarray",
-                  parts: "Sequence[Partition] | np.ndarray") -> BatchCost:
+                  parts: "Sequence[Partition] | np.ndarray",
+                  bw_shares: "Sequence[float] | np.ndarray | None" = None
+                  ) -> BatchCost:
     """Vectorized :func:`ws_cost` over paired candidates.
 
     ``gemms[i]`` is priced on ``parts[i]`` (build the cross product on the
@@ -209,6 +216,15 @@ def ws_cost_batch(gemms: "Sequence[GEMM] | np.ndarray",
     (:func:`pack_gemms` / :func:`pack_partitions`) or the dataclass
     sequences directly.  Every output field equals the scalar
     :func:`ws_cost` exactly — same integer arithmetic, elementwise.
+
+    ``bw_shares`` (optional) is the memory-bandwidth share in ``(0, 1]``
+    each pair's tenant holds (per-tenant caps, see
+    :meth:`repro.core.scheduler.MemorySystem.set_caps`): it fills the
+    ``dram_stall_elems`` column with the extra DRAM element-slots the
+    throttled tenant's traffic occupies, ``(dram_reads + dram_writes) ×
+    (1/share − 1)`` — exactly zero at share 1.0.  The int64 columns never
+    depend on it, so a ``bw_shares`` of all-ones is bit-identical to
+    omitting it.
     """
     import numpy as np
     gm = gemms if isinstance(gemms, np.ndarray) else pack_gemms(gemms)
@@ -227,6 +243,15 @@ def ws_cost_batch(gemms: "Sequence[GEMM] | np.ndarray",
     cycles = folds * per_fold
     n_pes = R * C
     macs = T * K * N
+    stall = None
+    if bw_shares is not None:
+        bw = np.asarray(bw_shares, dtype=np.float64).reshape(-1)
+        if len(bw) != len(gm):
+            raise ValueError(f"bw_shares needs one share per pair, got "
+                             f"{len(bw)} for {len(gm)} pairs")
+        if np.any(bw <= 0.0) or np.any(bw > 1.0):
+            raise ValueError("bw_shares must lie in (0, 1]")
+        stall = (K * N + T * K + T * N) * (1.0 / bw - 1.0)
     return BatchCost(
         cycles=cycles,
         folds_k=fk,
@@ -241,6 +266,7 @@ def ws_cost_batch(gemms: "Sequence[GEMM] | np.ndarray",
         active_pe_cycles=macs,
         feed_pe_cycles=folds * T * n_pes,
         load_pe_cycles=folds * R * n_pes,
+        dram_stall_elems=stall,
     )
 
 

@@ -151,6 +151,9 @@ class ScheduleResult:
     # (DynamicScheduler(keep_trace=False) over long open-loop horizons).
     busy_pe_seconds: float | None = None
     preemptions: int = 0
+    # seconds of extra bus occupancy from memory contention + per-tenant
+    # bandwidth caps (MemorySystem.stall_s); 0.0 when contention is unarmed
+    bus_stall_s: float = 0.0
 
     def tenant_trace(self, tenant: str) -> list[TraceEvent]:
         return [e for e in self.trace if e.tenant == tenant]
@@ -168,15 +171,127 @@ class ScheduleResult:
         return self.pe_seconds_busy / total if total else 0.0
 
 
-class _Bus:
-    """Shared DRAM channel: FCFS, single server."""
+@dataclasses.dataclass(frozen=True)
+class ContentionModel:
+    """MoCA-style shared-HBM interference curve (exact and deterministic).
 
-    def __init__(self) -> None:
+    Fleet DRAM demand is bucketed into fixed windows of ``window_s``
+    seconds.  ``capacity`` is the fleet bandwidth in units of one node's
+    bus (``capacity=1.0``: the whole fleet shares what a single node's
+    :class:`StageModel` assumes, so any co-residency overcommits).  A
+    window whose booked demand exceeds capacity stretches every transfer
+    it serves superlinearly:
+
+        stretch(p) = 1                      for p <= 1
+                   = 1 + alpha * (p - 1)^beta   otherwise
+
+    with ``p = demand_seconds / (window_s * capacity)``.  ``beta > 1``
+    gives the superlinear slowdown MoCA measures when co-resident tenants
+    fight over shared memory bandwidth; the curve is monotone
+    nondecreasing in ``p`` for any ``alpha >= 0, beta >= 1``.
+    """
+
+    window_s: float = 100e-6
+    capacity: float = 1.0
+    alpha: float = 1.0
+    beta: float = 2.0
+
+    def stretch(self, pressure: float) -> float:
+        if pressure <= 1.0:
+            return 1.0
+        return 1.0 + self.alpha * (pressure - 1.0) ** self.beta
+
+
+class SharedBandwidth:
+    """Fleet-shared per-window DRAM demand ledger.
+
+    One instance is shared by every node's :class:`MemorySystem` in a
+    fleet: each transfer books its *raw* (uncontended) duration into the
+    window containing its start instant, and the stretch it suffers is
+    read off the window's resulting pressure.  Nodes are advanced in a
+    fixed order by the traffic simulator, so the booking order — and
+    therefore every stretch — is deterministic run-to-run.
+    """
+
+    def __init__(self, contention: ContentionModel):
+        self.contention = contention
+        self._demand: dict[int, float] = {}   # window index -> booked seconds
+        self.peak_pressure = 0.0
+
+    def book(self, start: float, dur: float) -> float:
+        """Book ``dur`` seconds of raw demand at ``start``; return the
+        contention stretch factor the transfer suffers."""
+        c = self.contention
+        w = int(start / c.window_s)
+        d = self._demand.get(w, 0.0) + dur
+        self._demand[w] = d
+        pressure = d / (c.window_s * c.capacity)
+        if pressure > self.peak_pressure:
+            self.peak_pressure = pressure
+        return c.stretch(pressure)
+
+
+class MemorySystem:
+    """Shared DRAM channel: FCFS, single server — optionally contention-
+    aware and per-tenant rate-capped.
+
+    Unarmed (``contention is None``, no caps — the default) this is the
+    original ``_Bus``: ``acquire`` runs the identical float operations, so
+    schedules are byte-identical to the pre-memory-model engine.
+
+    Armed, two effects stack on every transfer:
+
+    * **fleet contention** — the raw duration is booked into the shared
+      per-window ledger (:class:`SharedBandwidth`) and stretched by the
+      window's MoCA interference curve;
+    * **per-tenant caps** — ``caps[tenant] = share in (0, 1)`` rate-limits
+      the tenant's DRAM access: the transfer *completes* for its owner at
+      ``duration / share``, but the bus is held only for the (contention-
+      stretched) wire time — a rate limit spreads the tenant's traffic,
+      it does not congest the channel, so the slack is immediately usable
+      by co-resident tenants.  That asymmetry is the whole point: capping
+      batch tenants delays *their* next demand into later windows while
+      tier-0 transfers find the bus free sooner.  Caps are set by the
+      policy's ``bandwidth(ctx)`` hook via :meth:`set_caps`; a throttled
+      transfer still books only its raw demand in the window ledger.
+
+    ``stall_s`` accumulates the extra transfer time beyond raw (contention
+    stretch + cap spreading) for the energy report and traffic metrics.
+    """
+
+    def __init__(self, contention: "ContentionModel | None" = None,
+                 shared: "SharedBandwidth | None" = None) -> None:
         self.free_at = 0.0
         self.busy_s = 0.0
+        self.stall_s = 0.0
+        self.caps: dict[str, float] = {}
+        if shared is None and contention is not None:
+            shared = SharedBandwidth(contention)
+        self.shared = shared
 
-    def acquire(self, now: float, dur: float) -> tuple[float, float]:
+    def set_caps(self, caps) -> None:
+        """Replace the per-tenant bandwidth caps (``None``/empty clears).
+        Mutates in place so live views held by policy contexts stay
+        current."""
+        self.caps.clear()
+        if caps:
+            self.caps.update(caps)
+
+    def acquire(self, now: float, dur: float,
+                tenant: str | None = None) -> tuple[float, float]:
         start = max(now, self.free_at)
+        if self.shared is not None or self.caps:
+            raw = dur
+            if self.shared is not None:
+                dur = raw * self.shared.book(start, raw)
+            hold = dur                       # bus occupancy: wire time only
+            cap = self.caps.get(tenant)
+            if cap is not None and 0.0 < cap < 1.0:
+                dur = dur / cap              # owner finishes later...
+            self.stall_s += dur - raw
+            self.free_at = start + hold      # ...but the bus frees at hold
+            self.busy_s += hold
+            return start, start + dur
         self.free_at = start + dur
         self.busy_s += dur
         return start, start + dur
@@ -186,12 +301,18 @@ class _Bus:
         (a preempted stage-in).  Only possible while it is still the bus's
         LAST reservation — transfers already committed behind it keep
         their windows, so the slot is sunk cost then and nothing is
-        reclaimed."""
+        reclaimed.  Window demand already booked in the shared ledger
+        stays booked for the same reason."""
         if self.free_at != end:
             return
         cut_from = max(now, start)
         self.busy_s -= end - cut_from
         self.free_at = cut_from
+
+
+# the pre-memory-model name: MemorySystem with no contention and no caps
+# IS the original shared FCFS bus
+_Bus = MemorySystem
 
 
 class _Tenant:
@@ -301,7 +422,9 @@ class DynamicScheduler:
                  keep_trace: bool = True, start_time: float = 0.0,
                  preemption: "PreemptionModel | None" = None,
                  check_invariants: bool = False,
-                 obs=None, node_index: int = 0):
+                 obs=None, node_index: int = 0,
+                 contention: "ContentionModel | None" = None,
+                 shared_bandwidth: "SharedBandwidth | None" = None):
         # lazy import: repro.api builds on this module (no import cycle)
         from repro.api.policy import AssignContext, PartitionPolicy, \
             TenantDemand, resolve_policy
@@ -323,8 +446,10 @@ class DynamicScheduler:
                        and bool(getattr(obs, "audit", False)))
         self.tenants: dict[str, _Tenant] = {}
         self.deadlines: dict[str, float] = {}
+        self.tiers: dict[str, int] = {}
         self.pset = PartitionSet(array)
-        self.bus = _Bus()
+        self.bus = MemorySystem(contention=contention,
+                                shared=shared_bandwidth)
         self.trace: list[TraceEvent] = []
         self.completion: dict[str, float] = {}
         self.now = start_time
@@ -349,7 +474,9 @@ class DynamicScheduler:
         self._ctx = AssignContext(array=array, time_fn=time_fn,
                                   busy=self.pset.busy_view(),
                                   cost_cache=self._round_cache,
-                                  deadlines=self.deadlines)
+                                  deadlines=self.deadlines,
+                                  tiers=self.tiers,
+                                  bandwidth=self.bus.caps)
         # a rebalance round is skipped while the dirty flag is clear: only
         # arrive/done/pfree events change the (ready, free-partition) state
         # assign() depends on.  AssignContext deliberately carries no clock,
@@ -362,6 +489,15 @@ class DynamicScheduler:
             and getattr(self.pol, "preempt", None) is not None
             and getattr(type(self.pol), "preempt", None)
             is not PartitionPolicy.preempt)
+        # the memory-cap hook mirrors the preempt hook's presence check:
+        # the base implementation returns None (no caps), so a policy
+        # without an override keeps the bus byte-identical to _Bus.  The
+        # hook sees only (busy, ready, tiers) state — no clock — so the
+        # dirty-skip above stays exact with it armed.
+        self._has_bandwidth_hook = (
+            getattr(self.pol, "bandwidth", None) is not None
+            and getattr(type(self.pol), "bandwidth", None)
+            is not PartitionPolicy.bandwidth)
         self._tenant_seq = itertools.count()
         # event heap: (time, seq, kind, payload); kinds: "arrive", "cdone",
         # "done", "pfree".  payload is the tenant name, except "cdone" which
@@ -406,7 +542,8 @@ class DynamicScheduler:
         return self._events[0][0] if self._events else None
 
     # -- admission ----------------------------------------------------------
-    def submit(self, dnng: DNNG, deadline: float | None = None) -> None:
+    def submit(self, dnng: DNNG, deadline: float | None = None,
+               tier: int = 0) -> None:
         """Admit one DNNG; its layers become schedulable at ``arrival_time``.
 
         Names must be unique per scheduler.  In ``keep_trace=False`` mode
@@ -416,6 +553,9 @@ class DynamicScheduler:
 
         ``deadline`` (absolute seconds) is optional SLA metadata surfaced to
         the policy's ``preempt(ctx)`` hook; it never affects scheduling
+        unless a policy acts on it.  ``tier`` is the job's latency class
+        (0 = latency-critical), surfaced to the policy via
+        ``AssignContext.tiers`` and ``TenantDemand.tier`` — likewise inert
         unless a policy acts on it.
         """
         if dnng.name in self.tenants or dnng.name in self.completion:
@@ -425,6 +565,7 @@ class DynamicScheduler:
                 f"cannot submit {dnng.name!r} at t={dnng.arrival_time} in "
                 f"the past (clock is at {self.now})")
         self.tenants[dnng.name] = _Tenant(dnng, seq=next(self._tenant_seq))
+        self.tiers[dnng.name] = tier
         if deadline is not None:
             self.deadlines[dnng.name] = deadline
         heapq.heappush(self._events, (dnng.arrival_time, next(self._seq),
@@ -446,6 +587,7 @@ class DynamicScheduler:
         del self.tenants[name]
         self._ready.pop(name, None)
         self.deadlines.pop(name, None)
+        self.tiers.pop(name, None)
         # the ready set changed: the next event's policy round must run
         # even if that event alone would not dirty the state (dirty-skip
         # exactness — see _step)
@@ -500,7 +642,8 @@ class DynamicScheduler:
         # columns (PreemptionModel docstring).
         if self.stage is not None:
             si_start, si_end = self.bus.acquire(
-                now, self._stage_costs(layer)[0] * self.bus_scale)
+                now, self._stage_costs(layer)[0] * self.bus_scale,
+                tenant=tenant)
         else:
             si_start = si_end = now
         c_dur = self.time_fn(layer, part) * self.time_scale
@@ -534,6 +677,7 @@ class DynamicScheduler:
                 d = entry[3] = self._TenantDemand(
                     name=tenant, demand=float(layer.opr),
                     width_demand=max(1, min(layer.gemm_n, cols)),
+                    tier=self.tiers.get(tenant, 0),
                     layer=layer)
             out.append(d)
         return out
@@ -576,6 +720,8 @@ class DynamicScheduler:
                 * max(0.0, now - inf.c_start) / (inf.c_end - inf.c_start))
                 for name, inf in eligible.items()},
             deadlines=dict(self.deadlines),
+            tiers=dict(self.tiers),
+            bandwidth=dict(self.bus.caps),
             time_fn=self.time_fn,
             cost_cache=cost_cache,
             drain_s=self.preemption.drain_s,
@@ -597,6 +743,10 @@ class DynamicScheduler:
             self._maybe_preempt(now, cost_cache)
         ready = self._ready_tenants(now)
         if not ready:
+            if self._has_bandwidth_hook:
+                # a round with nothing to place still refreshes the caps:
+                # tenants finishing must relax stale throttles
+                self.bus.set_caps(self.pol.bandwidth(self._ctx))
             return
         # the reusable context: its ``busy`` live view tracks allocations
         # exactly as the per-iteration snapshots of the pre-incremental
@@ -651,6 +801,12 @@ class DynamicScheduler:
                  ("declined", tuple(n for n, _l in cand
                                     if n not in granted)),
                  ("oracle_probes", len(cost_cache))))
+        if self._has_bandwidth_hook:
+            # post-grant state: the caps the policy sets here govern every
+            # bus transfer until the next policy round (dirty-skip keeps
+            # this exact — a skipped round would recompute the same caps
+            # from the same (busy, ready, tiers) state)
+            self.bus.set_caps(self.pol.bandwidth(self._ctx))
 
     def _stage_costs(self, layer: LayerShape) -> tuple[float, float]:
         """(stage_in_s, stage_out_s) memoized per layer shape — jobs of one
@@ -665,7 +821,8 @@ class DynamicScheduler:
         inf = self._inflight[tenant]
         if self.stage is not None:
             _, so_end = self.bus.acquire(
-                now, self._stage_costs(inf.layer)[1] * self.bus_scale)
+                now, self._stage_costs(inf.layer)[1] * self.bus_scale,
+                tenant=tenant)
         else:
             so_end = now
         self.pe_seconds_busy += (inf.c_end - inf.c_start) * inf.part.n_pes
@@ -705,7 +862,8 @@ class DynamicScheduler:
             # transfers behind it keep their windows)
             self.bus.abort_reservation(now, inf.si_start, inf.c_start)
             drain = self.preemption.fixed_overhead_s
-        _, dr_end = self.bus.acquire(now, drain * self.bus_scale)
+        _, dr_end = self.bus.acquire(now, drain * self.bus_scale,
+                                     tenant=tenant)
         if self.keep_trace:
             self.trace.append(TraceEvent(
                 tenant=tenant, layer_index=inf.idx,
@@ -738,6 +896,7 @@ class DynamicScheduler:
             self.n_completed += 1
             self.last_completion = now
             self.deadlines.pop(tenant, None)
+            self.tiers.pop(tenant, None)
             # retired tenants never become ready again; drop them so the
             # ready scan stays O(live tenants) over open-loop horizons
             del self.tenants[tenant]
@@ -822,7 +981,8 @@ class DynamicScheduler:
                               completion=dict(self.completion),
                               makespan=makespan, array=self.array,
                               busy_pe_seconds=self.pe_seconds_busy,
-                              preemptions=self.n_preemptions)
+                              preemptions=self.n_preemptions,
+                              bus_stall_s=self.bus.stall_s)
 
 
 def schedule_dynamic(

@@ -53,6 +53,14 @@ class EnergyModel:
     # clock-tree + always-on control dynamic power, per PE per cycle while
     # the accelerator is powered (≈30 % of a PE's active dynamic at 45 nm)
     e_clk_pj: float = 0.30
+    # memory-contention stall overheads, per stalled bus cycle
+    # (ScheduleResult.bus_stall_s × clock): the DRAM interface keeps
+    # banks active/precharging without moving useful data, and the
+    # staging SRAM port toggles waiting on it.  Both fold into the
+    # existing sram_j/dram_j buckets, priced only when a schedule
+    # actually stalled (bus_stall_s == 0.0 ⇒ byte-identical books).
+    e_stall_sram_pj: float = 0.6
+    e_stall_dram_pj: float = 1.2
 
     def leak_power(self, array: ArrayShape) -> float:
         return self.p_leak_pe_w * array.rows * array.cols
@@ -149,6 +157,15 @@ def schedule_energy_with_layers(
             # weight re-stage: the stationary K×N operands re-read from
             # DRAM (their first read was billed to the original segment)
             dram += model.e_dram_pj * layer.gemm_k * layer.gemm_n * pj
+    if result.bus_stall_s:
+        # memory-contention stalls (MemorySystem.stall_s): the bus was
+        # occupied beyond the raw transfer times — bill the stalled DRAM
+        # interface + staging-SRAM port cycles into the existing buckets.
+        # Unarmed schedules carry bus_stall_s == 0.0 and skip this block,
+        # keeping the books byte-identical to the pre-contention model.
+        stall_cycles = result.bus_stall_s * cfg.clock_hz
+        sram += model.e_stall_sram_pj * stall_cycles * pj
+        dram += model.e_stall_dram_pj * stall_cycles * pj
     leak = model.leak_power(cfg.array) * result.makespan
     clk = (model.e_clk_pj * full_pes * result.makespan * cfg.clock_hz) * pj
     return EnergyBreakdown(mac_j=mac, forward_j=fwd, sram_j=sram, dram_j=dram,

@@ -59,11 +59,19 @@ def layer_cycles(layer: LayerShape, part: Partition) -> int:
 
 
 def layer_cost_batch(layers: Sequence[LayerShape],
-                     parts: Sequence[Partition]) -> BatchCost:
+                     parts: Sequence[Partition],
+                     bw_shares: "Sequence[float] | None" = None
+                     ) -> BatchCost:
     """Vectorized :func:`layer_cost` over paired (layer, partition)
     candidates — one :func:`repro.core.dataflow.ws_cost_batch` NumPy pass
-    after the layer→GEMM lowering.  Bit-identical to the scalar path."""
-    return ws_cost_batch([GEMM.of_layer(layer) for layer in layers], parts)
+    after the layer→GEMM lowering.  Bit-identical to the scalar path.
+
+    ``bw_shares`` (optional per-pair memory-bandwidth shares) fills the
+    table's ``dram_stall_elems`` column — zeros at share 1.0, and the
+    int64 columns are untouched by it (see
+    :func:`repro.core.dataflow.ws_cost_batch`)."""
+    return ws_cost_batch([GEMM.of_layer(layer) for layer in layers], parts,
+                         bw_shares=bw_shares)
 
 
 class _BatchTimeOracle:

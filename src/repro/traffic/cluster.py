@@ -61,7 +61,8 @@ class ArrayNode:
                  keep_trace: bool = False,
                  preemption: PreemptionModel | None = None,
                  on_load_change: Callable[["ArrayNode"], None] | None = None,
-                 check_invariants: bool = False, obs=None):
+                 check_invariants: bool = False, obs=None,
+                 contention=None, shared_bandwidth=None):
         if max_concurrent < 1 or queue_cap < 0:
             raise ValueError(f"need max_concurrent >= 1 (got {max_concurrent})"
                              f" and queue_cap >= 0 (got {queue_cap})")
@@ -86,6 +87,7 @@ class ArrayNode:
         self.health = "healthy"
         self.down_since = 0.0
         self._pe_busy_carry = 0.0        # busy PE-seconds of retired schedulers
+        self._stall_carry = 0.0          # bus-stall seconds of retired scheds
         self._time_scale = 1.0           # straggler compute inflation
         self._bus_scale = 1.0            # stage bus stall inflation
         # constructor args retained so a fault can rebuild the scheduler
@@ -94,6 +96,10 @@ class ArrayNode:
         self._preemption = preemption
         self._check_invariants = check_invariants
         self._obs = obs
+        # memory-contention wiring: the fleet-shared bandwidth ledger (one
+        # SharedBandwidth across all nodes) survives scheduler rebuilds
+        self._contention = contention
+        self._shared_bw = shared_bandwidth
         self.scheduler = self._new_scheduler(0.0)
 
     def _new_scheduler(self, start_time: float) -> DynamicScheduler:
@@ -102,7 +108,9 @@ class ArrayNode:
             policy=self._policy, on_complete=self._job_done,
             keep_trace=self._keep_trace, preemption=self._preemption,
             check_invariants=self._check_invariants, obs=self._obs,
-            node_index=self.index, start_time=start_time)
+            node_index=self.index, start_time=start_time,
+            contention=self._contention,
+            shared_bandwidth=self._shared_bw)
         sched.time_scale = self._time_scale
         sched.bus_scale = self._bus_scale
         return sched
@@ -119,6 +127,12 @@ class ArrayNode:
         the fault-free path reads the same bits as before)."""
         return self._pe_busy_carry + self.scheduler.pe_seconds_busy
 
+    @property
+    def bus_stall_s(self) -> float:
+        """Memory-contention stall seconds over the node's whole life,
+        including stalls booked on schedulers retired by a fault."""
+        return self._stall_carry + self.scheduler.bus.stall_s
+
     def offer(self, job: Job) -> str:
         """Admission control at ``job.arrival``.
 
@@ -126,7 +140,8 @@ class ArrayNode:
         (parked in the bounded FIFO), or ``"rejected"`` (queue full —
         load shed, counted as a deadline miss)."""
         if self.scheduler.n_active < self.max_concurrent:
-            self.scheduler.submit(job.dnng, deadline=job.deadline)
+            self.scheduler.submit(job.dnng, deadline=job.deadline,
+                                  tier=job.tier)
             self.jobs[job.dnng.name] = job
             self._notify_submit(self, job, job.arrival)
             self._notify_load(self)
@@ -148,7 +163,7 @@ class ArrayNode:
             job = self.queue.pop(0)
             ready = max(t, self._ready_at.pop(job.dnng.name, t))
             g = job.dnng.clone(arrival_time=ready)
-            self.scheduler.submit(g, deadline=job.deadline)
+            self.scheduler.submit(g, deadline=job.deadline, tier=job.tier)
             self._notify_submit(self, job, ready)
         self._notify_load(self)
 
@@ -202,7 +217,7 @@ class ArrayNode:
         if self.scheduler.n_active < self.max_concurrent:
             arrival = max(now, ready_at, self.scheduler.now)
             g = job.dnng.clone(arrival_time=arrival)
-            self.scheduler.submit(g, deadline=job.deadline)
+            self.scheduler.submit(g, deadline=job.deadline, tier=job.tier)
             self._notify_submit(self, job, arrival)
             self._notify_load(self)
             return "run"
@@ -230,6 +245,7 @@ class ArrayNode:
         self.jobs.clear()
         self._ready_at.clear()
         self._pe_busy_carry += self.scheduler.pe_seconds_busy
+        self._stall_carry += self.scheduler.bus.stall_s
         return lost
 
     def fail(self, now: float) -> list[tuple[Job, int]]:
@@ -275,7 +291,7 @@ class ArrayNode:
                     job, dnng=truncate_dnng(job.dnng, done, arrival_time=now))
             if self.scheduler.n_active < self.max_concurrent:
                 self.scheduler.submit(job.dnng.clone(arrival_time=now),
-                                      deadline=job.deadline)
+                                      deadline=job.deadline, tier=job.tier)
                 self.jobs[job.dnng.name] = job
                 self._notify_submit(self, job, now)
             elif len(self.queue) < self.queue_cap:

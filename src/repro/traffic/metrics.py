@@ -109,6 +109,11 @@ class TrafficMetrics:
     retries_exhausted: Optional[int] = None
     jobs_shed: Optional[int] = None
     availability_by_tier: Optional[dict] = None
+    # memory-contention accounting (None unless the run armed ``memory=`` —
+    # see repro.core.scheduler.MemorySystem); appended after the chaos gates
+    memory_stall_s: Optional[float] = None
+    memory_stall_by_node: Optional[dict] = None
+    memory_peak_pressure: Optional[float] = None
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -158,6 +163,13 @@ class TrafficMetrics:
             out["jobs_shed"] = self.jobs_shed
             out["availability_by_tier"] = dict(
                 sorted((self.availability_by_tier or {}).items()))
+        # memory keys: appended only when the contention model was armed,
+        # AFTER the chaos gates (append-only byte-stability contract)
+        if self.memory_stall_s is not None:
+            out["memory_stall_s"] = self.memory_stall_s
+            out["memory_stall_by_node"] = dict(
+                sorted((self.memory_stall_by_node or {}).items()))
+            out["memory_peak_pressure"] = self.memory_peak_pressure
         return out
 
 
@@ -165,7 +177,7 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
               pe_seconds_busy: float = 0.0, total_pes: int = 0,
               queue_depth_samples: Sequence[int] = (),
               preemptions: int = 0, migrations: int = 0,
-              fairness=None, chaos=None) -> TrafficMetrics:
+              fairness=None, chaos=None, memory=None) -> TrafficMetrics:
     """Fold job records into :class:`TrafficMetrics`.
 
     ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
@@ -183,6 +195,12 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
     :class:`~repro.chaos.controller.ChaosController`-shaped object; its
     counters populate the gated fault/recovery fields, and per-tier
     availability (completed / arrived) is computed from the records.
+
+    ``memory`` (optional, duck-typed likewise) carries the contention
+    accounting of an armed memory model: ``stall_s`` (fleet total extra
+    bus seconds), ``stall_by_node`` (node index → stall seconds) and
+    ``peak_pressure`` (max per-window demand over capacity); they populate
+    the gated memory fields.
     """
     lats = [r.latency for r in records if r.latency is not None]
     completed = [r for r in records if r.completed is not None]
@@ -236,6 +254,11 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
                            if chaos is not None else None),
         jobs_shed=chaos.jobs_shed if chaos is not None else None,
         availability_by_tier=availability,
+        memory_stall_s=memory.stall_s if memory is not None else None,
+        memory_stall_by_node=(dict(memory.stall_by_node)
+                              if memory is not None else None),
+        memory_peak_pressure=(memory.peak_pressure
+                              if memory is not None else None),
     )
 
 

@@ -67,6 +67,10 @@ class ServeResult:
     faults: Optional[str] = None
     recovery: Optional[str] = None
     chaos: Optional[object] = None
+    # memory-contention model descriptor (repr of the armed
+    # ContentionModel) when the run armed memory=; None = off — the
+    # stall/pressure numbers live in the gated metrics fields
+    memory: Optional[str] = None
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -111,9 +115,22 @@ class ServeResult:
         if self.faults is not None:
             out["faults"] = self.faults
             out["recovery"] = self.recovery
+        if self.memory is not None:
+            out["memory"] = self.memory
         if self.timeline is not None:
             out["obs"] = self.timeline.summary()
         return out
+
+
+@dataclasses.dataclass(frozen=True)
+class MemoryStats:
+    """Fleet contention accounting of one armed run — the duck-typed
+    ``memory=`` payload :func:`repro.traffic.metrics.summarize` folds
+    into the gated ``memory_*`` metrics fields."""
+
+    stall_s: float                 # total extra bus-busy seconds
+    stall_by_node: dict            # node index -> stall seconds
+    peak_pressure: float           # max per-window demand / capacity
 
 
 class _RecordBuilder:
@@ -229,21 +246,54 @@ class TrafficSimulator:
       ``ServeResult.timeline``.  Pure observation — the disabled path
       adds no work and armed runs serialize the identical base record
       (the gated ``obs`` key appends after the stable prefix).
+    * ``memory`` — ``True`` (default
+      :class:`~repro.core.scheduler.ContentionModel`) or a model instance
+      arms fleet-shared DRAM bandwidth contention: every node's stage
+      transfers book demand against ONE per-window bandwidth pool, and
+      demand beyond capacity stretches transfers superlinearly (the
+      MoCA-style interference curve).  Policies with a ``bandwidth`` hook
+      (``moca``) additionally set per-tenant bandwidth caps each
+      assignment round.  Off (default) keeps every record byte-identical
+      to pre-contention runs; armed runs append the gated ``memory_*``
+      metrics keys after the chaos gates.
+
+    All knobs may instead be passed as one
+    :class:`repro.api.ServeConfig` (``config=``) — the grouped-by-
+    subsystem spelling; mixing ``config=`` with flat serve keywords
+    raises.  Remaining keyword arguments are forwarded to the arrivals
+    registry when ``arrivals`` is a name.
     """
 
     def __init__(self, arrivals, policy="equal", backend="sim",
-                 n_arrays: int = 1, dispatch: str = "jsq",
-                 max_concurrent: int = 4, queue_cap: int = 16,
-                 seed: int = 0, keep_trace: bool = False,
-                 preemption=None, rebalance_interval: float | None = None,
-                 rebalancer="migrate_on_pressure", migration=None,
-                 check_invariants: bool = False, fairness=False,
-                 obs=None, faults=None, recovery="retry_restart",
-                 monitor=None, **arrival_kwargs):
+                 config=None, **kwargs):
         from repro.api.backend import resolve_backend
+        from repro.api.config import resolve_serve_config
         from repro.api.policy import resolve_policy
-        from repro.core.scheduler import PreemptionModel
+        from repro.core.scheduler import (ContentionModel, PreemptionModel,
+                                          SharedBandwidth)
         from repro.traffic.rebalance import resolve_rebalancer
+        # ONE canonical knob object either way: bare serve kwargs are
+        # coerced into a ServeConfig here, leftovers go to the arrivals
+        # registry (repro.api.config documents the split)
+        cfg, arrival_kwargs = resolve_serve_config(config, kwargs)
+        self.config = cfg
+        n_arrays = cfg.scheduling.n_arrays
+        dispatch = cfg.scheduling.dispatch
+        max_concurrent = cfg.scheduling.max_concurrent
+        queue_cap = cfg.scheduling.queue_cap
+        seed = cfg.scheduling.seed
+        keep_trace = cfg.scheduling.keep_trace
+        preemption = cfg.scheduling.preemption
+        check_invariants = cfg.scheduling.check_invariants
+        rebalance_interval = cfg.rebalance.interval
+        rebalancer = cfg.rebalance.rebalancer
+        migration = cfg.rebalance.migration
+        fairness = cfg.fairness
+        obs = cfg.obs
+        faults = cfg.chaos.faults
+        recovery = cfg.chaos.recovery
+        monitor = cfg.chaos.monitor
+        memory = cfg.memory.contention
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
         if rebalance_interval is not None and rebalance_interval <= 0:
@@ -256,6 +306,12 @@ class TrafficSimulator:
         self.preemption = preemption
         self.rebalance_interval = rebalance_interval
         if rebalance_interval is not None:
+            # rebalancer=None is the "caller said nothing" sentinel — the
+            # default strategy name is filled in only once an interval arms
+            # the feature, so naming it explicitly without an interval
+            # errors like any other name (the fixed sentinel wart)
+            if rebalancer is None:
+                rebalancer = "migrate_on_pressure"
             if migration is not None and not isinstance(rebalancer, str):
                 raise ValueError(
                     "migration= only applies when the rebalancer is built "
@@ -265,12 +321,21 @@ class TrafficSimulator:
                 rebalancer, **({"migration": migration}
                                if migration is not None else {}))
         else:
-            if migration is not None or rebalancer != "migrate_on_pressure":
+            if migration is not None or rebalancer is not None:
                 raise ValueError(
                     "rebalancer=/migration= have no effect without "
                     "rebalance_interval=; set an interval to enable "
                     "cross-node migration")
             self.rebalancer = None
+        # memory contention: one ContentionModel + ONE SharedBandwidth
+        # ledger across the whole fleet — concurrent partitions on every
+        # node draw from the same per-window bandwidth pool
+        self.contention = None
+        self._shared_bw = None
+        if memory:
+            self.contention = (memory if isinstance(memory, ContentionModel)
+                               else ContentionModel())
+            self._shared_bw = SharedBandwidth(self.contention)
         if isinstance(arrivals, str):
             # one seed steers the whole run: the arrival stream inherits it
             # unless the caller seeds the process explicitly
@@ -311,7 +376,9 @@ class TrafficSimulator:
                       on_submit=self._on_submit, keep_trace=keep_trace,
                       preemption=preemption,
                       on_load_change=self._on_load_change,
-                      check_invariants=check_invariants, obs=self._obs)
+                      check_invariants=check_invariants, obs=self._obs,
+                      contention=self.contention,
+                      shared_bandwidth=self._shared_bw)
             for i in range(n_arrays)]
         if self.rebalancer is not None and self._obs is not None:
             self.rebalancer.obs = self._obs   # migration instant markers
@@ -360,8 +427,23 @@ class TrafficSimulator:
             # repro.fairness until the feature is actually armed
             from repro.fairness.accounting import FairnessAccounting
             from repro.fairness.drf import ResourceModel
-            resources = fairness if isinstance(fairness, ResourceModel) \
-                else None
+            if isinstance(fairness, ResourceModel):
+                resources = fairness
+            elif stage is not None:
+                # the DRF bandwidth dimension reads the *actual* staging
+                # model the schedulers charge (not its estimate defaults);
+                # with an armed contention model the DRF window is the
+                # contention window — shares and pressure then talk about
+                # the same bus-time denominator.  The sim backend's stage
+                # equals ResourceModel's defaults, so default-stage runs
+                # serialize byte-identically.
+                resources = ResourceModel(
+                    bus_bytes_per_s=stage.dram_bw_bytes,
+                    bytes_per_elem=stage.bytes_per_elem,
+                    **({"window_s": self.contention.window_s}
+                       if self.contention is not None else {}))
+            else:
+                resources = None
             self.accounting = FairnessAccounting(
                 self.backend.array, time_fn, stage=stage,
                 n_arrays=n_arrays, resources=resources,
@@ -556,6 +638,12 @@ class TrafficSimulator:
         pes = self.backend.array.rows * self.backend.array.cols
         fairness = (self.accounting.report(records)
                     if self.accounting is not None else None)
+        memory_stats = None
+        if self.contention is not None:
+            memory_stats = MemoryStats(
+                stall_s=sum(n.bus_stall_s for n in self.nodes),
+                stall_by_node={n.index: n.bus_stall_s for n in self.nodes},
+                peak_pressure=self._shared_bw.peak_pressure)
         metrics = summarize(
             records, duration_s=end,
             pe_seconds_busy=sum(n.pe_seconds_busy for n in self.nodes),
@@ -564,7 +652,7 @@ class TrafficSimulator:
             preemptions=sum(n.scheduler.n_preemptions for n in self.nodes),
             migrations=(self.rebalancer.n_migrations
                         if self.rebalancer is not None else 0),
-            fairness=fairness, chaos=chaos)
+            fairness=fairness, chaos=chaos, memory=memory_stats)
         timeline = None
         if self._obs is not None:
             if tracer is not None:
@@ -616,10 +704,17 @@ class TrafficSimulator:
             fairness=fairness, timeline=timeline,
             faults=chaos.plan.name if chaos is not None else None,
             recovery=chaos.recovery.name if chaos is not None else None,
-            chaos=chaos.report() if chaos is not None else None)
+            chaos=chaos.report() if chaos is not None else None,
+            memory=(repr(self.contention)
+                    if self.contention is not None else None))
 
 
-def serve(arrivals, policy="equal", backend="sim", **kwargs) -> ServeResult:
-    """Functional one-shot: ``serve(PoissonArrivals(...), policy="equal")``."""
+def serve(arrivals, policy="equal", backend="sim", config=None,
+          **kwargs) -> ServeResult:
+    """Functional one-shot: ``serve(PoissonArrivals(...), policy="equal")``.
+
+    Knobs go in a :class:`repro.api.ServeConfig` (``config=``) or as the
+    historical flat keywords — never both; leftover keywords are arrival
+    constructor kwargs when ``arrivals`` is a registry name."""
     return TrafficSimulator(arrivals, policy=policy, backend=backend,
-                            **kwargs).run()
+                            config=config, **kwargs).run()

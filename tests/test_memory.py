@@ -1,0 +1,331 @@
+"""Memory-contention model tests (core/scheduler MemorySystem + moca).
+
+Covers the tentpole contracts directly:
+
+* interference-curve shape (monotone, superlinear past capacity);
+* ``bw_shares`` bit-exactness at share 1.0 against BOTH cost oracles;
+* per-tenant cap enforcement in :class:`MemorySystem`;
+* the ``moca`` policy's tier-0 bandwidth guarantee;
+* default-off purity: an unarmed scheduler is byte-identical to one that
+  carries a never-pressured contention model.
+"""
+
+import json
+
+import pytest
+
+from repro.api.policy import AssignContext
+from repro.core.dataflow import GEMM, ws_cost, ws_cost_batch
+from repro.core.dnng import LayerShape, chain
+from repro.core.partition import ArrayShape, Partition
+from repro.core.scheduler import (
+    ContentionModel,
+    DynamicScheduler,
+    MemorySystem,
+    SharedBandwidth,
+    StageModel,
+)
+from repro.sim.systolic import SystolicConfig, layer_cost_batch, layer_time_fn
+
+FC = LayerShape.fc
+ARRAY = ArrayShape(128, 128)
+TIME_FN = layer_time_fn(SystolicConfig())
+
+
+def _dnng(name, n_layers=2, size=256, arrival=0.0):
+    return chain(name, [FC(f"l{i}", size, size, batch=size)
+                        for i in range(n_layers)], arrival_time=arrival)
+
+
+class TestInterferenceCurve:
+    def test_no_stretch_at_or_below_capacity(self):
+        m = ContentionModel()
+        for p in (0.0, 0.3, 0.999, 1.0):
+            assert m.stretch(p) == 1.0
+
+    def test_monotone_nondecreasing(self):
+        m = ContentionModel(alpha=1.5, beta=2.0)
+        ps = [i / 10.0 for i in range(0, 60)]
+        ss = [m.stretch(p) for p in ps]
+        assert all(b >= a for a, b in zip(ss, ss[1:]))
+
+    def test_superlinear_past_capacity(self):
+        # beta > 1: equal pressure increments cost increasingly more
+        m = ContentionModel(beta=2.0)
+        d1 = m.stretch(2.0) - m.stretch(1.0)
+        d2 = m.stretch(3.0) - m.stretch(2.0)
+        assert d2 > d1 > 0.0
+
+    def test_shared_ledger_stretch_and_peak(self):
+        c = ContentionModel(window_s=1e-4, capacity=1.0)
+        shared = SharedBandwidth(c)
+        # first booking half-fills the window: no stretch
+        assert shared.book(0.0, 0.5e-4) == 1.0
+        # second booking overcommits it 1.5x: stretch = 1 + 0.5^2
+        assert shared.book(0.0, 1.0e-4) == pytest.approx(1.25)
+        assert shared.peak_pressure == pytest.approx(1.5)
+        # a later window starts clean
+        assert shared.book(5e-4, 0.5e-4) == 1.0
+
+
+class TestBwSharesBitExactness:
+    PAIRS = [
+        (GEMM(T=256, K=256, N=256), Partition(rows=128, col_start=0,
+                                              cols=128)),
+        (GEMM(T=100, K=300, N=50), Partition(rows=128, col_start=64,
+                                             cols=64)),
+        (GEMM(T=1, K=1, N=1), Partition(rows=128, col_start=96, cols=32)),
+        (GEMM(T=4096, K=4096, N=4096), Partition(rows=128, col_start=0,
+                                                 cols=16)),
+    ]
+
+    def test_share_one_identical_to_omitted(self):
+        import numpy as np
+        gemms = [g for g, _ in self.PAIRS]
+        parts = [p for _, p in self.PAIRS]
+        plain = ws_cost_batch(gemms, parts)
+        shared = ws_cost_batch(gemms, parts, bw_shares=[1.0] * len(gemms))
+        for name in ("cycles", "macs", "dram_reads", "dram_writes",
+                     "pe_cycles", "feed_pe_cycles", "load_pe_cycles"):
+            assert (getattr(plain, name) == getattr(shared, name)).all()
+        assert plain.dram_stall_elems is None
+        assert (shared.dram_stall_elems == np.zeros(len(gemms))).all()
+
+    def test_rows_match_scalar_oracle_under_shares(self):
+        # the int64 columns equal the scalar ws_cost even when priced
+        # with a throttled share — the stall column is additive, never
+        # a perturbation of the base costs
+        gemms = [g for g, _ in self.PAIRS]
+        parts = [p for _, p in self.PAIRS]
+        table = ws_cost_batch(gemms, parts, bw_shares=[0.25] * len(gemms))
+        for i, (g, p) in enumerate(self.PAIRS):
+            assert table.row(i) == ws_cost(g, p)
+
+    def test_stall_column_formula(self):
+        g, p = self.PAIRS[0]
+        table = ws_cost_batch([g], [p], bw_shares=[0.5])
+        raw = g.K * g.N + g.T * g.K + g.T * g.N
+        assert table.dram_stall_elems[0] == pytest.approx(raw * 1.0)
+
+    def test_layer_cost_batch_passthrough(self):
+        import numpy as np
+        layers = [FC("a", 256, 256, batch=256), FC("b", 64, 512, batch=32)]
+        parts = [Partition(rows=128, col_start=0, cols=64),
+                 Partition(rows=128, col_start=64, cols=64)]
+        plain = layer_cost_batch(layers, parts)
+        shared = layer_cost_batch(layers, parts, bw_shares=[1.0, 1.0])
+        assert (plain.cycles == shared.cycles).all()
+        assert (shared.dram_stall_elems == np.zeros(2)).all()
+        half = layer_cost_batch(layers, parts, bw_shares=[0.5, 1.0])
+        assert half.dram_stall_elems[0] > 0.0
+        assert half.dram_stall_elems[1] == 0.0
+
+    def test_share_validation(self):
+        g, p = self.PAIRS[0]
+        with pytest.raises(ValueError, match="one share per pair"):
+            ws_cost_batch([g], [p], bw_shares=[0.5, 0.5])
+        for bad in (0.0, -0.5, 1.5):
+            with pytest.raises(ValueError, match=r"\(0, 1\]"):
+                ws_cost_batch([g], [p], bw_shares=[bad])
+
+
+class TestMemorySystemCaps:
+    def test_cap_divides_transfer_rate(self):
+        bus = MemorySystem()
+        bus.set_caps({"batch": 0.5})
+        start, end = bus.acquire(0.0, 1e-4, tenant="batch")
+        assert start == 0.0 and end == pytest.approx(2e-4)
+        assert bus.stall_s == pytest.approx(1e-4)
+
+    def test_uncapped_tenant_unaffected(self):
+        bus = MemorySystem()
+        bus.set_caps({"batch": 0.5})
+        start, end = bus.acquire(0.0, 1e-4, tenant="urgent")
+        assert end == 1e-4 and bus.stall_s == 0.0
+
+    def test_degenerate_caps_ignored(self):
+        # share >= 1.0 (or <= 0) is "no cap": never stretch, never divide
+        bus = MemorySystem()
+        bus.set_caps({"a": 1.0, "b": 0.0})
+        assert bus.acquire(0.0, 1e-4, tenant="a")[1] == 1e-4
+        assert bus.acquire(2e-4, 1e-4, tenant="b")[1] == pytest.approx(3e-4)
+        assert bus.stall_s == 0.0
+
+    def test_set_caps_replaces_previous_round(self):
+        bus = MemorySystem()
+        bus.set_caps({"batch": 0.5})
+        bus.set_caps(None)      # policy relaxed every cap
+        assert bus.acquire(0.0, 1e-4, tenant="batch")[1] == 1e-4
+
+    def test_cap_composes_with_contention(self):
+        c = ContentionModel(window_s=1e-3, capacity=1.0)
+        bus = MemorySystem(contention=c, shared=SharedBandwidth(c))
+        bus.set_caps({"batch": 0.5})
+        # raw demand books into the window; the cap stretches the
+        # transfer's own duration on top of any contention stretch
+        start, end = bus.acquire(0.0, 2e-4, tenant="batch")
+        assert end == pytest.approx(4e-4)   # pressure 0.2 -> stretch 1
+        assert bus.stall_s == pytest.approx(2e-4)
+
+    def test_unarmed_memory_system_has_no_overhead_state(self):
+        bus = MemorySystem()
+        s0, e0 = bus.acquire(0.0, 1e-4)
+        s1, e1 = bus.acquire(0.0, 1e-4)
+        assert (s0, e0, s1, e1) == (0.0, 1e-4, 1e-4, 2e-4)
+        assert bus.stall_s == 0.0 and bus.busy_s == pytest.approx(2e-4)
+
+
+class TestSchedulerPurity:
+    def test_unpressured_contention_is_byte_identical(self):
+        # a contention model that never overcommits (huge capacity) must
+        # reproduce the unarmed schedule exactly
+        gs = [_dnng("a", 3), _dnng("b", 2, size=128, arrival=1e-6)]
+        stage = StageModel()
+
+        def run(contention):
+            sched = DynamicScheduler(ARRAY, TIME_FN, stage=stage,
+                                     policy="equal", contention=contention)
+            for g in gs:
+                sched.submit(g)
+            sched.run()
+            return sched.result()
+
+        plain = run(None)
+        armed = run(ContentionModel(capacity=1e9))
+        assert plain.completion == armed.completion
+        assert plain.makespan == armed.makespan
+        assert armed.bus_stall_s == 0.0
+
+    def test_contention_stretches_contended_schedule(self):
+        gs = [_dnng(f"t{i}", 3, size=1024) for i in range(4)]
+        stage = StageModel()
+
+        def run(contention):
+            sched = DynamicScheduler(ARRAY, TIME_FN, stage=stage,
+                                     policy="equal", contention=contention)
+            for g in gs:
+                sched.submit(g)
+            sched.run()
+            return sched.result()
+
+        plain = run(None)
+        tight = run(ContentionModel(window_s=1e-5, capacity=0.25))
+        assert tight.bus_stall_s > 0.0
+        assert tight.makespan > plain.makespan
+
+    def test_default_policy_sets_no_caps(self):
+        sched = DynamicScheduler(ARRAY, TIME_FN, stage=StageModel(),
+                                 policy="equal",
+                                 contention=ContentionModel())
+        sched.submit(_dnng("a"))
+        sched.submit(_dnng("b", arrival=1e-6))
+        sched.run()
+        assert sched.bus.caps == {}
+
+
+class TestMocaTierGuarantee:
+    def _ctx(self, tiers):
+        return AssignContext(array=ARRAY, tiers=tiers)
+
+    def _policy(self, **kw):
+        from repro.api.policy import MocaPolicy
+        return MocaPolicy(**kw)
+
+    def test_tier0_never_capped(self):
+        pol = self._policy()
+        caps = pol.bandwidth(self._ctx({"u": 0, "b1": 1, "b2": 2}))
+        assert "u" not in caps
+        assert set(caps) == {"b1", "b2"}
+
+    def test_batch_split_of_leftover_bandwidth(self):
+        pol = self._policy(tier0_guarantee=0.7, min_share=0.01)
+        caps = pol.bandwidth(self._ctx({"u": 0, "b1": 1, "b2": 1}))
+        assert caps == {"b1": pytest.approx(0.15),
+                        "b2": pytest.approx(0.15)}
+
+    def test_min_share_floor(self):
+        pol = self._policy(tier0_guarantee=0.7, min_share=0.1)
+        tiers = {"u": 0} | {f"b{i}": 1 for i in range(6)}
+        caps = pol.bandwidth(self._ctx(tiers))
+        assert all(v == pytest.approx(0.1) for v in caps.values())
+
+    def test_no_caps_without_tier_mix(self):
+        pol = self._policy()
+        assert pol.bandwidth(self._ctx({})) is None
+        assert pol.bandwidth(self._ctx({"a": 0, "b": 0})) is None
+        assert pol.bandwidth(self._ctx({"a": 1, "b": 2})) is None
+
+    def test_degenerate_share_means_no_caps(self):
+        pol = self._policy(tier0_guarantee=0.0, min_share=1.0)
+        assert pol.bandwidth(self._ctx({"u": 0, "b": 1})) is None
+
+    def test_param_validation(self):
+        from repro.api.policy import MocaPolicy
+        with pytest.raises(ValueError, match="tier0_guarantee"):
+            MocaPolicy(tier0_guarantee=1.0)
+        with pytest.raises(ValueError, match="min_share"):
+            MocaPolicy(min_share=0.0)
+
+    def test_scheduler_enforces_moca_caps_live(self):
+        # a live tier mix installs caps on the scheduler's MemorySystem;
+        # when the mix dissolves (batch tenant finishes last) the caps
+        # are relaxed again by the end-of-round hook
+        sched = DynamicScheduler(ARRAY, TIME_FN, stage=StageModel(),
+                                 policy="moca",
+                                 contention=ContentionModel())
+        sched.submit(_dnng("urgent", n_layers=1, size=64), tier=0)
+        sched.submit(_dnng("batch", n_layers=6, size=1024,
+                           arrival=1e-9), tier=1)
+        saw_caps = []
+        orig = type(sched.bus).acquire
+
+        def spy(bus, now, dur, tenant=None):
+            saw_caps.append(dict(bus.caps))
+            return orig(bus, now, dur, tenant=tenant)
+
+        sched.bus.acquire = spy.__get__(sched.bus)
+        sched.run()
+        assert any(c.get("batch") for c in saw_caps)
+        assert all("urgent" not in c for c in saw_caps)
+        assert sched.bus.caps == {}   # no live tenants left -> no caps
+
+    def test_moca_protects_tier0_under_contention(self):
+        # end-to-end guarantee: under an overcommitted bus the tier-0
+        # tenant finishes no later with moca than with the tier-blind
+        # equal policy on the identical workload
+        gs = ([_dnng("urgent", n_layers=2, size=512)]
+              + [_dnng(f"batch{i}", n_layers=4, size=1024, arrival=1e-9)
+                 for i in range(3)])
+        tiers = {"urgent": 0, "batch0": 1, "batch1": 1, "batch2": 1}
+        contention = ContentionModel(window_s=1e-5, capacity=0.25)
+
+        def run(policy):
+            sched = DynamicScheduler(ARRAY, TIME_FN, stage=StageModel(),
+                                     policy=policy, contention=contention)
+            for g in gs:
+                sched.submit(g, tier=tiers[g.name])
+            sched.run()
+            return sched.result().completion["urgent"]
+
+        assert run("moca") <= run("equal")
+
+
+class TestServeMemoryGate:
+    def test_serve_memory_stats_and_purity(self):
+        from repro.traffic.simulator import serve
+
+        def run(**kw):
+            return serve("poisson", policy="equal", rate=1500.0,
+                         horizon=0.01, seed=3, pool="light", slo_s=0.01,
+                         n_arrays=2, max_concurrent=2, **kw)
+
+        plain = run()
+        armed = run(memory=ContentionModel(window_s=1e-5, capacity=0.5))
+        m = armed.metrics
+        assert m.memory_stall_s is not None and m.memory_stall_s >= 0.0
+        assert set(m.memory_stall_by_node) == {0, 1}
+        assert m.memory_peak_pressure >= 0.0
+        # unarmed record carries no memory keys and is run-to-run stable
+        assert "memory_stall_s" not in plain.metrics.as_dict()
+        assert (json.dumps(plain.as_dict(), indent=1)
+                == json.dumps(run().as_dict(), indent=1))

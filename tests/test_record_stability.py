@@ -41,6 +41,12 @@ CHAOS_METRICS_KEYS = ["faults_injected", "jobs_lost", "jobs_retried",
                       "jobs_recovered", "retries_exhausted", "jobs_shed",
                       "availability_by_tier"]
 CHAOS_RESULT_KEYS = ["faults", "recovery"]
+# gated memory-contention keys (appear ONLY when the run armed memory=,
+# AFTER the chaos gates; the ServeResult-level "memory" descriptor follows
+# faults/recovery, and the obs digest stays last)
+MEMORY_METRICS_KEYS = ["memory_stall_s", "memory_stall_by_node",
+                       "memory_peak_pressure"]
+MEMORY_RESULT_KEYS = ["memory"]
 
 
 def _small_run(**kwargs):
@@ -147,6 +153,27 @@ class TestAsDictKeyOrder:
                            rebalance_interval=0.5).as_dict()
         assert json.dumps(plain, indent=1) == json.dumps(again, indent=1)
 
+    def test_memory_keys_absent_when_unarmed(self):
+        res = _small_run()
+        got = set(res.as_dict())
+        assert not got & set(MEMORY_METRICS_KEYS + MEMORY_RESULT_KEYS)
+
+    def test_memory_keys_append_after_chaos_gates(self):
+        from repro.chaos import FaultPlan
+        res = _small_run(fairness=True, obs=True, memory=True,
+                         faults=FaultPlan.single("crash", t=0.005, node=0))
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS
+            + CHAOS_METRICS_KEYS + MEMORY_METRICS_KEYS
+            + CHAOS_RESULT_KEYS + MEMORY_RESULT_KEYS + ["obs"])
+
+    def test_memory_alone_appends_after_stable_base(self):
+        res = _small_run(memory=True)
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + MEMORY_METRICS_KEYS + MEMORY_RESULT_KEYS)
+
     def test_metrics_counters_stay_out_of_as_dict(self):
         m = TrafficMetrics(
             jobs_arrived=1, jobs_rejected=0, jobs_completed=1,
@@ -170,6 +197,58 @@ class TestByteStability:
         fast = _small_run()
         checked = _small_run(check_invariants=True)
         assert json.dumps(fast.as_dict()) == json.dumps(checked.as_dict())
+
+
+class TestServeConfigByteIdentity:
+    """The ServeConfig spelling is pure plumbing: the same knobs expressed
+    as a config object serialize byte-identically to the flat kwargs."""
+
+    def _arrivals(self):
+        return PoissonArrivals(rate=2000.0, horizon=0.01, seed=3,
+                               pool="light", slo_s=0.01)
+
+    def test_plain_run_config_equals_kwargs(self):
+        from repro.api import SchedulingConfig, ServeConfig
+        kw = _small_run().as_dict()
+        cfg = ServeConfig(scheduling=SchedulingConfig(
+            max_concurrent=2, queue_cap=4, seed=3))
+        via_cfg = TrafficSimulator(self._arrivals(), policy="equal",
+                                   backend="sim", config=cfg).run()
+        assert (json.dumps(via_cfg.as_dict(), indent=1)
+                == json.dumps(kw, indent=1))
+
+    def test_full_feature_run_config_equals_kwargs(self):
+        from repro.api import (MemoryConfig, RebalanceConfig,
+                               SchedulingConfig, ServeConfig)
+        kw = _small_run(preemption=True, n_arrays=2, rebalance_interval=0.5,
+                        fairness=True, memory=True).as_dict()
+        cfg = ServeConfig(
+            scheduling=SchedulingConfig(n_arrays=2, max_concurrent=2,
+                                        queue_cap=4, seed=3,
+                                        preemption=True),
+            rebalance=RebalanceConfig(interval=0.5),
+            fairness=True,
+            memory=MemoryConfig(contention=True))
+        via_cfg = TrafficSimulator(self._arrivals(), policy="equal",
+                                   backend="sim", config=cfg).run()
+        assert (json.dumps(via_cfg.as_dict(), indent=1)
+                == json.dumps(kw, indent=1))
+
+    def test_mixed_spellings_rejected(self):
+        import pytest
+
+        from repro.api import ServeConfig
+        with pytest.raises(ValueError, match="not both"):
+            TrafficSimulator(self._arrivals(), config=ServeConfig(),
+                             n_arrays=2)
+
+    def test_rebalancer_sentinel_default_name_raises_too(self):
+        # the fixed wart: the default strategy's own name without an
+        # interval errors exactly like any other name
+        import pytest
+        for name in ("migrate_on_pressure", "other"):
+            with pytest.raises(ValueError, match="no effect without"):
+                TrafficSimulator(self._arrivals(), rebalancer=name)
 
 
 class TestBenchRecordsRegenerate:
