@@ -43,7 +43,14 @@ root:
   byte purity, armed determinism, stall observed, and the headline
   moca-beats-equal / moca-beats-width_aware tier-0 flags) are pinned at
   1; every arm's tier-0 p99 latency and deadline-miss rate must not
-  rise.  ``wall_s`` is informational.
+  rise.  ``wall_s`` is informational;
+* ``BENCH_overload.json`` — the overload-control contract flags (unarmed
+  byte purity incl. BENCH_traffic row replay, armed determinism, the
+  headline brownout-beats-static tier-0-p99/goodput flags, tier-0 never
+  shed, and the pod-respawn abort/complete/serial==forked flags) are
+  pinned at 1; every arm's tier-0 p99 latency and deadline-miss rate
+  must not rise and goodput must not drop.  ``wall_s`` is
+  informational.
 
 Every comparison is printed as a metric-by-metric diff table; when
 ``$GITHUB_STEP_SUMMARY`` is set the table is also appended there as
@@ -322,6 +329,38 @@ def check_moca(gate: Gate, committed: dict, fresh: dict) -> None:
             )
 
 
+def check_overload(gate: Gate, committed: dict, fresh: dict) -> None:
+    # contract flags are pinned at 1: purity/determinism/tier-0/respawn
+    # breakage is an engine-correctness regression, not drift
+    for key in sorted(committed["flags"]):
+        gate.check(
+            "overload contract",
+            key,
+            1.0,
+            float(fresh["flags"].get(key, 0)),
+            higher_is_better=True,
+        )
+    for arm in sorted(committed["arms"]):
+        if arm not in fresh["arms"]:
+            gate.check(f"overload {arm}", "row-present", 1.0, 0.0, True)
+            continue
+        for metric in ("tier0_p99_latency_s", "tier0_miss_rate"):
+            gate.check(
+                f"overload {arm}",
+                metric,
+                committed["arms"][arm][metric],
+                fresh["arms"][arm][metric],
+                higher_is_better=False,
+            )
+        gate.check(
+            f"overload {arm}",
+            "goodput_jobs_per_s",
+            committed["arms"][arm]["goodput_jobs_per_s"],
+            fresh["arms"][arm]["goodput_jobs_per_s"],
+            higher_is_better=True,
+        )
+
+
 def main(argv=None) -> int:
     parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     parser.add_argument("--tolerance", type=float, default=0.02)
@@ -335,6 +374,7 @@ def main(argv=None) -> int:
         kernel_bench,
         moca_bench,
         obs_bench,
+        overload_bench,
         scale_bench,
         traffic_bench,
     )
@@ -383,6 +423,14 @@ def main(argv=None) -> int:
             # the bench's own flag gate tripped; fold its record into
             # the diff table anyway so the failure is itemized
             fresh_moca = _load(moca_path)
+        print("# regenerating BENCH_overload.json ...")
+        overload_path = os.path.join(tmp, "overload.json")
+        try:
+            fresh_overload = overload_bench.run(path=overload_path)
+        except SystemExit:
+            # the bench's own flag gate tripped; fold its record into
+            # the diff table anyway so the failure is itemized
+            fresh_overload = _load(overload_path)
 
     check_fig9(gate, _load(os.path.join(ROOT, "BENCH_fig9.json")), fresh_fig9)
     check_traffic(gate, _load(os.path.join(ROOT, "BENCH_traffic.json")), fresh_traffic)
@@ -394,6 +442,9 @@ def main(argv=None) -> int:
     check_chaos(gate, _load(os.path.join(ROOT, "BENCH_chaos.json")), fresh_chaos)
     check_obs(gate, _load(os.path.join(ROOT, "BENCH_obs.json")), fresh_obs)
     check_moca(gate, _load(os.path.join(ROOT, "BENCH_moca.json")), fresh_moca)
+    check_overload(
+        gate, _load(os.path.join(ROOT, "BENCH_overload.json")), fresh_overload
+    )
 
     print()
     print(gate.table())

@@ -1,0 +1,302 @@
+"""Overload-control benchmark — BENCH_overload.json.
+
+    PYTHONPATH=src python benchmarks/overload_bench.py
+
+Three questions, one record:
+
+1. **Is the overload layer invisible when unarmed?**  Purity flags: two
+   unarmed runs of the overdriven cell must serialize byte-identically
+   and carry none of the gated overload keys — and an unarmed run of a
+   committed BENCH_traffic.json cell must reproduce that row byte for
+   byte (the overload wiring changed nothing it did not arm).
+2. **Does graceful degradation pay under overdrive?**  A bursty (MMPP)
+   mix at 1.5x offered load with one latency-critical tenant in three
+   runs under ``static`` admission (the pre-overload behavior: the
+   bounded node queue does all shedding), tier-aware ``codel``
+   admission, and the ``brownout`` stage ladder on identical streams.
+   The declared ladder here walks shrink-floors -> stretch-deadlines ->
+   shed: the bandwidth-cap rung of the default ladder is deliberately
+   absent because this cell runs without the shared-DRAM contention
+   model — caps write through the PR-9 ``set_caps`` surface, which only
+   *relieves* anything when the bus is the bottleneck (that composition
+   is pinned by the unit tests; the cap-free rungs are what pay in a
+   slot-limited fleet).  Brownout must beat static on tier-0 p99
+   latency (strictly) and on fleet goodput (strictly) —
+   degrade-before-drop, priced in energy.  Armed arms must be
+   run-to-run deterministic, and neither codel nor brownout may ever
+   shed tier 0.
+3. **Does pod respawn turn an abort into a completed run?**  A sharded
+   cell with a mid-run ``pod_kill``: without ``respawn`` the run must
+   abort with a :class:`~repro.traffic.sharded.PodFailureError` carrying
+   the partial-result payload; with ``respawn=True`` the same cell must
+   complete, serial and forked byte-identical.
+
+Deterministic fields are byte-stable across runs/platforms and gated by
+``benchmarks/check_regression.py`` (``check_overload``); ``wall_s`` is
+machine-dependent and informational only.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_JSON = os.path.join(ROOT, "BENCH_overload.json")
+TRAFFIC_JSON = os.path.join(ROOT, "BENCH_traffic.json")
+
+if __package__ in (None, ""):  # run as a script: make `benchmarks.*`
+    sys.path.insert(0, ROOT)   # (mean_service_s reuse) importable
+
+SEED = 0
+N_ARRAYS = 4
+LOAD = 1.5                   # rho per array; the fleet is overdriven
+JOBS = 600
+SLO_FACTOR = 4.0
+TIERS = (0, 1, 1)            # one latency tenant : two batch tenants
+POLICY = "width_aware"       # demand-aware: brownout floor-shrink pays
+# queue-delay setpoint: the bounded node queues saturate the fleet
+# wait-estimate around ~2.5x the pool's mean service time, so the
+# controller setpoint must sit below that ceiling to see overload
+DELAY_TARGET_S = 2e-3
+CODEL_INTERVAL_S = 5e-3
+ARMS = ("static", "codel", "brownout")
+
+GATED_KEYS = {"rejections_by_cause", "shed_by_tier",
+              "brownout_transitions", "brownout_energy_j"}
+
+
+def _cell_kwargs(svc: float) -> tuple[dict, dict]:
+    rate = N_ARRAYS * LOAD / svc
+    horizon = JOBS / rate
+    sim_kw = dict(n_arrays=N_ARRAYS, dispatch="jsq", max_concurrent=4,
+                  queue_cap=8, seed=SEED)
+    arr_kw = dict(rate=rate, horizon=horizon, pool="light",
+                  slo_s=SLO_FACTOR * svc, tiers=TIERS)
+    return sim_kw, arr_kw
+
+
+def _bench_ladder():
+    """The declared degradation ladder for this (uncontended) cell:
+    shrink batch column floors, stretch batch deadlines, shed batch."""
+    from repro.overload import BrownoutStage
+
+    return (
+        BrownoutStage("shrink_floors", batch_demand_scale=0.5),
+        BrownoutStage("stretch_deadlines", batch_demand_scale=0.35,
+                      deadline_stretch=2.0),
+        BrownoutStage("shed", batch_demand_scale=0.25,
+                      deadline_stretch=2.0, shed_batch=True),
+    )
+
+
+def _serve(arm: str | None, sim_kw: dict, arr_kw: dict):
+    from repro.api import OverloadConfig, SchedulingConfig, ServeConfig
+    from repro.overload import BrownoutController, CoDelAdmission
+    from repro.traffic import TrafficSimulator
+
+    admission, brownout = None, None
+    if arm == "static":
+        admission = "static"
+    elif arm == "codel":
+        admission = CoDelAdmission(target_delay_s=DELAY_TARGET_S,
+                                   interval_s=CODEL_INTERVAL_S)
+    elif arm == "brownout":
+        brownout = BrownoutController(delay_target_s=DELAY_TARGET_S,
+                                      stages=_bench_ladder())
+    cfg = ServeConfig(
+        scheduling=SchedulingConfig(**sim_kw),
+        overload=OverloadConfig(admission=admission, brownout=brownout))
+    return TrafficSimulator("mmpp", policy=POLICY, backend="sim",
+                            config=cfg, **arr_kw).run()
+
+
+def _tier0(res) -> dict:
+    rows = [r for r in res.records if r.tier == 0]
+    miss = [r for r in rows
+            if r.completed is None or r.completed > r.deadline]
+    per = res.per("tier")[0]
+    return {"p99": per.p99_latency_s,
+            "miss": len(miss) / len(rows) if rows else 0.0}
+
+
+def purity_flags(sim_kw: dict, arr_kw: dict) -> dict:
+    """Unarmed runs: byte-stable, no gated keys, and byte-faithful to
+    the committed BENCH_traffic.json cell they share parameters with."""
+    from repro.traffic import TrafficSimulator, get_arrival_process
+    from benchmarks.traffic_bench import mean_service_s
+
+    a = _serve(None, sim_kw, arr_kw).as_dict()
+    b = _serve(None, sim_kw, arr_kw).as_dict()
+    flags = {
+        "unarmed_byte_stable": int(
+            json.dumps(a, indent=1) == json.dumps(b, indent=1)),
+        "unarmed_has_no_overload_keys": int(not GATED_KEYS & set(a)),
+    }
+    # replay one committed BENCH_traffic.json cell (poisson / equal /
+    # load 1.5, single array) through the post-overload build
+    svc = mean_service_s("light")
+    slo = 4.0 * svc
+    rate = 1.5 / svc
+    arr = get_arrival_process("poisson", rate=rate, horizon=40 / rate,
+                              seed=SEED, pool="light", slo_s=slo)
+    res = TrafficSimulator(arr, policy="equal", backend="sim",
+                           max_concurrent=4, queue_cap=8, seed=SEED).run()
+    row = {"load": 1.5, "rate_jobs_per_s": rate, "slo_s": slo,
+           **res.as_dict()}
+    match = 0
+    if os.path.exists(TRAFFIC_JSON):
+        with open(TRAFFIC_JSON) as f:
+            committed = json.load(f)["results"]
+        want = [r for r in committed
+                if r["load"] == 1.5 and r["policy"] == "equal"
+                and r["arrivals"] == "poisson"]
+        match = int(bool(want) and
+                    json.dumps(row, indent=1) ==
+                    json.dumps(want[0], indent=1))
+    flags["unarmed_matches_traffic_bench"] = match
+    return flags
+
+
+def overload_cell(sim_kw: dict, arr_kw: dict) -> tuple[dict, dict]:
+    """static / codel / brownout on one overdriven bursty stream."""
+    arms = {}
+    for arm in ARMS:
+        res = _serve(arm, sim_kw, arr_kw)
+        t0 = _tier0(res)
+        m = res.metrics
+        arms[arm] = {
+            "overload": res.overload,
+            "tier0_p99_latency_s": t0["p99"],
+            "tier0_miss_rate": t0["miss"],
+            "goodput_jobs_per_s": m.goodput_jobs_per_s,
+            "fleet_miss_rate": m.deadline_miss_rate,
+            "rejections_by_cause": dict(m.rejections_by_cause or {}),
+            "shed_by_tier": {str(k): v for k, v in
+                             sorted((m.shed_by_tier or {}).items())},
+            "brownout_transitions": m.brownout_transitions,
+            "brownout_energy_j": m.brownout_energy_j,
+        }
+    a2 = _serve("brownout", sim_kw, arr_kw)
+    again = json.dumps(a2.as_dict(), indent=1)
+    brown, static = arms["brownout"], arms["static"]
+    flags = {
+        "armed_deterministic": int(
+            again == json.dumps(_serve("brownout", sim_kw,
+                                       arr_kw).as_dict(), indent=1)),
+        "brownout_stages_walked": int(
+            brown["brownout_transitions"] > 0
+            and brown["brownout_energy_j"] > 0.0),
+        "brownout_beats_static_tier0_p99": int(
+            brown["tier0_p99_latency_s"] < static["tier0_p99_latency_s"]),
+        "brownout_beats_static_goodput": int(
+            brown["goodput_jobs_per_s"] > static["goodput_jobs_per_s"]),
+        "tier0_never_shed": int(all(
+            "0" not in a["shed_by_tier"] for a in arms.values())),
+    }
+    return arms, flags
+
+
+def respawn_cell() -> tuple[dict, dict]:
+    """Sharded 1.5x cell with a mid-run pod_kill: abort without respawn,
+    deterministic completion (serial == forked) with it."""
+    from repro.chaos import FaultEvent
+    from repro.traffic import PodFailureError, ShardedTrafficSimulator
+    from benchmarks.traffic_bench import mean_service_s
+
+    svc = mean_service_s("light")
+    rate = N_ARRAYS * LOAD / svc
+
+    def sim(**kw):
+        return ShardedTrafficSimulator(
+            "poisson", n_arrays=N_ARRAYS, n_shards=2, dispatch="rr",
+            max_concurrent=4, queue_cap=8, seed=SEED, sync_every=64,
+            rate=rate, horizon=JOBS / (2 * rate), pool="light",
+            slo_s=SLO_FACTOR * svc, tiers=TIERS, **kw)
+
+    kill = FaultEvent(t=0.0, kind="pod_kill", node=1, epoch=1)
+    aborted, payload = 0, {}
+    try:
+        sim(parallel=False, faults=kill).run()
+    except PodFailureError as e:
+        aborted = int("pod 1" in str(e) and "epoch 1" in str(e))
+        payload = {"jobs_completed": e.jobs_completed,
+                   "partial_records": len(e.partial_records),
+                   "pod_status": {str(k): v
+                                  for k, v in sorted(e.pod_status.items())}}
+    serial = sim(parallel=False, faults=kill, respawn=True).run()
+    forked = sim(parallel=True, faults=kill, respawn=True,
+                 pod_timeout_s=60.0).run()
+    ds = json.dumps(serial.as_dict(), indent=1)
+    cell = {
+        "pod_kill": {"pod": 1, "epoch": 1},
+        "abort_payload": payload,
+        "respawn": {"faults": serial.faults, "recovery": serial.recovery,
+                    "n_records": len(serial.records),
+                    "tier0_miss_rate": _tier0(serial)["miss"],
+                    "goodput_jobs_per_s":
+                        serial.metrics.goodput_jobs_per_s},
+    }
+    flags = {
+        "unrespawned_aborts": aborted,
+        "respawn_completes": int(serial.recovery == "pod_respawn"),
+        "respawn_serial_forked_identical": int(
+            ds == json.dumps(forked.as_dict(), indent=1)),
+    }
+    return cell, flags
+
+
+def run(path: str = BENCH_JSON) -> dict:
+    from benchmarks.traffic_bench import mean_service_s
+
+    t0 = time.perf_counter()
+    svc = mean_service_s("light")
+    sim_kw, arr_kw = _cell_kwargs(svc)
+
+    flags = purity_flags(sim_kw, arr_kw)
+    arms, cell_flags = overload_cell(sim_kw, arr_kw)
+    flags.update(cell_flags)
+    respawn, respawn_flags = respawn_cell()
+    flags.update(respawn_flags)
+
+    for k, v in flags.items():
+        print(f"# flag {k}: {v}")
+    for arm in ARMS:
+        a = arms[arm]
+        print(f"# {arm:>9}: tier0 p99 {a['tier0_p99_latency_s']:.4f}s "
+              f"miss {a['tier0_miss_rate']:.4f} "
+              f"goodput {a['goodput_jobs_per_s']:.1f}/s "
+              f"shed {a['shed_by_tier']} "
+              f"transitions {a['brownout_transitions']}")
+
+    blob = {
+        "benchmark": "overload", "backend": "sim", "seed": SEED,
+        "n_arrays": N_ARRAYS, "load": LOAD, "jobs": JOBS,
+        "slo_factor": SLO_FACTOR, "tiers": list(TIERS),
+        "flags": flags,
+        "arms": arms,
+        "respawn_cell": respawn,
+        # -- informational (machine-dependent, not gated) --
+        "wall_s": time.perf_counter() - t0,
+    }
+    with open(path, "w") as f:
+        json.dump(blob, f, indent=1)
+        f.write("\n")
+    print(f"wrote {path}")
+    bad = [k for k, v in flags.items() if v != 1]
+    if bad:
+        print(f"FAIL: overload contract flags broken: {bad}",
+              file=sys.stderr)
+        raise SystemExit(1)
+    return blob
+
+
+if __name__ == "__main__":
+    parser = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    parser.add_argument("--out", default=BENCH_JSON)
+    args = parser.parse_args()
+    run(path=args.out)
+    sys.exit(0)

@@ -22,6 +22,7 @@ Three pieces:
 from repro.api.config import (
     ChaosConfig,
     MemoryConfig,
+    OverloadConfig,
     RebalanceConfig,
     SchedulingConfig,
     ServeConfig,
@@ -71,5 +72,6 @@ __all__ = [
     "Session", "SessionResult", "BaselineRun",
     # serve config
     "ServeConfig", "SchedulingConfig", "RebalanceConfig",
-    "ChaosConfig", "MemoryConfig", "resolve_serve_config",
+    "ChaosConfig", "MemoryConfig", "OverloadConfig",
+    "resolve_serve_config",
 ]

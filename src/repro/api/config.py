@@ -89,6 +89,23 @@ class MemoryConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class OverloadConfig:
+    """Closed-loop overload control (`repro.overload`).
+
+    ``admission`` arms per-arrival admission control in front of the
+    dispatcher: a registry name (``"static"``, ``"codel"``,
+    ``"token_bucket"``) or an :class:`~repro.overload.AdmissionPolicy`
+    instance.  ``brownout`` arms the degrade-before-drop ladder:
+    ``True`` for a default :class:`~repro.overload.BrownoutController`
+    or a controller instance.  Both default to ``None`` (off) — the
+    unarmed path stays byte-identical to pre-overload records.
+    """
+
+    admission: object = None
+    brownout: object = None
+
+
+@dataclasses.dataclass(frozen=True)
 class ServeConfig:
     """Everything :func:`repro.traffic.serve` accepts beyond the arrival
     stream and the policy × backend pair, grouped by subsystem."""
@@ -103,6 +120,8 @@ class ServeConfig:
     obs: object = None
     chaos: ChaosConfig = dataclasses.field(default_factory=ChaosConfig)
     memory: MemoryConfig = dataclasses.field(default_factory=MemoryConfig)
+    overload: OverloadConfig = dataclasses.field(
+        default_factory=OverloadConfig)
 
     @classmethod
     def of(cls, **knobs) -> "ServeConfig":
@@ -131,7 +150,10 @@ class ServeConfig:
                 faults=knobs.get("faults"),
                 recovery=knobs.get("recovery", "retry_restart"),
                 monitor=knobs.get("monitor")),
-            memory=MemoryConfig(contention=knobs.get("memory")))
+            memory=MemoryConfig(contention=knobs.get("memory")),
+            overload=OverloadConfig(
+                admission=knobs.get("admission"),
+                brownout=knobs.get("brownout")))
 
 
 #: the flat keyword surface ServeConfig.of consolidates — anything else
@@ -144,6 +166,7 @@ _SERVE_KNOBS = frozenset({
     "fairness", "obs",
     "faults", "recovery", "monitor",
     "memory",
+    "admission", "brownout",
 })
 
 

@@ -338,6 +338,14 @@ class PartitionPolicy(abc.ABC):
         must depend only on context *state* (``busy``/``tiers``/
         ``bandwidth``), never on a clock, to keep the scheduler's
         dirty-round skip exact.
+
+        Composition with brownout (`repro.overload`): the brownout
+        controller's ``cap_bandwidth`` stage writes batch-tenant caps
+        through the same :meth:`set_caps` surface, but only on
+        schedulers whose policy does NOT override this hook — a policy
+        with its own bandwidth logic (``moca``) keeps full authority
+        over its caps and is expected to fold overload pressure into its
+        own decisions.
         """
         return None
 

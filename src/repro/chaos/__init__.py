@@ -30,6 +30,7 @@ from repro.chaos.recovery import (
     list_recoveries,
     register_recovery,
     resolve_recovery,
+    respawn_backoffs,
     truncate_dnng,
 )
 
@@ -46,6 +47,7 @@ __all__ = [
     "register_recovery",
     "list_recoveries",
     "resolve_recovery",
+    "respawn_backoffs",
     "truncate_dnng",
     "ChaosController",
     "ChaosReport",

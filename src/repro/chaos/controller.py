@@ -41,6 +41,9 @@ class ChaosReport:
     detections: int
     # monitor belief transitions: (t, node, old, new, cause)
     transitions: tuple[tuple, ...] = ()
+    # tier -> recovery-shed count (kept out of as_dict: the per-tier
+    # split serializes through the gated overload metrics keys)
+    sheds_by_tier: tuple[tuple, ...] = ()
 
     def as_dict(self) -> dict:
         return {
@@ -106,6 +109,10 @@ class ChaosController:
         self.jobs_recovered = 0
         self.retries_exhausted = 0
         self.jobs_shed = 0
+        # tier -> recovery-shed count; feeds the gated overload metrics
+        # (rejection cause "recovery_shed") when admission/brownout is
+        # armed alongside faults
+        self.sheds_by_tier: dict[int, int] = {}
         self.detections = 0
 
     def _push(self, t: float, action: str, payload) -> None:
@@ -232,6 +239,8 @@ class ChaosController:
                 )
         if self.recovery.should_shed(job.tier, self.healthy_capacity_frac()):
             self.jobs_shed += 1
+            self.sheds_by_tier[job.tier] = (
+                self.sheds_by_tier.get(job.tier, 0) + 1)
             return None, "shed"
         target = nodes[dispatcher.choose_tracked(fleet, rng)]
         if target.health == "dead":
@@ -289,4 +298,5 @@ class ChaosController:
             jobs_shed=self.jobs_shed,
             detections=self.detections,
             transitions=tuple(self.monitor.transitions),
+            sheds_by_tier=tuple(sorted(self.sheds_by_tier.items())),
         )

@@ -96,6 +96,23 @@ class RetryPolicy:
         return d
 
 
+def respawn_backoffs(n: int, seed_key: str,
+                     retry: RetryPolicy | None = None) -> list[float]:
+    """First-attempt backoff delays for ``n`` jobs re-admitted after a pod
+    respawn (`repro.traffic.sharded`).
+
+    A dead pod's in-flight jobs re-enter through the same capped-backoff
+    schedule a node crash uses — one fresh attempt each, jittered by a
+    dedicated ``random.Random(seed_key)`` stream so respawn recovery is
+    seed-stable and independent of every other rng in the run (the pod's
+    own dispatch rng is reconstructed separately by the routing
+    fast-forward).
+    """
+    retry = retry or RetryPolicy()
+    rng = random.Random(seed_key)
+    return [retry.delay_s(0, rng) for _ in range(n)]
+
+
 class RecoveryPolicy(abc.ABC):
     """What to do with a lost job, and when to shed under low capacity."""
 

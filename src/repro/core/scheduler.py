@@ -511,6 +511,11 @@ class DynamicScheduler:
         # fault-free path produces bit-identical schedules.
         self.time_scale = 1.0
         self.bus_scale = 1.0
+        # brownout floor shrink (repro.overload): batch tenants' (tier > 0)
+        # column demand is multiplied by this factor.  At the 1.0 default
+        # the scaling branch in _demands never fires, so plain runs derive
+        # bit-identical demand vectors.
+        self.batch_demand_scale = 1.0
 
     # -- queries ------------------------------------------------------------
     @property
@@ -670,17 +675,41 @@ class DynamicScheduler:
         # survives (delta-updated, not rebuilt per event)
         out = []
         cols = self.array.cols
+        scale = self.batch_demand_scale
         for tenant, _idx, layer in ready:
             entry = self._ready[tenant]
             d = entry[3]
             if d is None:
+                demand = float(layer.opr)
+                width = max(1, min(layer.gemm_n, cols))
+                tier = self.tiers.get(tenant, 0)
+                if scale != 1.0 and tier > 0:
+                    # brownout floor shrink: batch tenants ask for less,
+                    # the policy hands the freed columns to tier 0
+                    demand = demand * scale
+                    width = max(1, int(width * scale))
                 d = entry[3] = self._TenantDemand(
-                    name=tenant, demand=float(layer.opr),
-                    width_demand=max(1, min(layer.gemm_n, cols)),
-                    tier=self.tiers.get(tenant, 0),
+                    name=tenant, demand=demand,
+                    width_demand=width,
+                    tier=tier,
                     layer=layer)
             out.append(d)
         return out
+
+    def set_batch_demand_scale(self, factor: float) -> None:
+        """Brownout floor shrink (`repro.overload`): scale batch tenants'
+        column demand by ``factor`` in (0, 1]; ``1.0`` restores nominal
+        demand.  Cached demand vectors are invalidated so the next
+        rebalance round re-derives them under the new factor."""
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"batch_demand_scale must be in (0, 1], got "
+                             f"{factor}")
+        if factor == self.batch_demand_scale:
+            return
+        self.batch_demand_scale = factor
+        for entry in self._ready.values():
+            entry[3] = None
+        self._dirty = True
 
     def _maybe_preempt(self, now: float, cost_cache: dict) -> None:
         """Offer the policy's ``preempt(ctx)`` hook the in-flight set.

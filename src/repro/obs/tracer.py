@@ -61,10 +61,12 @@ COMPLETE = "complete"
 FAULT = "fault"
 DETECT = "detect"
 RECOVER = "recover"
+# overload-control instant (repro.overload): brownout stage entry/exit
+BROWNOUT = "brownout"
 
 SPAN_KINDS = (STAGE_IN, COMPUTE, STAGE_OUT, DRAIN)
 INSTANT_KINDS = (ARRIVE, DISPATCH, DECISION, PREEMPT, MIGRATE, COMPLETE,
-                 FAULT, DETECT, RECOVER)
+                 FAULT, DETECT, RECOVER, BROWNOUT)
 
 
 def _ORDER(r: tuple) -> tuple:

@@ -59,7 +59,11 @@ from repro.traffic.rebalance import (
     register_rebalancer,
     resolve_rebalancer,
 )
-from repro.traffic.sharded import ShardedTrafficSimulator, serve_sharded
+from repro.traffic.sharded import (
+    PodFailureError,
+    ShardedTrafficSimulator,
+    serve_sharded,
+)
 from repro.traffic.simulator import ServeResult, TrafficSimulator, serve
 
 __all__ = [
@@ -80,5 +84,5 @@ __all__ = [
     "register_rebalancer", "list_rebalancers", "resolve_rebalancer",
     # simulator
     "TrafficSimulator", "ServeResult", "serve",
-    "ShardedTrafficSimulator", "serve_sharded",
+    "ShardedTrafficSimulator", "serve_sharded", "PodFailureError",
 ]

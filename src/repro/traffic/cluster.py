@@ -90,6 +90,7 @@ class ArrayNode:
         self._stall_carry = 0.0          # bus-stall seconds of retired scheds
         self._time_scale = 1.0           # straggler compute inflation
         self._bus_scale = 1.0            # stage bus stall inflation
+        self._batch_demand_scale = 1.0   # brownout batch floor shrink
         # constructor args retained so a fault can rebuild the scheduler
         self._policy = policy
         self._keep_trace = keep_trace
@@ -113,6 +114,10 @@ class ArrayNode:
             shared_bandwidth=self._shared_bw)
         sched.time_scale = self._time_scale
         sched.bus_scale = self._bus_scale
+        if self._batch_demand_scale != 1.0:
+            # brownout survives fault rebuilds, like the fault scales —
+            # guarded so fault-free plain runs never touch the scheduler
+            sched.set_batch_demand_scale(self._batch_demand_scale)
         return sched
 
     @property
@@ -313,6 +318,14 @@ class ArrayNode:
         ``factor``× longer (1.0 restores nominal bandwidth)."""
         self._bus_scale = factor
         self.scheduler.bus_scale = factor
+
+    def set_batch_demand_scale(self, factor: float) -> None:
+        """Brownout floor shrink (`repro.overload`): batch tenants'
+        column demand scales by ``factor`` (1.0 restores nominal).
+        Retained so a fault-rebuilt scheduler inherits the active
+        brownout stage like the fault scales."""
+        self._batch_demand_scale = factor
+        self.scheduler.set_batch_demand_scale(factor)
 
 
 # ---------------------------------------------------------------------------

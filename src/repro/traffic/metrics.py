@@ -114,6 +114,12 @@ class TrafficMetrics:
     memory_stall_s: Optional[float] = None
     memory_stall_by_node: Optional[dict] = None
     memory_peak_pressure: Optional[float] = None
+    # overload-control accounting (None unless the run armed admission/
+    # brownout — see repro.overload); appended after the memory gates
+    rejections_by_cause: Optional[dict] = None
+    shed_by_tier: Optional[dict] = None
+    brownout_transitions: Optional[int] = None
+    brownout_energy_j: Optional[float] = None
 
     @property
     def deadline_miss_rate(self) -> float:
@@ -170,6 +176,16 @@ class TrafficMetrics:
             out["memory_stall_by_node"] = dict(
                 sorted((self.memory_stall_by_node or {}).items()))
             out["memory_peak_pressure"] = self.memory_peak_pressure
+        # overload keys: appended only when admission/brownout was armed,
+        # AFTER the memory gates (append-only byte-stability contract)
+        if self.rejections_by_cause is not None:
+            out["rejections_by_cause"] = {
+                k: (self.rejections_by_cause or {}).get(k, 0)
+                for k in ("queue_full", "admission_shed", "recovery_shed")}
+            out["shed_by_tier"] = dict(
+                sorted((self.shed_by_tier or {}).items()))
+            out["brownout_transitions"] = self.brownout_transitions
+            out["brownout_energy_j"] = self.brownout_energy_j
         return out
 
 
@@ -177,7 +193,8 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
               pe_seconds_busy: float = 0.0, total_pes: int = 0,
               queue_depth_samples: Sequence[int] = (),
               preemptions: int = 0, migrations: int = 0,
-              fairness=None, chaos=None, memory=None) -> TrafficMetrics:
+              fairness=None, chaos=None, memory=None,
+              overload=None) -> TrafficMetrics:
     """Fold job records into :class:`TrafficMetrics`.
 
     ``pe_seconds_busy``/``total_pes`` feed the time-weighted utilization
@@ -201,6 +218,12 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
     bus seconds), ``stall_by_node`` (node index → stall seconds) and
     ``peak_pressure`` (max per-window demand over capacity); they populate
     the gated memory fields.
+
+    ``overload`` (optional, duck-typed likewise) carries the overload-
+    control accounting of an armed admission policy / brownout controller:
+    ``rejections_by_cause`` (cause name → count), ``shed_by_tier`` (tier →
+    non-admitted count), ``brownout_transitions`` and
+    ``brownout_energy_j``; they populate the gated overload fields.
     """
     lats = [r.latency for r in records if r.latency is not None]
     completed = [r for r in records if r.completed is not None]
@@ -259,6 +282,14 @@ def summarize(records: Sequence[JobRecord], duration_s: float,
                               if memory is not None else None),
         memory_peak_pressure=(memory.peak_pressure
                               if memory is not None else None),
+        rejections_by_cause=(dict(overload.rejections_by_cause)
+                             if overload is not None else None),
+        shed_by_tier=(dict(overload.shed_by_tier)
+                      if overload is not None else None),
+        brownout_transitions=(overload.brownout_transitions
+                              if overload is not None else None),
+        brownout_energy_j=(overload.brownout_energy_j
+                           if overload is not None else None),
     )
 
 

@@ -39,10 +39,29 @@ Not supported here: cross-node migration (``rebalance_interval``) — a
 rebalancer reads global node state mid-epoch, which is exactly what
 sharding removes — and ``keep_trace`` (per-node schedules stay in the
 worker processes).
+
+**Failure surface.**  Every epoch message a pod sends carries the jobs it
+*finalized* (completed or rejected) during that epoch, its depth-sample
+slice and its boundary busy vector; the coordinator retains them in an
+:class:`_EpochLedger`.  When a pod dies, the raised
+:class:`PodFailureError` therefore carries a partial-result payload —
+jobs completed so far, per-pod status, the finalized records — instead
+of leaving the operator with nothing.  With ``respawn=True`` (and a
+``pod_kill`` plan) the coordinator goes further: it builds a fresh
+replacement pod, **fast-forwards** its routing replica over the dead
+pod's completed epochs (reconstructing the dispatcher state and rng
+stream exactly, with no execution), re-admits the lost in-flight jobs
+through the `repro.chaos` retry path (seeded first-attempt backoff,
+pod-local least-loaded placement), and resumes the epoch protocol.  The
+serial path mirrors the identical recovery, so serial == forked
+byte-identity holds through a kill.  Lost with the pod, by design: its
+in-flight partial work (the jobs re-run from scratch) and its private
+observability replica.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import multiprocessing
 import os
@@ -54,6 +73,32 @@ from repro.traffic.arrivals import ArrivalProcess, Job, resolve_arrivals
 from repro.traffic.cluster import ArrayNode, resolve_dispatcher
 from repro.traffic.metrics import summarize
 from repro.traffic.simulator import ServeResult, _RecordBuilder
+
+
+class PodFailureError(RuntimeError):
+    """A sharded pod died and the epoch sync could not complete.
+
+    Subclasses RuntimeError (the historical failure surface) and attaches
+    what the coordinator's epoch ledger knows survived:
+
+    * ``pod`` / ``epoch`` — which pod died, at which sync epoch;
+    * ``jobs_completed`` — fleet-wide completions durably reported before
+      the failure;
+    * ``pod_status`` — per-pod dict ``{"state": "ok"|"dead",
+      "epochs_done": k}``;
+    * ``partial_records`` — the finalized
+      :class:`~repro.traffic.metrics.JobRecord` set, arrival-ordered.
+    """
+
+    def __init__(self, message: str, *, pod: int, epoch: int,
+                 jobs_completed: int, pod_status: dict,
+                 partial_records: tuple = ()):
+        super().__init__(message)
+        self.pod = pod
+        self.epoch = epoch
+        self.jobs_completed = jobs_completed
+        self.pod_status = pod_status
+        self.partial_records = tuple(partial_records)
 
 
 class _RoutedLoads:
@@ -154,6 +199,10 @@ class _Pod:
         self._builders: list = []          # (global job idx, builder)
         self._by_name: dict = {}
         self.depth_samples: list[int] = []
+        # epoch-ledger shipping state: builders not yet reported as
+        # finalized, and how many depth samples have crossed the pipe
+        self._pending: list = []           # (global job idx, builder)
+        self._depth_sent = 0
 
     # -- node callbacks (same wiring as TrafficSimulator) -------------------
     def _on_complete(self, node, tenant: str, t: float) -> None:
@@ -179,9 +228,11 @@ class _Pod:
                 sched.run_until(t)
 
     def run_epoch(self, lo: int, hi: int,
-                  snapshot: Sequence[int]) -> list[int]:
+                  snapshot: Sequence[int]) -> dict:
         """Process global arrivals ``jobs[lo:hi]`` against ``snapshot``
-        boundary loads; return this group's in-system vector."""
+        boundary loads; return the epoch message: this group's in-system
+        vector plus the ledger payload (newly finalized records, the
+        depth-sample slice, boundary busy/preemption state)."""
         self.view.reset(snapshot)
         view = self.view
         dispatcher = self.dispatcher
@@ -195,6 +246,7 @@ class _Pod:
             if base <= target < base + count:
                 b = _RecordBuilder(job)
                 self._builders.append((idx, b))
+                self._pending.append((idx, b))
                 self._by_name[job.dnng.name] = b
                 status = self.nodes[target - base].offer(job)
                 if status != "rejected":
@@ -214,7 +266,79 @@ class _Pod:
                         s_in.sample(job.arrival, node.in_system)
                         s_q.sample(job.arrival, len(node.queue))
             self.depth_samples.append(self._queued_total)
-        return [n.in_system for n in self.nodes]
+        return self._epoch_msg()
+
+    def _epoch_msg(self) -> dict:
+        """The boundary message: loads for the next snapshot + the ledger
+        payload the coordinator retains for the failure surface.  A
+        builder is *finalized* once its outcome can no longer change —
+        completed, or rejected at admission (``array`` never set)."""
+        done, still = [], []
+        for item in self._pending:
+            b = item[1]
+            if b.completed is not None or b.array is None:
+                done.append((item[0], b.build()))
+            else:
+                still.append(item)
+        self._pending = still
+        depth = self.depth_samples[self._depth_sent:]
+        self._depth_sent = len(self.depth_samples)
+        return {
+            "loads": [n.in_system for n in self.nodes],
+            "busy": [n.pe_seconds_busy for n in self.nodes],
+            "final": done,
+            "depth": depth,
+            "preemptions": sum(n.scheduler.n_preemptions
+                               for n in self.nodes),
+        }
+
+    # -- respawn surface (driven by the coordinator) ------------------------
+    def fast_forward(self, history: Sequence[tuple]) -> list[int]:
+        """Replay the routing decisions of completed epochs — no
+        execution, no builders, no depth samples — so this fresh pod's
+        dispatcher state and rng stream end up exactly where the dead
+        pod's were at the failure boundary.  ``history`` is the
+        coordinator's ``(lo, hi, snapshot)`` list; returns the global job
+        indices this pod owned over those epochs (the lost-job candidate
+        set, pending the ledger's finalized filter)."""
+        owned = []
+        base, count = self.base, self.count
+        for lo, hi, snapshot in history:
+            self.view.reset(snapshot)
+            for idx in range(lo, hi):
+                target = self.dispatcher.choose_tracked(self.view, self.rng)
+                self.view.bump(target)
+                if base <= target < base + count:
+                    owned.append(idx)
+        return owned
+
+    def inject_lost(self, lost: Sequence[int], floor: float,
+                    seed_key: str) -> None:
+        """Re-admit the dead pod's in-flight jobs through the retry path.
+
+        Each lost job gets one fresh attempt with a seeded first-attempt
+        backoff (:func:`repro.chaos.respawn_backoffs`), released no
+        earlier than the failure boundary (``floor``), placed on the
+        least-loaded owned node (ties to the lowest index).  The record
+        builder keeps the job's ORIGINAL arrival and deadline, so its
+        latency includes the downtime + backoff — recovery is not free.
+        Index order + the dedicated rng stream keep the injection
+        byte-stable across serial/forked and repeated runs."""
+        from repro.chaos import respawn_backoffs
+        delays = respawn_backoffs(len(lost), seed_key)
+        for idx, delay in zip(lost, delays):
+            job = self.jobs[idx]
+            t = max(job.arrival, floor) + delay
+            retry = dataclasses.replace(
+                job, arrival=t, dnng=job.dnng.clone(arrival_time=t))
+            b = _RecordBuilder(job)
+            self._builders.append((idx, b))
+            self._pending.append((idx, b))
+            self._by_name[job.dnng.name] = b
+            node = min(self.nodes, key=lambda n: (n.in_system, n.index))
+            status = node.offer(retry)
+            if status != "rejected":
+                b.array = node.index
 
     def finish(self) -> dict:
         """Drain all owned queues and fold the pod's results."""
@@ -264,6 +388,32 @@ def _pod_worker(pod: _Pod, epochs, conn) -> None:
         conn.close()
 
 
+class _EpochLedger:
+    """What the coordinator durably knows per pod, epoch by epoch.
+
+    Fed from the pods' boundary messages; read in two places: the
+    :class:`PodFailureError` partial payload, and the respawn path (the
+    finalized-index filter, the routing-replay history, the boundary
+    busy/preemption carry for the replacement's fold)."""
+
+    def __init__(self, n_pods: int):
+        self.records = [[] for _ in range(n_pods)]   # finalized (idx, rec)
+        self.final_idx = [set() for _ in range(n_pods)]
+        self.depth = [[] for _ in range(n_pods)]     # shipped depth samples
+        self.busy = [None] * n_pods                  # last boundary busy
+        self.preemptions = [0] * n_pods              # last boundary count
+        self.epochs_done = [0] * n_pods
+        self.history: list[tuple] = []               # (lo, hi, snapshot)
+
+    def note(self, pi: int, msg: dict) -> None:
+        self.records[pi].extend(msg["final"])
+        self.final_idx[pi].update(idx for idx, _r in msg["final"])
+        self.depth[pi].extend(msg["depth"])
+        self.busy[pi] = msg["busy"]
+        self.preemptions[pi] = msg["preemptions"]
+        self.epochs_done[pi] += 1
+
+
 class ShardedTrafficSimulator:
     """Drive one arrival stream through a pod-sharded fleet.
 
@@ -289,10 +439,20 @@ class ShardedTrafficSimulator:
     ``faults`` accepts a `repro.chaos` plan of **pod_kill** events only
     (``node`` = pod index, ``epoch`` = sync epoch): the targeted worker
     process dies hard mid-epoch (``os._exit``), and the coordinator —
-    rather than hanging on the pipe — raises a RuntimeError naming the
-    dead pod within ``pod_timeout_s``.  The serial path raises the same
-    error at the same epoch.  In-fleet fault kinds (crash/degrade/...)
-    need the single-process :class:`TrafficSimulator`.
+    rather than hanging on the pipe — raises a :class:`PodFailureError`
+    (a RuntimeError carrying the partial-result payload) naming the dead
+    pod within ``pod_timeout_s``.  The serial path raises the same error
+    at the same epoch.  In-fleet fault kinds (crash/degrade/...) need
+    the single-process :class:`TrafficSimulator`.
+
+    ``respawn=True`` (requires ``faults=``) turns the abort into
+    recovery: the coordinator detects the dead pod, rebuilds it from the
+    last epoch-boundary state (routing replica fast-forwarded, lost
+    in-flight jobs re-admitted through the seeded retry path) and the
+    run completes deterministically — serial and forked byte-identical.
+    Default off: an armed-but-unfired plan stays byte-identical to a
+    fault-free run, and a fired plan without respawn aborts exactly as
+    before.
     """
 
     def __init__(self, arrivals, policy: str = "equal",
@@ -303,7 +463,7 @@ class ShardedTrafficSimulator:
                  parallel: bool = True, preemption=None,
                  check_invariants: bool = False, fairness=False,
                  obs=None, faults=None, pod_timeout_s: float = 120.0,
-                 **arrival_kwargs):
+                 respawn: bool = False, **arrival_kwargs):
         from repro.core.scheduler import PreemptionModel
         for label, v in (("policy", policy), ("backend", backend),
                          ("dispatch", dispatch)):
@@ -350,9 +510,11 @@ class ShardedTrafficSimulator:
         # makes sense here — in-fleet faults need the single-process
         # simulator's global view (TrafficSimulator faults=).
         self._kill_epochs: dict[int, int] = {}
+        self._plan_name = None
         if faults is not None:
             from repro.chaos import resolve_faults
             plan = resolve_faults(faults)
+            self._plan_name = plan.name
             for e in plan.events:
                 if e.kind != "pod_kill":
                     raise ValueError(
@@ -365,6 +527,11 @@ class ShardedTrafficSimulator:
                 cur = self._kill_epochs.get(e.node)
                 if cur is None or e.epoch < cur:
                     self._kill_epochs[e.node] = e.epoch
+        self.respawn = bool(respawn)
+        if respawn and faults is None:
+            raise ValueError(
+                "respawn=True has no effect without faults=; pass a "
+                "pod_kill FaultPlan to arm pod respawn")
         # coordinator-side bundle: pods run private replicas (same arm
         # flags), whose picklable states fold into this one at _fold time
         self._obs = None
@@ -413,56 +580,96 @@ class ShardedTrafficSimulator:
         epochs = self._epochs(len(jobs))
         pods = [self._make_pod(pi, base, count, jobs)
                 for pi, (base, count) in enumerate(self._pod_spans())]
+        self._ledger = _EpochLedger(self.n_shards)
+        # pod index -> pre-death carry spliced into the fold (set only
+        # when a respawn actually fired; empty = unchanged result shape)
+        self._respawned: dict[int, dict] = {}
         use_fork = self.parallel and self.n_shards > 1 and \
             "fork" in multiprocessing.get_all_start_methods()
         if use_fork:
-            folds = self._run_forked(pods, epochs)
+            folds = self._run_forked(pods, epochs, jobs)
         else:
-            folds = self._run_serial(pods, epochs)
+            folds = self._run_serial(pods, epochs, jobs)
         return self._fold(jobs, folds)
 
-    def _run_serial(self, pods, epochs) -> list[dict]:
+    def _run_serial(self, pods, epochs, jobs) -> list[dict]:
+        ledger = self._ledger
         snapshot = [0] * self.n_arrays
         for ei, (lo, hi) in enumerate(epochs):
+            ledger.history.append((lo, hi, list(snapshot)))
             nxt: list[int] = []
             for pi, pod in enumerate(pods):
                 if ei == pod.kill_at_epoch:
-                    # same failure surface as the forked path: the epoch
-                    # sync cannot complete once a pod is gone
-                    raise RuntimeError(
-                        f"sharded pod {pi} died at epoch {ei} "
-                        f"(pod_kill fault)")
-                nxt.extend(pod.run_epoch(lo, hi, snapshot))
+                    if not self.respawn:
+                        # same failure surface as the forked path: the
+                        # epoch sync cannot complete once a pod is gone
+                        raise self._pod_failure(
+                            f"sharded pod {pi} died at epoch {ei} "
+                            f"(pod_kill fault)", pi, ei)
+                    pods[pi] = pod = self._respawn_pod(
+                        pi, ei, jobs, floor=jobs[lo].arrival)
+                msg = pod.run_epoch(lo, hi, snapshot)
+                ledger.note(pi, msg)
+                nxt.extend(msg["loads"])
             snapshot = nxt
         return [pod.finish() for pod in pods]
 
-    def _run_forked(self, pods, epochs) -> list[dict]:
+    def _run_forked(self, pods, epochs, jobs) -> list[dict]:
         ctx = multiprocessing.get_context("fork")
+        ledger = self._ledger
         conns, procs = [], []
+
+        def spawn(pod, eps):
+            parent, child = ctx.Pipe()
+            p = ctx.Process(target=_pod_worker,
+                            args=(pod, eps, child), daemon=True)
+            p.start()
+            child.close()   # parent keeps its end only
+            return parent, p
+
         try:
             for pod in pods:
-                parent, child = ctx.Pipe()
-                p = ctx.Process(target=_pod_worker,
-                                args=(pod, epochs, child), daemon=True)
-                p.start()
-                child.close()   # parent keeps its end only
-                conns.append(parent)
+                conn, p = spawn(pod, epochs)
+                conns.append(conn)
                 procs.append(p)
             snapshot = [0] * self.n_arrays
-            for _lo, _hi in epochs:
+            for ei, (lo, hi) in enumerate(epochs):
+                ledger.history.append((lo, hi, list(snapshot)))
                 for pi, conn in enumerate(conns):
                     try:
                         conn.send(snapshot)
                     except BrokenPipeError:
-                        raise RuntimeError(
+                        raise self._pod_failure(
                             f"sharded pod {pi} (pid {procs[pi].pid}) died "
-                            f"mid-epoch: snapshot pipe is broken"
-                        ) from None
+                            f"mid-epoch: snapshot pipe is broken",
+                            pi, ei) from None
                 nxt: list[int] = []
-                for pi, conn in enumerate(conns):
-                    nxt.extend(self._recv(conn, procs[pi], pi))
+                for pi in range(len(conns)):
+                    try:
+                        msg = self._recv(conns[pi], procs[pi], pi, ei)
+                    except PodFailureError:
+                        if not self.respawn:
+                            raise
+                        # the pod died at (or timed out across) this
+                        # epoch boundary: discard the corpse, rebuild the
+                        # pod from ledger state in-process, and hand the
+                        # replacement to a fresh worker that replays this
+                        # epoch on the same snapshot
+                        if procs[pi].is_alive():
+                            procs[pi].terminate()
+                        procs[pi].join(timeout=30.0)
+                        conns[pi].close()
+                        pod = self._respawn_pod(
+                            pi, ei, jobs, floor=jobs[lo].arrival)
+                        conns[pi], procs[pi] = spawn(pod, epochs[ei:])
+                        conns[pi].send(snapshot)
+                        msg = self._recv(conns[pi], procs[pi], pi, ei)
+                    ledger.note(pi, msg)
+                    nxt.extend(msg["loads"])
                 snapshot = nxt
-            return [self._recv(conn, procs[pi], pi)
+            # the final fold: a death here (during finish) is past the
+            # last boundary — nothing left to respawn for, so it raises
+            return [self._recv(conn, procs[pi], pi, len(epochs))
                     for pi, conn in enumerate(conns)]
         finally:
             for conn in conns:
@@ -472,34 +679,98 @@ class ShardedTrafficSimulator:
                 if p.is_alive():
                     p.terminate()
 
-    def _recv(self, conn, proc, pod_index: int):
+    def _recv(self, conn, proc, pod_index: int, epoch: int):
         """Receive one pod message without hanging the sync: poll with a
         deadline, and turn a dead worker (EOF / exited process with no
-        buffered reply) into a RuntimeError naming the pod."""
+        buffered reply) into a :class:`PodFailureError` naming the pod.
+        A worker that *reported* an exception (``__error__``) stays a
+        plain RuntimeError — its pod state is not a clean boundary, so
+        it is never respawned."""
         deadline = time.monotonic() + self.pod_timeout_s
         while not conn.poll(0.05):
             if not proc.is_alive() and not conn.poll(0):
-                raise RuntimeError(
+                raise self._pod_failure(
                     f"sharded pod {pod_index} (pid {proc.pid}) died "
-                    f"mid-epoch with exit code {proc.exitcode}")
+                    f"mid-epoch with exit code {proc.exitcode}",
+                    pod_index, epoch)
             if time.monotonic() >= deadline:
-                raise RuntimeError(
+                raise self._pod_failure(
                     f"sharded pod {pod_index} (pid {proc.pid}) sent no "
                     f"reply within {self.pod_timeout_s:g}s; aborting the "
-                    f"epoch sync")
+                    f"epoch sync", pod_index, epoch)
         try:
             msg = conn.recv()
         except EOFError:
-            raise RuntimeError(
+            raise self._pod_failure(
                 f"sharded pod {pod_index} (pid {proc.pid}) died "
-                f"mid-epoch with exit code {proc.exitcode}") from None
+                f"mid-epoch with exit code {proc.exitcode}",
+                pod_index, epoch) from None
         if isinstance(msg, tuple) and len(msg) == 2 \
                 and msg[0] == "__error__":
             raise RuntimeError(
                 f"sharded pod {pod_index} failed: {msg[1]}")
         return msg
 
+    # -- failure surface ----------------------------------------------------
+    def _pod_failure(self, message: str, pod: int,
+                     epoch: int) -> PodFailureError:
+        """Build the partial-payload error from the epoch ledger."""
+        led = self._ledger
+        indexed = sorted((pair for recs in led.records for pair in recs),
+                         key=lambda p: p[0])
+        records = tuple(r for _idx, r in indexed)
+        status = {
+            pi: {"state": "dead" if pi == pod else "ok",
+                 "epochs_done": led.epochs_done[pi]}
+            for pi in range(self.n_shards)}
+        return PodFailureError(
+            message, pod=pod, epoch=epoch,
+            jobs_completed=sum(1 for r in records
+                               if r.completed is not None),
+            pod_status=status, partial_records=records)
+
+    def _respawn_pod(self, pi: int, ei: int, jobs, *, floor: float):
+        """Rebuild pod ``pi`` from the last epoch-boundary state.
+
+        The replacement is constructed exactly like the original (so its
+        schedulers, dispatcher replica and rng start from the same
+        seeds), fast-forwarded over the dead pod's completed epochs, and
+        handed the lost in-flight jobs through the retry path.  The
+        pre-death finalized records / depth slices / boundary busy are
+        frozen here and spliced back in at fold time — work the dead pod
+        durably reported is never re-run."""
+        led = self._ledger
+        base, count = self._pod_spans()[pi]
+        pod = self._make_pod(pi, base, count, jobs)
+        pod.kill_at_epoch = None   # the plan fires once per pod
+        owned = pod.fast_forward(led.history[:ei])
+        done = led.final_idx[pi]
+        lost = [idx for idx in owned if idx not in done]
+        pod.inject_lost(lost, floor,
+                        f"respawn:{self.seed}:{pi}:{ei}")
+        self._respawned[pi] = {
+            "records": list(led.records[pi]),
+            "depth": list(led.depth[pi]),
+            "busy": list(led.busy[pi] or [0.0] * count),
+            "preemptions": led.preemptions[pi],
+            "epoch": ei,
+            "lost": len(lost),
+        }
+        return pod
+
     def _fold(self, jobs, folds: list[dict]) -> ServeResult:
+        # splice each respawned pod's pre-death carry (the ledger's
+        # durable view) in front of the replacement's fresh fold so the
+        # merged result covers every owned job exactly once: finalized
+        # pre-death via the carry, lost in-flight via the retry
+        # injection, post-respawn via the replacement's own loop
+        for pi, carry in self._respawned.items():
+            f = folds[pi]
+            f["records"] = carry["records"] + f["records"]
+            f["depth_samples"] = carry["depth"] + f["depth_samples"]
+            f["pe_busy"] = [c + b for c, b in
+                            zip(carry["busy"], f["pe_busy"])]
+            f["preemptions"] += carry["preemptions"]
         indexed = sorted((pair for f in folds for pair in f["records"]),
                          key=lambda p: p[0])
         records = tuple(r for _idx, r in indexed)
@@ -540,7 +811,11 @@ class ShardedTrafficSimulator:
             records=records, metrics=metrics,
             preemption=(type(self.preemption).__name__
                         if self.preemption is not None else None),
-            fairness=fairness, timeline=timeline)
+            fairness=fairness, timeline=timeline,
+            # set ONLY when a respawn actually fired: an armed-but-
+            # unfired plan must stay byte-identical to a fault-free run
+            faults=self._plan_name if self._respawned else None,
+            recovery="pod_respawn" if self._respawned else None)
 
     def _fairness_report(self, jobs, records):
         """Coordinator-side fairness fold: per-tenant slowdowns from the

@@ -71,6 +71,13 @@ class ServeResult:
     # ContentionModel) when the run armed memory=; None = off — the
     # stall/pressure numbers live in the gated metrics fields
     memory: Optional[str] = None
+    # overload-control descriptor ("admission=<name>", "brownout", or
+    # both joined with "+") when the run armed repro.overload knobs;
+    # None = off — shed counts live in the gated metrics fields
+    overload: Optional[str] = None
+    # BrownoutReport (stage ladder + transition log) when brownout was
+    # armed; carried on the result object, not serialized
+    brownout: Optional[object] = None
 
     def per(self, key: str) -> dict:
         """Split metrics by ``"model"``, ``"tier"`` or ``"array"`` — the
@@ -117,6 +124,8 @@ class ServeResult:
             out["recovery"] = self.recovery
         if self.memory is not None:
             out["memory"] = self.memory
+        if self.overload is not None:
+            out["overload"] = self.overload
         if self.timeline is not None:
             out["obs"] = self.timeline.summary()
         return out
@@ -131,6 +140,18 @@ class MemoryStats:
     stall_s: float                 # total extra bus-busy seconds
     stall_by_node: dict            # node index -> stall seconds
     peak_pressure: float           # max per-window demand / capacity
+
+
+@dataclasses.dataclass(frozen=True)
+class OverloadStats:
+    """Overload-control accounting of one armed run — the duck-typed
+    ``overload=`` payload :func:`repro.traffic.metrics.summarize` folds
+    into the gated overload metrics fields."""
+
+    rejections_by_cause: dict      # cause name -> count
+    shed_by_tier: dict             # tier -> non-admitted count
+    brownout_transitions: int
+    brownout_energy_j: float
 
 
 class _RecordBuilder:
@@ -256,6 +277,20 @@ class TrafficSimulator:
       assignment round.  Off (default) keeps every record byte-identical
       to pre-contention runs; armed runs append the gated ``memory_*``
       metrics keys after the chaos gates.
+    * ``admission`` / ``brownout`` — closed-loop overload control
+      (`repro.overload`).  ``admission`` names an
+      :class:`~repro.overload.AdmissionPolicy` (``"static"``,
+      ``"codel"``, ``"token_bucket"``) or passes an instance: a
+      per-arrival admit/shed decision in front of the dispatcher,
+      reading the fleet's best-case queue-delay estimate; no registered
+      policy ever sheds tier 0.  ``brownout`` is ``True`` (default
+      :class:`~repro.overload.BrownoutController`) or a controller: the
+      degrade-before-drop ladder that tightens batch bandwidth caps,
+      shrinks batch column floors and stretches batch deadlines before
+      shedding, with each stage transition a ``brownout`` tracer
+      instant priced in energy.  Off (default) keeps every record
+      byte-identical to pre-overload runs; armed runs append the gated
+      overload metrics keys after the memory gates.
 
     All knobs may instead be passed as one
     :class:`repro.api.ServeConfig` (``config=``) — the grouped-by-
@@ -294,6 +329,8 @@ class TrafficSimulator:
         recovery = cfg.chaos.recovery
         monitor = cfg.chaos.monitor
         memory = cfg.memory.contention
+        admission = cfg.overload.admission
+        brownout = cfg.overload.brownout
         if n_arrays < 1:
             raise ValueError(f"n_arrays must be >= 1, got {n_arrays}")
         if rebalance_interval is not None and rebalance_interval <= 0:
@@ -421,6 +458,30 @@ class TrafficSimulator:
             raise ValueError(
                 "recovery=/monitor= have no effect without faults=; pass "
                 "a FaultPlan to arm fault injection")
+        # overload control (repro.overload): admission policy in front of
+        # the dispatcher + brownout stage ladder over the fleet.  Both
+        # default off; armed runs append the gated overload metrics keys
+        # after the memory gates.
+        self.admission = None
+        self.brownout = None
+        if admission is not None or brownout:
+            # local import: repro.traffic stays importable without
+            # repro.overload until a knob is actually armed
+            from repro.overload import BrownoutController, resolve_admission
+            if admission is not None:
+                self.admission = resolve_admission(admission)
+            if brownout:
+                self.brownout = (brownout
+                                 if isinstance(brownout, BrownoutController)
+                                 else BrownoutController())
+        self._overload_armed = (self.admission is not None
+                                or self.brownout is not None)
+        self._overload_causes = None
+        self._shed_by_tier = None
+        if self._overload_armed:
+            self._overload_causes = {"queue_full": 0, "admission_shed": 0,
+                                     "recovery_shed": 0}
+            self._shed_by_tier = {}
         self.accounting = None
         if fairness:
             # local import: repro.traffic stays importable without
@@ -504,6 +565,33 @@ class TrafficSimulator:
                     return
                 chaos.advance_to(ft, self._advance)
 
+    def _apply_brownout_stage(self) -> None:
+        """Push the active brownout stage onto the fleet.
+
+        Batch demand scale lands on every scheduler (the setter is a
+        no-op at an unchanged factor); bandwidth caps land only on
+        schedulers whose policy has no ``bandwidth`` hook of its own —
+        a policy with one (``moca``) keeps authority over its caps (see
+        :meth:`repro.api.policy.PartitionPolicy.bandwidth`).  Called on
+        every stage transition, and re-called per admitted arrival while
+        a capping stage is active because the tenant set the caps are
+        keyed on churns with every submit/complete."""
+        s = self.brownout.stage
+        cap = s.batch_bw_cap if s is not None else None
+        scale = s.batch_demand_scale if s is not None else 1.0
+        for node in self.nodes:
+            node.set_batch_demand_scale(scale)
+            sched = node.scheduler
+            if sched._has_bandwidth_hook:
+                continue
+            if cap is None:
+                if sched.bus.caps:
+                    sched.bus.set_caps(None)
+            else:
+                sched.bus.set_caps(
+                    {name: cap for name, tier in sched.tiers.items()
+                     if tier > 0})
+
     def _advance(self, t: float) -> None:
         for node in self.nodes:
             sched = node.scheduler
@@ -523,6 +611,10 @@ class TrafficSimulator:
         registry = self._registry
         tracer = self._tracer
         chaos = self.chaos
+        admission = self.admission
+        brown = self.brownout
+        causes = self._overload_causes       # None = overload disarmed
+        shed_tiers = self._shed_by_tier
         node_pes = self.backend.array.rows * self.backend.array.cols
         oracle0 = _host_oracle_calls() if registry is not None else 0
         if registry is not None:
@@ -550,6 +642,29 @@ class TrafficSimulator:
                 chaos.advance_to(job.arrival, self._advance)
             self._advance(job.arrival)
             name = job.dnng.name
+            if causes is not None:
+                # overload control: one fleet queue-delay sample per
+                # arrival (best case — the least-loaded node's estimate)
+                # feeds both the brownout feedback loop and the
+                # admission policy
+                delay = min(n.wait_estimate() for n in self.nodes)
+                if brown is not None:
+                    hf = (chaos.healthy_capacity_frac()
+                          if chaos is not None else 1.0)
+                    if brown.observe(job.arrival, delay, hf):
+                        self._apply_brownout_stage()
+                        if tracer is not None:
+                            t0, frm, to = brown.log[-1]
+                            tracer.instant("brownout", t0, -1, None,
+                                           (("from", frm), ("to", to)))
+                    if name not in self._builders:
+                        # stretch only fresh batch arrivals — a chaos
+                        # retry keeps the deadline its first admission
+                        # stamped (no compounding)
+                        nd = brown.stretch_deadline(job.tier, job.arrival,
+                                                    job.deadline)
+                        if nd != job.deadline:
+                            job = dataclasses.replace(job, deadline=nd)
             b = self._builders.get(name)
             if b is None:
                 b = _RecordBuilder(job)
@@ -557,7 +672,15 @@ class TrafficSimulator:
             elif chaos is None or not chaos.is_retry(name):
                 raise ValueError(f"duplicate job name {name!r} in "
                                  "arrival stream")
-            if chaos is None:
+            admitted = True
+            if brown is not None and brown.shed(job.tier):
+                admitted = False
+            if admitted and admission is not None and not admission.admit(
+                    job.tier, job.arrival, delay):
+                admitted = False
+            if not admitted:
+                target, status = None, "shed"
+            elif chaos is None:
                 target = self.nodes[
                     self.dispatcher.choose_tracked(self.fleet, self._rng)]
                 status = target.offer(job)
@@ -568,6 +691,28 @@ class TrafficSimulator:
                     job, self.nodes, self.dispatcher, self.fleet, self._rng)
                 if target is not None and status in ("run", "queued"):
                     b.array = target.index
+            if causes is not None:
+                if status in ("rejected", "shed"):
+                    # "lost" stays out: the job was admitted and routed —
+                    # losing it mid-run is chaos accounting, not a
+                    # rejection cause
+                    if not admitted:
+                        causes["admission_shed"] += 1
+                    elif status == "rejected":
+                        causes["queue_full"] += 1
+                    else:
+                        causes["recovery_shed"] += 1
+                    if status == "shed":
+                        # per-tier split counts deliberate sheds only —
+                        # queue_full is the tier-blind structural path,
+                        # already visible in rejections_by_cause
+                        shed_tiers[job.tier] = \
+                            shed_tiers.get(job.tier, 0) + 1
+                elif (brown is not None and brown.stage is not None
+                        and brown.stage.batch_bw_cap is not None):
+                    # a new tenant just entered under an active capping
+                    # stage: refresh the name-keyed caps
+                    self._apply_brownout_stage()
             if tracer is not None:
                 # the tracer's entire per-arrival cost: the dispatch
                 # choice is parked on the builder and derived into
@@ -644,6 +789,24 @@ class TrafficSimulator:
                 stall_s=sum(n.bus_stall_s for n in self.nodes),
                 stall_by_node={n.index: n.bus_stall_s for n in self.nodes},
                 peak_pressure=self._shared_bw.peak_pressure)
+        overload_stats = None
+        overload_descr = None
+        if self._overload_armed:
+            overload_stats = OverloadStats(
+                rejections_by_cause=dict(self._overload_causes),
+                shed_by_tier=dict(self._shed_by_tier),
+                brownout_transitions=(brown.transitions
+                                      if brown is not None else 0),
+                brownout_energy_j=(brown.energy_overhead_j
+                                   if brown is not None else 0.0))
+            parts = []
+            if admission is not None:
+                parts.append("admission=" + (
+                    getattr(admission, "name", "")
+                    or type(admission).__name__))
+            if brown is not None:
+                parts.append("brownout")
+            overload_descr = "+".join(parts)
         metrics = summarize(
             records, duration_s=end,
             pe_seconds_busy=sum(n.pe_seconds_busy for n in self.nodes),
@@ -652,7 +815,8 @@ class TrafficSimulator:
             preemptions=sum(n.scheduler.n_preemptions for n in self.nodes),
             migrations=(self.rebalancer.n_migrations
                         if self.rebalancer is not None else 0),
-            fairness=fairness, chaos=chaos, memory=memory_stats)
+            fairness=fairness, chaos=chaos, memory=memory_stats,
+            overload=overload_stats)
         timeline = None
         if self._obs is not None:
             if tracer is not None:
@@ -706,7 +870,9 @@ class TrafficSimulator:
             recovery=chaos.recovery.name if chaos is not None else None,
             chaos=chaos.report() if chaos is not None else None,
             memory=(repr(self.contention)
-                    if self.contention is not None else None))
+                    if self.contention is not None else None),
+            overload=overload_descr,
+            brownout=(brown.report() if brown is not None else None))
 
 
 def serve(arrivals, policy="equal", backend="sim", config=None,

@@ -47,6 +47,15 @@ CHAOS_RESULT_KEYS = ["faults", "recovery"]
 MEMORY_METRICS_KEYS = ["memory_stall_s", "memory_stall_by_node",
                        "memory_peak_pressure"]
 MEMORY_RESULT_KEYS = ["memory"]
+# gated overload keys (appear ONLY when the run armed admission=/brownout=,
+# AFTER the memory gates; the ServeResult-level "overload" descriptor
+# follows "memory", and the obs digest stays last)
+OVERLOAD_METRICS_KEYS = ["rejections_by_cause", "shed_by_tier",
+                         "brownout_transitions", "brownout_energy_j"]
+OVERLOAD_RESULT_KEYS = ["overload"]
+# fixed serialization order inside rejections_by_cause (a dict key-order
+# change there is a record-format change too)
+REJECTION_CAUSES = ["queue_full", "admission_shed", "recovery_shed"]
 
 
 def _small_run(**kwargs):
@@ -173,6 +182,39 @@ class TestAsDictKeyOrder:
         assert list(res.as_dict()) == (
             SERVE_PREFIX_KEYS + METRICS_KEYS
             + MEMORY_METRICS_KEYS + MEMORY_RESULT_KEYS)
+
+    def test_overload_keys_absent_when_unarmed(self):
+        res = _small_run()
+        got = set(res.as_dict())
+        assert not got & set(OVERLOAD_METRICS_KEYS + OVERLOAD_RESULT_KEYS)
+
+    def test_overload_alone_appends_after_stable_base(self):
+        res = _small_run(admission="static")
+        d = res.as_dict()
+        assert list(d) == (SERVE_PREFIX_KEYS + METRICS_KEYS
+                           + OVERLOAD_METRICS_KEYS + OVERLOAD_RESULT_KEYS)
+        assert list(d["rejections_by_cause"]) == REJECTION_CAUSES
+
+    def test_overload_keys_append_after_memory_gates(self):
+        from repro.chaos import FaultPlan
+        res = _small_run(fairness=True, obs=True, memory=True,
+                         faults=FaultPlan.single("crash", t=0.005, node=0),
+                         admission="static", brownout=True)
+        assert list(res.as_dict()) == (
+            SERVE_PREFIX_KEYS + METRICS_KEYS
+            + FAIRNESS_SLOWDOWN_KEYS + FAIRNESS_SHARE_KEYS
+            + CHAOS_METRICS_KEYS + MEMORY_METRICS_KEYS
+            + OVERLOAD_METRICS_KEYS
+            + CHAOS_RESULT_KEYS + MEMORY_RESULT_KEYS
+            + OVERLOAD_RESULT_KEYS + ["obs"])
+
+    def test_static_admission_does_not_perturb_base_metrics(self):
+        # "static" is the pre-overload behavior as a named arm: every
+        # pre-existing key keeps the identical serialized value
+        plain = _small_run().as_dict()
+        armed = _small_run(admission="static").as_dict()
+        assert json.dumps({k: armed[k] for k in plain}) == \
+            json.dumps(plain)
 
     def test_metrics_counters_stay_out_of_as_dict(self):
         m = TrafficMetrics(
